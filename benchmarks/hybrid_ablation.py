@@ -1,0 +1,39 @@
+"""Paper Fig. 14: hybrid parallelism ablation, P in {2,4,8} on 8 devices.
+
+Per model: modelled samples/s (Eq. 15-17) and p2p MB/sample for each P.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.comm_model import partition_comm_volume
+from repro.core.hw import V100_CLUSTER
+from repro.core.partition import partition
+from repro.core.tuner import profile_partition, t_sched_paper
+from benchmarks.partition_balance import MODELS
+
+N = 8
+
+
+def run() -> list[str]:
+    rows = []
+    for name, make in MODELS.items():
+        g = make()
+        for P in (2, 4, 8):
+            G = N // P
+            try:
+                part = partition(g, P)
+            except ValueError:
+                continue
+            prof = profile_partition(g, part)
+            b = 8
+            t = t_sched_paper(prof, P, b, G, V100_CLUSTER)
+            sps = b * P * G / t
+            vol = partition_comm_volume(g, part).train_total / (b * P) / 1e6
+            rows.append(f"hybrid.{name}.P{P}G{G}.samples_per_s,"
+                        f"{sps:.1f},p2p={vol:.2f}MB/sample")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,277 @@
+"""Roofline analysis per (arch x shape x mesh) from the dry-run artefacts.
+
+Three terms per cell (seconds/step on TPU v5e constants):
+
+    compute    = FLOPs_per_chip / 197 TFLOP/s
+    memory     = HBM_bytes_per_chip / 819 GB/s
+    collective = collective_bytes_per_chip / link_bw (ICI 50 GB/s,
+                 DCN 25 GB/s for 'pod'-crossing collectives)
+
+Methodology (documented in EXPERIMENTS.md §Roofline): XLA's
+``cost_analysis()`` counts ``lax.scan`` bodies ONCE (verified empirically),
+so raw compiled numbers undercount by the trip counts of the layer/tick
+scans.  We therefore *reconstruct* per-step totals analytically from the
+config + parallel plan (formulas below), and use the compiled HLO for what
+it is authoritative about: compile success, per-device peak memory, the
+collective *schedule* (op kinds/counts), and per-body byte cross-checks.
+
+FLOP conventions:
+    dense fwd          = 2 * N_active * tokens
+    train              = 3x fwd (+1x fwd re-compute under remat)
+    attention fwd      = 4 * B * S^2 * d_attn per layer  (dense-masked)
+    decode attn        = 4 * B * S * d_attn per layer (one query token)
+    MODEL_FLOPS        = 6 * N_active * tokens  (assignment convention)
+
+HBM-traffic conventions (per chip):
+    params  : train  (2 fwd reads + 1 bwd read) * bf16 + optimizer
+              (fp32 m,v read+write = 16 B; int8 = 4 B) + param write
+    acts    : ~18 bytes/token/layer/d_model equivalent reads+writes
+              (remat-adjusted), activations in bf16.
+
+Collective conventions (per chip, ring algorithms):
+    FSDP    : 3 gathers + 1 reduce-scatter of the chip's param group
+    TP      : 4 all-reduces/layer of (tokens_chip * d) bf16 (Megatron)
+    EP      : 2 all-to-alls/MoE-layer fwd (x3 for train) of the chip's
+              dispatched token slice
+    PP      : 2(D-1)/D boundary hops/microbatch each way, fwd + bwd
+    DP      : one grad all-reduce (2(G-1)/G) of the chip's grads
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import get_arch, ASSIGNED, PAPER_ARCHS
+from repro.configs.base import SHAPES
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+DCN = 25e9
+CHIPS = {"16x16": 256, "2x16x16": 512}
+AXES = {"16x16": {"data": 16, "model": 16},
+        "2x16x16": {"pod": 2, "data": 16, "model": 16}}
+
+
+def _plan_axes(plan, axes):
+    tp = axes.get("model", 1) if plan.get("tp") else 1
+    fsdp = 1
+    for a in plan.get("fsdp", []):
+        fsdp *= axes.get(a, 1)
+    dp = 1
+    for a in plan.get("batch_axes", []):
+        dp *= axes.get(a, 1)
+    return tp, fsdp, max(dp, 1)
+
+
+def _family_attn_dim(cfg) -> tuple[int, int]:
+    """(layers_with_attn, d_attn = Hq*Dh per layer)."""
+    if hasattr(cfg, "mla") and cfg.mla is not None:
+        m = cfg.mla
+        return cfg.n_layers, m.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+    if hasattr(cfg, "attn") and cfg.attn is not None:
+        return cfg.n_layers, cfg.attn.n_heads * cfg.attn.head_dim
+    if hasattr(cfg, "shared_attn"):        # zamba2: attn only at shared sites
+        return len(cfg.shared_sites()), \
+            cfg.shared_attn.n_heads * cfg.shared_attn.head_dim
+    if hasattr(cfg, "n_enc_layers"):       # whisper
+        return cfg.n_enc_layers + 2 * cfg.n_dec_layers, cfg.d_model
+    if hasattr(cfg, "slstm_every"):        # xlstm quadratic mLSTM form
+        return cfg.n_layers, cfg.d_inner
+    if hasattr(cfg, "ch_mults"):           # SDv2 UNet: attn at 3 levels
+        n_attn = sum(cfg.blocks_per_level * 2 for lvl in cfg.attn_levels) + 1
+        return n_attn, cfg.base_ch * max(cfg.ch_mults)
+    if hasattr(cfg, "n_layers") and hasattr(cfg, "n_heads"):  # uvit/hunyuan
+        return cfg.n_layers, cfg.d_model
+    return 0, 0
+
+
+def _attn_window(cfg, S):
+    if hasattr(cfg, "attn") and cfg.attn is not None and cfg.attn.window:
+        return min(cfg.attn.window, S)
+    return S
+
+
+def cell_roofline(arch: str, shape_name: str, mesh_key: str, rec: dict) -> dict:
+    bundle = get_arch(arch)
+    cfg = bundle.cfg
+    shape = SHAPES[shape_name]
+    axes = AXES[mesh_key]
+    chips = CHIPS[mesh_key]
+    plan = rec["plan"]
+    tp, fsdp, dp = _plan_axes(plan, axes)
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    N_act = bundle.active_param_count
+    N_tot = bundle.param_count
+    p_bytes_tot = N_tot * 2                      # bf16
+    int8 = plan.get("int8_opt", False)
+    is_pp = plan["strategy"].startswith("pp")
+
+    tokens = B * S if kind in ("train", "prefill") else B
+    L_attn, d_attn = _family_attn_dim(cfg)
+    ctx = _attn_window(cfg, S) if kind != "decode" else min(S, 10**9)
+
+    # ---------------- FLOPs ----------------
+    dense_fwd = 2.0 * N_act * tokens
+    if kind == "decode":
+        attn_fwd = 4.0 * B * ctx * d_attn * L_attn
+    else:
+        attn_fwd = 4.0 * B * S * ctx * d_attn * L_attn
+    fwd = dense_fwd + attn_fwd
+    if kind == "train":
+        # remat_recompute_factor: 1.0 = full per-layer remat (recompute the
+        # whole fwd); ~0.1 under checkpoint_dots (matmul outputs saved).
+        rf = rec.get("remat_recompute_factor", 1.0)
+        flops_total = (3.0 + rf) * fwd
+    else:
+        flops_total = fwd
+    model_flops = 6.0 * N_act * tokens if kind == "train" \
+        else 2.0 * N_act * tokens
+    f_chip = flops_total / chips
+
+    # ---------------- HBM bytes ----------------
+    p_chip = p_bytes_tot / (tp * fsdp) if not is_pp \
+        else p_bytes_tot / (axes["model"] * 1)
+    opt_bytes = (4 if int8 else 16 + 16)         # m,v r+w per param
+    if kind == "train":
+        par_traffic = p_chip * (3 + 1) + (N_tot / (tp * fsdp)) * opt_bytes
+    else:
+        par_traffic = p_chip
+    d_model = getattr(cfg, "d_model", getattr(cfg, "base_ch", 512) * 4)
+    L = getattr(cfg, "n_layers", L_attn) or L_attn
+    tok_chip = tokens / (dp if not is_pp else dp)
+    act_traffic = 18.0 * tok_chip * L * d_model * 2 / (tp if not is_pp else 1)
+    if kind == "decode":
+        # decode reads the whole KV cache once per step
+        cache = rec.get("cache_bytes", 0) or _decode_cache_bytes(bundle, shape)
+        act_traffic += cache / chips
+    b_chip = par_traffic + act_traffic
+
+    # ---------------- collective bytes ----------------
+    coll_ici = 0.0
+    coll_dcn = 0.0
+    grads_chip = p_bytes_tot / (tp * fsdp) if kind == "train" else 0.0
+    if is_pp:
+        D = axes["model"]
+        M = plan.get("microbatches", 16)
+        payload = (tokens / dp / max(M, 1)) * d_model * 2   # per microbatch
+        hops = 2 * (D - 1) / D * M * payload
+        coll_ici += hops * (4 if plan["strategy"] == "pp_wave" else 2)
+        if kind == "train":
+            coll_ici += 2 * grads_chip * (dp - 1) / dp      # DP allreduce
+    else:
+        if fsdp > 1:
+            gathers = 3 if kind == "train" else 1
+            coll_ici += gathers * p_chip * (fsdp - 1)
+            if kind == "train":
+                coll_ici += p_chip * (fsdp - 1)             # reduce-scatter
+        if tp > 1:
+            tok_tp = tokens / dp
+            ar = 2 * (tp - 1) / tp * tok_tp * d_model * 2
+            passes = 3 if kind == "train" else 1
+            sp = 0.5 if rec.get("sp_halves_tp") else 1.0
+            coll_ici += 4 * L * ar * passes * sp
+        if plan.get("ep"):
+            moe = getattr(cfg, "moe", None)
+            if moe:
+                tok_tp = tokens / dp
+                a2a = 2 * tok_tp * moe.top_k * d_model * 2 / tp
+                coll_ici += a2a * (3 if kind == "train" else 1) * \
+                    (cfg.n_layers - getattr(cfg, "n_dense_layers", 0))
+        if kind == "train" and dp > 1:
+            coll_ici += 2 * grads_chip * (dp - 1) / dp
+    if "pod" in axes and kind == "train":
+        # the pod axis carries DP/FSDP traffic over DCN
+        coll_dcn += 2 * grads_chip * 0.5
+
+    t_compute = f_chip / PEAK
+    t_memory = b_chip / HBM
+    t_coll = coll_ici / ICI + coll_dcn / DCN
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_key,
+        "strategy": plan["strategy"] + ("/ep" if plan.get("ep") else "")
+        + (f"/tp{tp}" if tp > 1 else "") + (f"/fsdp{fsdp}" if fsdp > 1 else ""),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dominant[0],
+        "roofline_frac": t_compute / max(t_compute, t_memory, t_coll),
+        "model_flops": model_flops,
+        "hlo_flops_reconstructed": flops_total,
+        "useful_ratio": model_flops / flops_total,
+        "hlo_flops_raw_body": rec.get("cost", {}).get("flops", 0.0),
+        "mem_per_chip_GB": (rec.get("memory", {}).get("temp_size_in_bytes")
+                            or 0) / chips / 2**30,
+        "collectives_hlo": rec.get("collectives", {}).get("bytes_by_kind", {}),
+    }
+
+
+def _decode_cache_bytes(bundle, shape) -> float:
+    try:
+        import jax
+        struct = bundle.cache_struct(shape)
+        return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(struct))
+    except Exception:
+        return 0.0
+
+
+def analyze(path: str, mesh_key: str) -> list[dict]:
+    with open(path) as f:
+        data = json.load(f)
+    out = []
+    for key, rec in data.items():
+        if rec.get("status") != "ok":
+            continue
+        arch, shape = key.split("|")
+        out.append(cell_roofline(arch, shape, mesh_key, rec))
+    return out
+
+
+def _advice(row) -> str:
+    b = row["bottleneck"]
+    if b == "collective":
+        return ("shard params less aggressively / overlap gathers with "
+                "compute; for PP raise microbatch size to amortize hops")
+    if b == "memory":
+        return "raise arithmetic intensity: larger microbatch or fused kernels"
+    return "compute-bound: good; chase useful-ratio toward 1.0"
+
+
+def run() -> list[str]:
+    rows = []
+    for mesh_key, fname in (("16x16", "results/dryrun_16x16.json"),
+                            ("2x16x16", "results/dryrun_2x16x16.json")):
+        if not os.path.exists(fname):
+            continue
+        for r in analyze(fname, mesh_key):
+            t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+            rows.append(
+                f"roofline.{r['arch']}.{r['shape']}.{mesh_key},"
+                f"{t*1e6:.0f},"
+                f"bottleneck={r['bottleneck']} "
+                f"frac={r['roofline_frac']:.2f} "
+                f"useful={r['useful_ratio']:.2f}")
+    return rows
+
+
+def markdown_table(path: str, mesh_key: str) -> str:
+    rows = analyze(path, mesh_key)
+    lines = [
+        "| arch | shape | strategy | compute s | memory s | collective s "
+        "| bottleneck | roofline frac | useful ratio | mem/chip GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['strategy']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['bottleneck']}** "
+            f"| {r['roofline_frac']:.2f} | {r['useful_ratio']:.2f} "
+            f"| {r['mem_per_chip_GB']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

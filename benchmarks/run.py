@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (stub contract).  Heavy subprocess
+benchmarks (pipeline_cpu) and the dry-run-dependent roofline are included
+when available / unless --fast.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip subprocess + ILP benchmarks")
+    args = ap.parse_args()
+
+    from benchmarks import (partition_balance, comm_volume, hybrid_ablation,
+                            throughput_model, zero_breakdown, moe_dispatch)
+    modules = [partition_balance, comm_volume, hybrid_ablation,
+               throughput_model, zero_breakdown, moe_dispatch]
+    if not args.fast:
+        from benchmarks import schedule_synthesis, pipeline_cpu
+        modules += [schedule_synthesis, pipeline_cpu]
+    try:
+        from benchmarks import roofline
+        modules.append(roofline)
+    except Exception:
+        pass
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in modules:
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{mod.__name__}.ERROR,0,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Figs. 8 & 9: schedule synthesis (ILP at small scale + templates).
+
+Reports makespans and bubble ratios; the ILP is solved at the paper's small
+configuration (4 devices) and must match the replicated template.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.schedule import (template_1f1b, template_wave, ilp_schedule,
+                                 validate_schedule, simulate)
+
+
+def run() -> list[str]:
+    rows = []
+    s = template_1f1b(4, 4)
+    assert not validate_schedule(s, lambda st: st)
+    rows.append(f"schedule.1f1b_d4_m4.makespan_steps,{s.makespan},"
+                f"bubble={s.bubble_ratio():.3f}")
+    w = template_wave(4, 4)
+    rows.append(f"schedule.wave_d4_m4.makespan_steps,{w.makespan},"
+                f"bubble={w.bubble_ratio():.3f}")
+    mk, bub = simulate(w, [1.0] * 8, bwd_ratio=2.0, p2p_time=0.05)
+    rows.append(f"schedule.wave_d4_m4.simulated_time,{mk:.2f},"
+                f"bubble={bub:.3f}")
+    t0 = time.perf_counter()
+    ilp = ilp_schedule(4, 2, 2, device_of_stage=lambda s: min(s, 3 - s),
+                       collocated=[(0, 3), (1, 2)])
+    dt = time.perf_counter() - t0
+    g = template_wave(2, 2)
+    rows.append(f"schedule.ilp_s4_d2_m2.makespan_steps,{ilp.makespan},"
+                f"solve={dt:.1f}s template={g.makespan}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

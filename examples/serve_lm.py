@@ -1,0 +1,9 @@
+"""Batched LM serving demo (prefill + greedy decode) across families.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+for arch in ("smollm-360m", "xlstm-125m", "zamba2-2.7b"):
+    serve_main(["--arch", arch, "--batch", "4", "--prompt-len", "8",
+                "--gen", "16"])

@@ -1,0 +1,66 @@
+"""ArchBundle: everything the launcher / dry-run / tests need per arch."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.steps import ParallelPlan
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass
+class ArchBundle:
+    name: str
+    family: str
+    cfg: Any
+    init_fn: Callable                      # key -> params
+    loss_fn: Callable                      # (params, batch, rng) -> scalar
+    # batch ShapeDtypeStructs for a shape (train/prefill); None if unsupported
+    batch_struct: Callable                 # (ShapeSpec, ParallelPlan) -> pytree
+    plans: dict[str, ParallelPlan]         # per shape name
+    shape_support: dict[str, str]          # shape -> "ok" | skip reason
+    param_count: int = 0
+    active_param_count: int = 0
+    # serving (decode shapes): both optional for train-only archs
+    make_decode_fn: Callable | None = None  # (ShapeSpec)->(params,tok,c)->(l,c)
+    cache_struct: Callable | None = None    # (ShapeSpec) -> cache pytree struct
+    # PULSE pipeline (pp_* strategies)
+    make_adapter: Callable | None = None    # (plan, mesh_axis_sizes) -> adapter
+    make_microbatches: Callable | None = None
+    # reduced-depth variant for roofline probe extrapolation
+    scaled_cfg: Callable | None = None      # (n_layers:int) -> ArchBundle
+    # reduced smoke config for CPU tests
+    smoke: Callable | None = None           # () -> (loss, batch) runnable test
+    notes: str = ""
+
+    def supported(self, shape: str) -> bool:
+        return self.shape_support.get(shape) == "ok"
+
+
+def token_batch_struct(shape: ShapeSpec, vocab: int,
+                       microbatched: int | None = None) -> Pytree:
+    B, S = shape.global_batch, shape.seq_len
+    if microbatched:
+        M = microbatched
+        return {"tokens": jax.ShapeDtypeStruct((M, B // M, S), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}

@@ -1,0 +1,45 @@
+"""deepseek-v3-671b [moe]: 61L d=7168 128H MLA, MoE d_ff=2048 256 experts
+top-8 + 1 shared, first 3 layers dense (d_ff=18432), vocab=129280, MTP.
+
+The heavyweight: MLA compressed KV cache (576 B/token vs 64 KiB for MHA),
+EP+TP over 'model', FSDP over 'data' (x 'pod'), int8-quantized Adam moments
+(fp32 moments alone would need 31 GB/chip at 256 chips — §Dry-run notes),
+per-layer remat.  61 layers are prime, so PP is structurally unavailable;
+PULSE's collocation insight appears as the tied placement of embedding +
+MTP head handled inside one GSPMD partition.
+"""
+import jax.numpy as jnp
+from repro.configs.lm_common import lm_bundle
+from repro.models.lm import LMConfig
+from repro.models.layers import MLAConfig, MoEConfig
+from repro.train.steps import ParallelPlan
+
+CFG = LMConfig(
+    name="deepseek-v3-671b", vocab=129280, d_model=7168, n_layers=61,
+    mla=MLAConfig(d_model=7168, n_heads=128, q_lora_rank=1536,
+                  kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+                  v_head_dim=128),
+    d_ff=18432, n_dense_layers=3,
+    moe=MoEConfig(d_model=7168, d_ff=2048, n_experts=256, top_k=8,
+                  n_shared=1, shared_d_ff=2048, capacity_factor=1.25),
+    moe_dispatch="scatter", mtp=True,
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, remat=True)
+
+PLANS = {
+    "train_4k": ParallelPlan(tp_axis="model", ep=True,
+                             fsdp_axes=("pod", "data"),
+                             int8_optimizer=True,
+                             notes="EP/TP-16 x FSDP, int8 Adam moments"),
+    "prefill_32k": ParallelPlan(tp_axis="model", ep=True,
+                                fsdp_axes=("pod", "data")),
+    "decode_32k": ParallelPlan(tp_axis="model", ep=True,
+                               fsdp_axes=("pod", "data"),
+                               seq_shard_axis="model",
+                               notes="MLA latent cache seq-sharded over TP"),
+    "long_500k": ParallelPlan(),
+}
+
+
+def get_bundle():
+    return lm_bundle("deepseek-v3-671b", CFG, PLANS,
+                     notes="MLA + 256-expert MoE + MTP")

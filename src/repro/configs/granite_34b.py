@@ -1,0 +1,31 @@
+"""granite-34b [dense]: 88L d=6144 48H (MQA kv=1) d_ff=24576 vocab=49152.
+
+88 layers are not divisible by 16 stages, so training is Megatron-style
+TP-16 x FSDP over data (PULSE degenerate; the DP partitioner still load-
+balances the 88-block graph in benchmarks).  MQA: the single kv head is
+replicated across the TP group.
+"""
+import jax.numpy as jnp
+from repro.configs.lm_common import lm_bundle
+from repro.models.lm import LMConfig
+from repro.models.layers import AttnConfig
+from repro.train.steps import ParallelPlan
+
+CFG = LMConfig(
+    name="granite-34b", vocab=49152, d_model=6144, n_layers=88,
+    attn=AttnConfig(d_model=6144, n_heads=48, n_kv_heads=1, head_dim=128),
+    d_ff=24576, mlp_gelu=True,   # gpt_bigcode-style 2-matrix MLP
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, remat=True)
+
+_KV_REP = {"wk": (None, None), "wv": (None, None)}
+PLANS = {
+    "train_4k": ParallelPlan(tp_axis="model", fsdp_axes=("data",),
+                             custom_rules=_KV_REP),
+    "prefill_32k": ParallelPlan(tp_axis="model", custom_rules=_KV_REP),
+    "decode_32k": ParallelPlan(tp_axis="model", custom_rules=_KV_REP),
+    "long_500k": ParallelPlan(),
+}
+
+
+def get_bundle():
+    return lm_bundle("granite-34b", CFG, PLANS)

@@ -1,0 +1,34 @@
+"""h2o-danube-1.8b [dense]: 24L d=2560 32H (GQA kv=8) d_ff=6912 vocab=32000.
+
+llama+mistral mix with sliding-window attention (window 4096) — the SWA
+cache is O(window), so long_500k runs (sub-quadratic decode).
+24 layers do not divide the 16-wide model axis, so training uses TP+FSDP
+(PULSE degenerate case; DESIGN.md §4).
+"""
+import jax.numpy as jnp
+from repro.configs.lm_common import lm_bundle
+from repro.models.lm import LMConfig
+from repro.models.layers import AttnConfig
+from repro.train.steps import ParallelPlan
+
+CFG = LMConfig(
+    name="h2o-danube-1.8b", vocab=32000, d_model=2560, n_layers=24,
+    attn=AttnConfig(d_model=2560, n_heads=32, n_kv_heads=8, head_dim=80,
+                    window=4096),
+    d_ff=6912, dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, remat=True)
+
+_KV_REP = {"wk": (None, None), "wv": (None, None)}   # kv=8 < tp=16
+PLANS = {
+    "train_4k": ParallelPlan(tp_axis="model", fsdp_axes=("data",),
+                             custom_rules=_KV_REP),
+    "prefill_32k": ParallelPlan(tp_axis="model", custom_rules=_KV_REP),
+    "decode_32k": ParallelPlan(tp_axis="model", custom_rules=_KV_REP),
+    "long_500k": ParallelPlan(tp_axis="model", custom_rules=_KV_REP,
+                              batch_axes=(), seq_shard_axis="data",
+                              notes="window cache seq-sharded over data"),
+}
+
+
+def get_bundle():
+    return lm_bundle("h2o-danube-1.8b", CFG, PLANS, long_ok=True,
+                     notes="SWA window=4096")

@@ -1,0 +1,77 @@
+"""Hunyuan-DiT-3B (paper's own model, scaled): 32 DiT blocks (16+16 with
+long skips), d=2048, 16 heads, d_ff=8192, adaLN time conditioning, text
+cross-attention (CLIP+T5 stub embeddings), latent 64x64x4.
+"""
+import jax
+import jax.numpy as jnp
+from repro.configs.base import ArchBundle, ShapeSpec
+from repro.models import diffusion as dm
+from repro.models.diffusion import HunyuanDiTConfig
+from repro.runtime.pipeline import PipelineConfig
+from repro.runtime.adapters import (DiffusionPipelineAdapter,
+                                    make_diffusion_microbatches)
+from repro.train.steps import ParallelPlan
+
+CFG = HunyuanDiTConfig(
+    name="hunyuan-dit", img_size=64, in_ch=4, patch=2, d_model=2048,
+    n_layers=32, n_heads=16, d_ff=8192, ctx_dim=1024, ctx_len=77,
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+
+PLANS = {
+    "train_4k": ParallelPlan(strategy="pp_wave", pp_degree=16,
+                             microbatches=16, batch_axes=("pod", "data"),
+                             fsdp_axes=("data",)),
+}
+SUPPORT = {"train_4k": "ok",
+           "prefill_32k": "n/a: diffusion training arch",
+           "decode_32k": "n/a: diffusion training arch",
+           "long_500k": "n/a: diffusion training arch"}
+
+
+def batch_struct(shape: ShapeSpec, plan=None):
+    plan = plan or PLANS["train_4k"]
+    M = plan.microbatches
+    B = shape.global_batch
+    return {
+        "latents": jax.ShapeDtypeStruct((M, B // M, CFG.img_size,
+                                         CFG.img_size, CFG.in_ch),
+                                        jnp.bfloat16),
+        "text_embeds": jax.ShapeDtypeStruct((M, B // M, CFG.ctx_len,
+                                             CFG.ctx_dim), jnp.bfloat16),
+    }
+
+
+def loss_fn(params, batch, rng):
+    flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in batch.items()}
+    return dm.hunyuan_loss(params, flat, rng, CFG)
+
+
+def make_adapter(plan: ParallelPlan, mesh):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = tuple(a for a in plan.batch_axes if a in axis_sizes)
+    dp = 1
+    for a in dp_axes:
+        dp *= axis_sizes[a]
+    pcfg = PipelineConfig(num_devices=axis_sizes["model"],
+                          num_microbatches=plan.microbatches,
+                          data_axes=dp_axes, dp_size=dp, remat=True)
+    return DiffusionPipelineAdapter(CFG, pcfg, "hunyuan")
+
+
+def make_microbatches(batch, rng, edge):
+    M, b = batch["latents"].shape[:2]
+    flat = {k: v.reshape((M * b,) + v.shape[2:]) for k, v in batch.items()}
+    mb, aux = make_diffusion_microbatches(flat, rng, M, CFG, "hunyuan",
+                                          params=edge)
+    return (mb, aux)
+
+
+def get_bundle():
+    return ArchBundle(
+        name="hunyuan-dit", family="diffusion", cfg=CFG,
+        init_fn=lambda key: dm.init_hunyuan(key, CFG),
+        loss_fn=loss_fn, batch_struct=batch_struct, plans=PLANS,
+        shape_support=SUPPORT, param_count=CFG.param_count(),
+        active_param_count=CFG.param_count(),
+        make_adapter=make_adapter, make_microbatches=make_microbatches,
+        notes="paper model; adaLN + cross-attn wave pipeline")

@@ -1,0 +1,43 @@
+"""internvl2-2b [vlm]: 24L d=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.
+
+InternViT frontend is a STUB per the assignment: input_specs provide 256
+pre-projected patch embeddings (B, 256, d_model) prepended to the text
+tokens; the LM backbone (InternLM2-1.8B-like) is real.
+"""
+import jax
+import jax.numpy as jnp
+from repro.configs.lm_common import lm_bundle
+from repro.models.lm import LMConfig
+from repro.models.layers import AttnConfig
+from repro.train.steps import ParallelPlan
+
+N_PATCHES = 256
+
+CFG = LMConfig(
+    name="internvl2-2b", vocab=92553, d_model=2048, n_layers=24,
+    attn=AttnConfig(d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128),
+    d_ff=8192, vision_prefix=N_PATCHES,
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, remat=True)
+
+_KV_REP = {"wk": (None, None), "wv": (None, None)}
+PLANS = {
+    "train_4k": ParallelPlan(tp_axis="model", fsdp_axes=("data",),
+                             custom_rules=_KV_REP),
+    "prefill_32k": ParallelPlan(tp_axis="model", custom_rules=_KV_REP),
+    "decode_32k": ParallelPlan(tp_axis="model", custom_rules=_KV_REP),
+    "long_500k": ParallelPlan(),
+}
+
+
+def _prefix_struct(shape, mb):
+    B = shape.global_batch
+    if mb:
+        return jax.ShapeDtypeStruct((mb, B // mb, N_PATCHES, CFG.d_model),
+                                    jnp.bfloat16)
+    return jax.ShapeDtypeStruct((B, N_PATCHES, CFG.d_model), jnp.bfloat16)
+
+
+def get_bundle():
+    return lm_bundle("internvl2-2b", CFG, PLANS,
+                     vision_prefix_struct=_prefix_struct,
+                     notes="ViT frontend stubbed (patch embeddings input)")

@@ -1,0 +1,93 @@
+"""Shared bundle builder for the unified LM family."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchBundle, ShapeSpec, SHAPES, token_batch_struct
+from repro.models import lm as lm_mod
+from repro.models.lm import LMConfig
+from repro.runtime.pipeline import PipelineConfig
+from repro.runtime.adapters import LMPipelineAdapter
+from repro.train.steps import ParallelPlan
+
+FULL_ATTN_SKIP = ("skipped: full quadratic attention — long_500k requires "
+                  "sub-quadratic context handling (DESIGN.md §4)")
+
+
+def lm_bundle(
+    name: str,
+    cfg: LMConfig,
+    plans: dict[str, ParallelPlan],
+    *,
+    long_ok: bool = False,
+    long_reason: str = FULL_ATTN_SKIP,
+    vision_prefix_struct=None,
+    notes: str = "",
+) -> ArchBundle:
+    support = {s: "ok" for s in SHAPES}
+    if not long_ok:
+        support["long_500k"] = long_reason
+
+    def batch_struct(shape: ShapeSpec, plan: ParallelPlan | None = None):
+        plan = plan or plans.get(shape.name)
+        mb = (plan.microbatches if plan and plan.strategy.startswith("pp")
+              else None)
+        bs = token_batch_struct(shape, cfg.vocab, microbatched=mb)
+        if vision_prefix_struct is not None and shape.kind == "train":
+            bs["prefix_embeds"] = vision_prefix_struct(shape, mb)
+        return bs
+
+    def loss_fn(params, batch, rng):
+        return lm_mod.lm_loss(params, batch, cfg)
+
+    def make_decode_fn(shape: ShapeSpec):
+        def decode(params, token, caches):
+            return lm_mod.decode_step(params, token, caches, cfg)
+        return decode
+
+    def cache_struct(shape: ShapeSpec):
+        return jax.eval_shape(
+            lambda: lm_mod.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                       dtype=cfg.dtype))
+
+    def make_adapter(plan: ParallelPlan, mesh):
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp_axes = tuple(a for a in plan.batch_axes if a in axis_sizes)
+        dp = 1
+        for a in dp_axes:
+            dp *= axis_sizes[a]
+        pcfg = PipelineConfig(
+            num_devices=axis_sizes["model"],
+            num_microbatches=plan.microbatches,
+            data_axes=dp_axes, dp_size=dp, remat=True)
+        return LMPipelineAdapter(cfg, pcfg, wave=plan.strategy == "pp_wave")
+
+    def make_microbatches(batch, rng, edge):
+        return (batch,)       # batch already arrives microbatch-stacked
+
+    def scaled_cfg(n_layers: int) -> LMConfig:
+        n_dense = min(cfg.n_dense_layers, max(n_layers - 1, 0)) \
+            if cfg.moe else 0
+        return dataclasses.replace(cfg, n_layers=n_layers,
+                                   n_dense_layers=n_dense)
+
+    return ArchBundle(
+        name=name, family="lm", cfg=cfg,
+        init_fn=lambda key: lm_mod.init_lm(key, cfg),
+        loss_fn=loss_fn,
+        batch_struct=batch_struct,
+        plans=plans,
+        shape_support=support,
+        param_count=cfg.param_count(),
+        active_param_count=cfg.active_param_count(),
+        make_decode_fn=make_decode_fn,
+        cache_struct=cache_struct,
+        make_adapter=make_adapter,
+        make_microbatches=make_microbatches,
+        scaled_cfg=scaled_cfg,
+        notes=notes,
+    )

@@ -1,0 +1,53 @@
+"""SDv2-style UNet 4.6B-scale (paper's own model): conv ResNet + attention
+blocks at 4 resolutions, base_ch=448, mults (1,2,4,4), CLIP text ctx.
+
+Heterogeneous blocks (paper Fig. 6: ~3x per-block cost spread) — the
+skip-aware DP partitioner's showcase (benchmarks/partition_balance.py).
+Execution at scale uses GSPMD FSDP; the wave executor demonstrates on the
+homogeneous UViT/Hunyuan instead (DESIGN.md §3 heterogeneity note).
+"""
+import jax
+import jax.numpy as jnp
+from repro.configs.base import ArchBundle, ShapeSpec
+from repro.models import diffusion as dm
+from repro.models.diffusion import UNetConfig
+from repro.train.steps import ParallelPlan
+
+CFG = UNetConfig(
+    name="sdv2-unet", img_size=32, in_ch=4, base_ch=448,
+    ch_mults=(1, 2, 4, 4), blocks_per_level=2, attn_levels=(1, 2, 3),
+    ctx_dim=1024, ctx_len=77, n_heads=8,
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+
+PLANS = {
+    "train_4k": ParallelPlan(tp_axis=None, fsdp_axes=("model", "data"),
+                             batch_axes=("pod", "data")),
+}
+SUPPORT = {"train_4k": "ok",
+           "prefill_32k": "n/a: diffusion training arch",
+           "decode_32k": "n/a: diffusion training arch",
+           "long_500k": "n/a: diffusion training arch"}
+
+
+def batch_struct(shape: ShapeSpec, plan=None):
+    B = shape.global_batch
+    return {
+        "latents": jax.ShapeDtypeStruct((B, CFG.img_size, CFG.img_size,
+                                         CFG.in_ch), jnp.bfloat16),
+        "text_embeds": jax.ShapeDtypeStruct((B, CFG.ctx_len, CFG.ctx_dim),
+                                            jnp.bfloat16),
+    }
+
+
+def loss_fn(params, batch, rng):
+    return dm.unet_loss(params, batch, rng, CFG)
+
+
+def get_bundle():
+    return ArchBundle(
+        name="sdv2-unet", family="diffusion", cfg=CFG,
+        init_fn=lambda key: dm.init_unet(key, CFG),
+        loss_fn=loss_fn, batch_struct=batch_struct, plans=PLANS,
+        shape_support=SUPPORT, param_count=CFG.param_count(),
+        active_param_count=CFG.param_count(),
+        notes="heterogeneous UNet; partitioner showcase")

@@ -1,0 +1,82 @@
+"""UViT-2.7B (paper's own model, scaled per §VII-B): 32 blocks (16 enc +
+16 dec with long skips), d=2560, 20 heads (head_dim 128), d_ff=10240,
+latent 32x32x4, class-conditional.
+
+Runs the PULSE wave pipeline end-to-end (S=32 folded stages on 16 devices,
+1 block/stage) — the paper's flagship configuration.  Diffusion shapes:
+``train_4k`` maps to the paper's latent-diffusion training batch
+(latents 32x32x4, global batch 256); LM serve shapes do not apply.
+"""
+import jax
+import jax.numpy as jnp
+from repro.configs.base import ArchBundle, ShapeSpec
+from repro.models import diffusion as dm
+from repro.models.diffusion import UViTConfig
+from repro.runtime.pipeline import PipelineConfig
+from repro.runtime.adapters import (DiffusionPipelineAdapter,
+                                    make_diffusion_microbatches)
+from repro.train.steps import ParallelPlan
+
+CFG = UViTConfig(
+    name="uvit-h", img_size=32, in_ch=4, patch=2, d_model=2560,
+    n_layers=32, n_heads=20, d_ff=10240, n_classes=1001,
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+
+PLANS = {
+    "train_4k": ParallelPlan(strategy="pp_wave", pp_degree=16,
+                             microbatches=16, batch_axes=("pod", "data"),
+                             fsdp_axes=("data",),
+                             notes="paper's wave: S=32 folded, skip-local"),
+}
+SUPPORT = {"train_4k": "ok",
+           "prefill_32k": "n/a: diffusion training arch (no LM serving)",
+           "decode_32k": "n/a: diffusion training arch",
+           "long_500k": "n/a: diffusion training arch"}
+
+
+def batch_struct(shape: ShapeSpec, plan=None):
+    plan = plan or PLANS["train_4k"]
+    M = plan.microbatches
+    B = shape.global_batch
+    return {
+        "latents": jax.ShapeDtypeStruct((M, B // M, CFG.img_size,
+                                         CFG.img_size, CFG.in_ch),
+                                        jnp.bfloat16),
+        "labels": jax.ShapeDtypeStruct((M, B // M), jnp.int32),
+    }
+
+
+def loss_fn(params, batch, rng):
+    flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in batch.items()}
+    return dm.uvit_loss(params, flat, rng, CFG)
+
+
+def make_adapter(plan: ParallelPlan, mesh):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = tuple(a for a in plan.batch_axes if a in axis_sizes)
+    dp = 1
+    for a in dp_axes:
+        dp *= axis_sizes[a]
+    pcfg = PipelineConfig(num_devices=axis_sizes["model"],
+                          num_microbatches=plan.microbatches,
+                          data_axes=dp_axes, dp_size=dp, remat=True)
+    return DiffusionPipelineAdapter(CFG, pcfg, "uvit")
+
+
+def make_microbatches(batch, rng, edge):
+    M, b = batch["latents"].shape[:2]
+    flat = {"latents": batch["latents"].reshape((M * b,) + batch["latents"].shape[2:]),
+            "labels": batch["labels"].reshape(-1)}
+    mb, aux = make_diffusion_microbatches(flat, rng, M, CFG, "uvit")
+    return (mb, aux)
+
+
+def get_bundle():
+    return ArchBundle(
+        name="uvit-h", family="diffusion", cfg=CFG,
+        init_fn=lambda key: dm.init_uvit(key, CFG),
+        loss_fn=loss_fn, batch_struct=batch_struct, plans=PLANS,
+        shape_support=SUPPORT, param_count=CFG.param_count(),
+        active_param_count=CFG.param_count(),
+        make_adapter=make_adapter, make_microbatches=make_microbatches,
+        notes="paper model; wave pipeline flagship")

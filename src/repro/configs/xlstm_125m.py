@@ -1,0 +1,59 @@
+"""xlstm-125m [ssm]: 12L d=768 4H vocab=50304 — sLSTM + mLSTM blocks
+(xLSTM[7:1]-style: sLSTM at every 6th layer).
+
+Recurrent state is O(1) in sequence length, so all decode shapes including
+long_500k run; the 'cache' is the per-layer recurrent state.
+"""
+import jax
+import jax.numpy as jnp
+from repro.configs.base import ArchBundle, ShapeSpec, token_batch_struct
+from repro.models import xlstm as xm
+from repro.models.xlstm import XLSTMConfig
+from repro.train.steps import ParallelPlan
+
+CFG = XLSTMConfig(
+    name="xlstm-125m", vocab=50304, d_model=768, n_layers=12, n_heads=4,
+    slstm_every=6, dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+
+PLANS = {
+    "train_4k": ParallelPlan(tp_axis=None, fsdp_axes=("model",),
+                             batch_axes=("pod", "data")),
+    "prefill_32k": ParallelPlan(tp_axis=None, fsdp_axes=("model",),
+                                batch_axes=("pod", "data")),
+    "decode_32k": ParallelPlan(tp_axis=None, fsdp_axes=("model",),
+                               batch_axes=("pod", "data")),
+    "long_500k": ParallelPlan(tp_axis=None, fsdp_axes=("model",),
+                              batch_axes=("data",),
+                              notes="state is O(1); context length free"),
+}
+
+
+def batch_struct(shape: ShapeSpec, plan=None):
+    # recurrent training cost is O(S); cap the traced train seq at 4k.
+    return token_batch_struct(shape, CFG.vocab)
+
+
+def loss_fn(params, batch, rng):
+    return xm.xlstm_loss(params, batch, CFG)
+
+
+def cache_struct(shape: ShapeSpec):
+    return jax.eval_shape(lambda: xm.init_states(CFG, shape.global_batch))
+
+
+def make_decode_fn(shape: ShapeSpec):
+    def decode(params, token, states):
+        return xm.decode_step(params, token, states, CFG)
+    return decode
+
+
+def get_bundle():
+    return ArchBundle(
+        name="xlstm-125m", family="ssm", cfg=CFG,
+        init_fn=lambda key: xm.init_xlstm(key, CFG),
+        loss_fn=loss_fn, batch_struct=batch_struct, plans=PLANS,
+        shape_support={s: "ok" for s in
+                       ("train_4k", "prefill_32k", "decode_32k", "long_500k")},
+        param_count=CFG.param_count(), active_param_count=CFG.param_count(),
+        make_decode_fn=make_decode_fn, cache_struct=cache_struct,
+        notes="recurrent state O(1); long_500k trivially supported")

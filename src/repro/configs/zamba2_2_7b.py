@@ -1,0 +1,68 @@
+"""zamba2-2.7b [hybrid]: 54 Mamba2 blocks d=2560 (ssm_state=64) + 2 shared
+full-attention blocks (32H, d_ff=10240) applied every 6 layers.
+
+The genuinely PULSE-relevant assigned arch: the shared block's parameter
+reuse sites are long-range graph edges; the partitioner's collocation
+analysis applies (benchmarks/partition_balance.py exports its BlockGraph).
+long_500k runs: Mamba state is O(1); the 9 shared-attention KV caches are
+sequence-sharded over 'data' at batch=1.
+"""
+import jax
+import jax.numpy as jnp
+from repro.configs.base import ArchBundle, ShapeSpec, token_batch_struct
+from repro.models import mamba as zm
+from repro.models.mamba import Zamba2Config, Mamba2Config
+from repro.models.layers import AttnConfig
+from repro.train.steps import ParallelPlan
+
+CFG = Zamba2Config(
+    name="zamba2-2.7b", vocab=32000, d_model=2560, n_layers=54,
+    mamba=Mamba2Config(d_model=2560, d_state=64, head_dim=64, expand=2,
+                       chunk=128),
+    shared_attn=AttnConfig(d_model=2560, n_heads=32, n_kv_heads=32,
+                           head_dim=80),
+    shared_d_ff=10240, shared_every=6, n_shared_blocks=2,
+    dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+
+PLANS = {
+    "train_4k": ParallelPlan(tp_axis=None, fsdp_axes=("model",),
+                             batch_axes=("pod", "data")),
+    "prefill_32k": ParallelPlan(tp_axis=None, fsdp_axes=("model",),
+                                batch_axes=("pod", "data")),
+    "decode_32k": ParallelPlan(tp_axis=None, fsdp_axes=("model",),
+                               batch_axes=("pod", "data")),
+    "long_500k": ParallelPlan(tp_axis=None, fsdp_axes=("model",),
+                              batch_axes=(), seq_shard_axis="data",
+                              notes="shared-attn caches seq-sharded"),
+}
+
+
+def batch_struct(shape: ShapeSpec, plan=None):
+    return token_batch_struct(shape, CFG.vocab)
+
+
+def loss_fn(params, batch, rng):
+    return zm.zamba2_loss(params, batch, CFG)
+
+
+def cache_struct(shape: ShapeSpec):
+    return jax.eval_shape(
+        lambda: zm.init_states(CFG, shape.global_batch, shape.seq_len))
+
+
+def make_decode_fn(shape: ShapeSpec):
+    def decode(params, token, states):
+        return zm.decode_step(params, token, states, CFG)
+    return decode
+
+
+def get_bundle():
+    return ArchBundle(
+        name="zamba2-2.7b", family="hybrid", cfg=CFG,
+        init_fn=lambda key: zm.init_zamba2(key, CFG),
+        loss_fn=loss_fn, batch_struct=batch_struct, plans=PLANS,
+        shape_support={s: "ok" for s in
+                       ("train_4k", "prefill_32k", "decode_32k", "long_500k")},
+        param_count=CFG.param_count(), active_param_count=CFG.param_count(),
+        make_decode_fn=make_decode_fn, cache_struct=cache_struct,
+        notes="Mamba2 + shared attention blocks (PULSE collocation case)")

@@ -1,0 +1,84 @@
+"""Analytic communication-volume models (paper §II-C, §V-B, Table III).
+
+All volumes are *bytes per microbatch* unless stated otherwise.  These
+formulas are validated against byte counts parsed from compiled HLO by
+``benchmarks/comm_volume.py`` (collective-permute operand sums).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.graph import BlockGraph
+from repro.core.partition import Partition
+
+
+def naive_pp_volume(K: int, D: int, a: int) -> float:
+    """Paper §II-C: sequential block-wise partition of a UNet with K blocks
+    (K/2 skip pairs) over D devices; every skip hops stage-by-stage.
+    Total per-microbatch forward volume: ((K+4)*D/4 - 1) * a."""
+    return ((K + 4) * D / 4 - 1) * a
+
+
+def pulse_volume(D: int, a: int) -> float:
+    """Paper §V-B: skip-collocated wave needs only boundary transfers:
+    2*(D-1)*a per microbatch (down-stream + up-stream)."""
+    return 2 * (D - 1) * a
+
+
+def zero_volume_per_iter(param_bytes: int, G: int, stage: int = 2) -> float:
+    """ZeRO-stage-2/3 per-iteration collective volume per device (ring):
+    reduce-scatter(grads) + all-gather(params) ~= 2 * (G-1)/G * P bytes,
+    ZeRO-3 re-gathers params in both passes (x2)."""
+    base = 2.0 * (G - 1) / G * param_bytes
+    return base * (2.0 if stage >= 3 else 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionCommVolume:
+    boundary_bytes: float     # short-range stage-to-stage (fwd, per microbatch)
+    skip_bytes: float         # long-range skip traffic (fwd, per microbatch)
+
+    @property
+    def fwd_total(self) -> float:
+        return self.boundary_bytes + self.skip_bytes
+
+    @property
+    def train_total(self) -> float:
+        # backward transfers mirror the forward ones (activation gradients)
+        return 2.0 * self.fwd_total
+
+
+def partition_comm_volume(graph: BlockGraph, part: Partition) -> PartitionCommVolume:
+    """Exact per-microbatch P2P volume for an arbitrary partition.
+
+    Boundary: each stage sends its output tensor to the next stage if it is
+    on a different device.  Skip: each skip edge whose endpoints live on
+    different devices is relayed hop-by-hop through every intermediate
+    stage boundary (the paper's 1F1B/Hanayo baseline semantics: stacked,
+    transferred, popped).
+    """
+    boundary = 0.0
+    for s in range(part.num_stages - 1):
+        if part.device_of_stage(s) != part.device_of_stage(s + 1):
+            lo, hi = part.stage_range(s)
+            boundary += graph.blocks[hi - 1].act_bytes
+    skip = 0.0
+    for e in graph.skips:
+        s_src = part.stage_of_block(e.src)
+        s_dst = part.stage_of_block(e.dst)
+        if part.device_of_stage(s_src) == part.device_of_stage(s_dst):
+            continue  # collocated: local buffer, no transfer
+        hops = 0
+        for s in range(s_src, s_dst):
+            if part.device_of_stage(s) != part.device_of_stage(s + 1):
+                hops += 1
+        skip += hops * e.bytes
+    return PartitionCommVolume(boundary, skip)
+
+
+def per_sample_volume(
+    graph: BlockGraph, part: Partition, microbatch_size: int
+) -> float:
+    """Bytes/sample of P2P traffic for one training iteration (fwd+bwd)."""
+    v = partition_comm_volume(graph, part)
+    return v.train_total / max(microbatch_size, 1)

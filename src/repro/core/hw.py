@@ -1,0 +1,54 @@
+"""Hardware models used by the partitioner / tuner / roofline analysis.
+
+The paper profiles V100 (NVLink + IB) and Ascend 910A clusters; our target
+is a TPU v5e pod, so that is the default.  All benchmark scripts can swap in
+the paper's clusters to reproduce its analytic numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # per-chip peak (bf16/fp16) FLOP/s
+    hbm_bw: float              # per-chip HBM bytes/s
+    intra_bw: float            # effective intra-node / intra-pod link bytes/s
+    inter_bw: float            # effective inter-node / inter-pod bytes/s
+    mem_limit: float           # per-device memory budget (bytes)
+    t_lat: float = 5e-6        # static latency of a communication kernel (s)
+
+
+# TPU v5e constants given by the assignment: 197 TFLOP/s bf16, 819 GB/s HBM,
+# ~50 GB/s per ICI link.  DCN (inter-pod) is far slower; 25 GB/s effective.
+TPU_V5E = Hardware(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    intra_bw=50e9,
+    inter_bw=25e9,
+    mem_limit=16 * (1 << 30),
+)
+
+# Paper's clusters (Section VII): used to reproduce paper-table numbers.
+V100_CLUSTER = Hardware(
+    name="v100-2node",
+    peak_flops=125e12,          # V100 tensor-core fp16
+    hbm_bw=900e9,
+    intra_bw=300e9,             # NVLink
+    inter_bw=10e9,              # InfiniBand
+    mem_limit=32 * (1 << 30),
+)
+
+ASCEND_910A_CLUSTER = Hardware(
+    name="ascend910a-8node",
+    peak_flops=256e12,
+    hbm_bw=1228e9,
+    intra_bw=30e9,
+    inter_bw=19e9,
+    mem_limit=32 * (1 << 30),
+)
+
+
+PRESETS = {h.name: h for h in (TPU_V5E, V100_CLUSTER, ASCEND_910A_CLUSTER)}

@@ -1,0 +1,335 @@
+"""Skip-aware model partitioning (paper §IV, Algorithm 1).
+
+Three partitioners:
+
+- ``blockwise_partition``      — the paper's baseline: equal-count contiguous
+                                 stages, no cost awareness.
+- ``linear_partition``         — classic cost-balanced linear partition
+                                 (used when the graph has no skip edges; the
+                                 bidirectional DP degenerates to this).
+- ``partition_bidirectional``  — Algorithm 1: bidirectional DP over
+                                 prefix/suffix states with symmetric
+                                 collocation constraints for nested skips.
+- ``partition_reference``      — exact O(p·n^4) reference with the paper's
+                                 full constraint predicate c(i',i,j,j'); any
+                                 skip structure; used for validation.
+
+All partitioners return a :class:`Partition` whose ``cuts`` are ``p+1``
+monotone boundaries over block indices; stage ``s`` covers
+``[cuts[s], cuts[s+1])`` and executes s-th in pipeline order.  For wave
+(folded) partitions stage ``s`` is placed on device ``min(s, p-1-s)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.graph import BlockGraph
+from repro.core.hw import Hardware, TPU_V5E
+
+INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    cuts: tuple[int, ...]            # p+1 boundaries, cuts[0]=0, cuts[p]=n
+    folded: bool                     # True => stage s on device min(s, p-1-s)
+    objective: float                 # max over stages of Eq. (1) cost
+    stage_costs: tuple[float, ...]   # per-stage Eq. (1) cost
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.cuts) - 1
+
+    @property
+    def num_devices(self) -> int:
+        p = self.num_stages
+        return p // 2 if self.folded else p
+
+    def stage_range(self, s: int) -> tuple[int, int]:
+        return self.cuts[s], self.cuts[s + 1]
+
+    def device_of_stage(self, s: int) -> int:
+        p = self.num_stages
+        return min(s, p - 1 - s) if self.folded else s
+
+    def stages_of_device(self, d: int) -> tuple[int, ...]:
+        p = self.num_stages
+        if self.folded:
+            return (d, p - 1 - d)
+        return (d,)
+
+    def stage_of_block(self, b: int) -> int:
+        for s in range(self.num_stages):
+            if self.cuts[s] <= b < self.cuts[s + 1]:
+                return s
+        raise ValueError(f"block {b} outside partition")
+
+    def validate_collocation(self, graph: BlockGraph) -> bool:
+        """All skip endpoints on the same device?"""
+        return all(
+            self.device_of_stage(self.stage_of_block(e.src))
+            == self.device_of_stage(self.stage_of_block(e.dst))
+            for e in graph.skips
+        )
+
+
+def _stage_cost(
+    graph: BlockGraph, lo: int, hi: int, hw: Hardware, lam: float
+) -> float:
+    """Eq. (1)/(2)/(3): forward time of [lo,hi) + weighted p2p of its output."""
+    t = sum(graph.blocks[l].fwd_time for l in range(lo, hi))
+    out = graph.blocks[hi - 1].act_bytes if hi > lo else 0
+    return t + lam * (hw.t_lat + out / hw.inter_bw)
+
+
+def _mk_partition(
+    graph: BlockGraph, cuts: Sequence[int], folded: bool, hw: Hardware, lam: float
+) -> Partition:
+    cuts = tuple(cuts)
+    costs = tuple(
+        _stage_cost(graph, cuts[s], cuts[s + 1], hw, lam)
+        for s in range(len(cuts) - 1)
+    )
+    return Partition(cuts, folded, max(costs), costs)
+
+
+# --------------------------------------------------------------------------
+# Baseline: block-wise equal-count partition (paper's comparison baseline)
+# --------------------------------------------------------------------------
+
+def blockwise_partition(
+    graph: BlockGraph, p: int, *, folded: bool = False,
+    hw: Hardware = TPU_V5E, lam: float = 0.0,
+) -> Partition:
+    n = graph.n
+    if p > n:
+        raise ValueError(f"cannot split {n} blocks into {p} stages")
+    cuts = [round(s * n / p) for s in range(p + 1)]
+    # de-duplicate to keep stages non-empty
+    for s in range(1, p + 1):
+        cuts[s] = max(cuts[s], cuts[s - 1] + 1)
+    cuts[p] = n
+    for s in range(p - 1, 0, -1):
+        cuts[s] = min(cuts[s], cuts[s + 1] - 1)
+    return _mk_partition(graph, cuts, folded, hw, lam)
+
+
+# --------------------------------------------------------------------------
+# Classic linear partition (no skip constraints)
+# --------------------------------------------------------------------------
+
+def linear_partition(
+    graph: BlockGraph, p: int, *,
+    hw: Hardware = TPU_V5E, lam: float = 1.0, folded: bool = False,
+) -> Partition:
+    """Min-max cost contiguous partition via DP, O(p n^2)."""
+    n = graph.n
+    if p > n:
+        raise ValueError(f"cannot split {n} blocks into {p} stages")
+    cost = np.full((n + 1, n + 1), INF)
+    for lo in range(n):
+        for hi in range(lo + 1, n + 1):
+            cost[lo, hi] = _stage_cost(graph, lo, hi, hw, lam)
+    dp = np.full((p + 1, n + 1), INF)
+    parent = np.zeros((p + 1, n + 1), dtype=int)
+    dp[0, 0] = 0.0
+    for k in range(1, p + 1):
+        for i in range(k, n - (p - k) + 1):
+            # last stage covers [i', i)
+            cand = np.maximum(dp[k - 1, :i], cost[:i, i])
+            j = int(np.argmin(cand))
+            dp[k, i] = cand[j]
+            parent[k, i] = j
+    cuts = [n]
+    k, i = p, n
+    while k > 0:
+        i = int(parent[k, i])
+        cuts.append(i)
+        k -= 1
+    cuts.reverse()
+    return _mk_partition(graph, cuts, folded, hw, lam)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1: bidirectional skip-aware DP (nested skips)
+# --------------------------------------------------------------------------
+
+def _feasible_j_interval(graph: BlockGraph, i: int) -> tuple[int, int]:
+    """Feasible suffix start j for prefix end i (nested skips).
+
+    State (i, j): prefix covers [0, i), suffix covers [j, n).  All skip
+    sources < i must have their destination >= j; all sources >= i must
+    have destination < j.  With nested skips, sorted sources s_0<s_1<...
+    pair with descending destinations d_0>d_1>..., so the constraint pins
+    j into the half-open interval (d_m, d_{m-1}] where m = #{src < i}.
+    Returns an inclusive interval (j_lo, j_hi); empty if j_lo > j_hi.
+    """
+    n = graph.n
+    skips = graph.sorted_skips()
+    m = sum(1 for e in skips if e.src < i)
+    j_hi = skips[m - 1].dst if m > 0 else n
+    j_lo = skips[m].dst + 1 if m < len(skips) else i
+    return max(j_lo, i), j_hi
+
+
+def partition_bidirectional(
+    graph: BlockGraph, p: int, *,
+    hw: Hardware = TPU_V5E, lam: float = 1.0,
+) -> Partition:
+    """Skip-aware bidirectional DP (Algorithm 1) for nested skip graphs.
+
+    Builds p stages (p even) pairwise from both sequence ends; stage q is
+    collocated with stage p-1-q on device q.  DP state dp[(i, j)] after k
+    stage-pairs = minimal max-cost covering prefix [0,i) and suffix [j,n).
+    Using the nested-skip feasibility interval the state space collapses to
+    feasible (i, j) pairs only, giving the paper's O(p n^3) bound (and far
+    less when most blocks carry skips).
+    """
+    n = graph.n
+    if p % 2 != 0:
+        raise ValueError("bidirectional partition needs an even stage count")
+    if p > n:
+        raise ValueError(f"cannot split {n} blocks into {p} stages")
+    if not graph.skips:
+        return linear_partition(graph, p, hw=hw, lam=lam, folded=True)
+    if not graph.is_nested():
+        return partition_reference(graph, p, hw=hw, lam=lam)
+
+    # Pre-compute prefix sums of fwd time; stage costs on demand.
+    pref = np.concatenate([[0.0], np.cumsum([b.fwd_time for b in graph.blocks])])
+
+    def L(lo: int, hi: int) -> float:  # prefix stage [lo, hi)
+        return (pref[hi] - pref[lo]) + lam * (
+            hw.t_lat + graph.blocks[hi - 1].act_bytes / hw.inter_bw
+        )
+
+    def R(lo: int, hi: int) -> float:  # suffix stage [lo, hi)
+        return (pref[hi] - pref[lo]) + lam * (
+            hw.t_lat + graph.blocks[lo - 1].act_bytes / hw.inter_bw
+        )
+
+    # Enumerate feasible states per prefix end i (nested-skip interval).
+    feas: dict[int, tuple[int, int]] = {}
+    for i in range(1, n):
+        lo, hi = _feasible_j_interval(graph, i)
+        if lo <= hi:
+            feas[i] = (lo, hi)
+
+    return _partition_bidirectional_backtrack(graph, p, hw, lam, L, R, feas)
+
+
+def _partition_bidirectional_backtrack(graph, p, hw, lam, L, R, feas) -> Partition:
+    """Full DP keeping one table per generation for exact backtracking."""
+    n = graph.n
+    tables: list[dict[tuple[int, int], tuple[float, tuple[int, int] | None]]] = []
+    t0: dict[tuple[int, int], tuple[float, tuple[int, int] | None]] = {}
+    for i, (jlo, jhi) in feas.items():
+        # j == i is a valid (middle-empty) state; it can only close the DP.
+        for j in range(max(jlo, i), min(jhi, n - 1) + 1):
+            t0[(i, j)] = (max(L(0, i), R(j, n)), None)
+    tables.append(t0)
+    gens = (p - 2) // 2
+    for _ in range(gens):
+        prev = tables[-1]
+        ndp: dict[tuple[int, int], tuple[float, tuple[int, int] | None]] = {}
+        for (i2, j2), (c_prev, _) in prev.items():
+            for i in range(i2 + 1, n):
+                if i not in feas:
+                    continue
+                jlo, jhi = feas[i]
+                lcost = L(i2, i)
+                lb = max(c_prev, lcost)
+                for j in range(max(jlo, i), min(jhi, j2 - 1) + 1):
+                    cand = max(lb, R(j, j2))
+                    key = (i, j)
+                    if key not in ndp or cand < ndp[key][0]:
+                        ndp[key] = (cand, (i2, j2))
+        tables.append(ndp)
+
+    final = tables[-1]
+    best, best_state = INF, None
+    for (i, j), (c, _) in final.items():
+        if j == i and c < best:
+            best, best_state = c, (i, j)
+    if best_state is None:
+        raise ValueError(
+            f"no feasible {p}-stage bidirectional partition "
+            f"(graph n={n}, skips={len(graph.skips)})"
+        )
+
+    # collect boundaries generation by generation
+    pre_cuts, suf_cuts = [], []
+    state = best_state
+    for g in range(len(tables) - 1, -1, -1):
+        i, j = state
+        pre_cuts.append(i)
+        suf_cuts.append(j)
+        parent = tables[g][state][1]
+        if parent is None:
+            break
+        state = parent
+    pre_cuts.reverse()           # increasing prefix ends
+    suf_cuts.sort()              # increasing suffix starts
+    cuts = [0] + pre_cuts + suf_cuts[1:] + [n]
+    # pre_cuts[-1] == suf_cuts[0] (middle closed); stage boundaries are
+    # 0, pre..., (=mid), suf..., n
+    return _mk_partition(graph, cuts, True, hw, lam)
+
+
+# --------------------------------------------------------------------------
+# Exact reference (paper's c(i',i,j,j') predicate, any skip structure)
+# --------------------------------------------------------------------------
+
+def partition_reference(
+    graph: BlockGraph, p: int, *,
+    hw: Hardware = TPU_V5E, lam: float = 1.0,
+) -> Partition:
+    """Brute-force over all cut placements; checks the paper's symmetric
+    stage constraint exactly: skip (c1, c2) with c1 in stage q requires c2
+    in stage p-1-q (0-indexed; Eq. (4)'s c(i',i,j,j') predicate).  Device
+    collocation follows from the fold.  Exponential — tests only."""
+    n = graph.n
+    if p % 2 != 0:
+        raise ValueError("reference partitioner assumes even stage count")
+
+    def stage_symmetric(part: Partition) -> bool:
+        return all(
+            part.stage_of_block(e.dst) == p - 1 - part.stage_of_block(e.src)
+            for e in graph.skips)
+
+    best_cuts, best_cost = None, INF
+    for inner in itertools.combinations(range(1, n), p - 1):
+        cuts = (0,) + inner + (n,)
+        part = _mk_partition(graph, cuts, True, hw, lam)
+        if not stage_symmetric(part):
+            continue
+        if part.objective < best_cost:
+            best_cost, best_cuts = part.objective, cuts
+    if best_cuts is None:
+        raise ValueError("no feasible partition (reference)")
+    return _mk_partition(graph, best_cuts, True, hw, lam)
+
+
+# --------------------------------------------------------------------------
+# Entry point
+# --------------------------------------------------------------------------
+
+def partition(
+    graph: BlockGraph, num_devices: int, *,
+    hw: Hardware = TPU_V5E, lam: float = 1.0, force_wave: bool | None = None,
+) -> Partition:
+    """PULSE partitioning entry point.
+
+    With skip edges (C != empty), uses S = 2D folded stages and the
+    bidirectional DP (paper default, §V-B).  Without skips, uses S = D
+    linear partitioning + 1F1B unless ``force_wave`` requests folding.
+    """
+    wave = force_wave if force_wave is not None else bool(graph.skips)
+    if wave:
+        return partition_bidirectional(graph, 2 * num_devices, hw=hw, lam=lam)
+    return linear_partition(graph, num_devices, hw=hw, lam=lam, folded=False)

@@ -1,0 +1,61 @@
+"""Per-block cost profiling (paper §IV-A "profile layer runtimes").
+
+Two paths:
+
+- ``analytic_block_costs``: FLOPs / peak + bytes / HBM-bandwidth roofline
+  estimate — deterministic, used for dry-runs and the tuner on CPU where
+  wall-clock timing of TPU kernels is meaningless.
+- ``measure_block_times``: real wall-clock timing of jitted per-block apply
+  functions (usable on any backend; used by tests and the CPU examples).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+import jax
+
+from repro.core.graph import Block, BlockGraph
+from repro.core.hw import Hardware, TPU_V5E
+
+
+def analytic_time(flops: float, bytes_moved: float, hw: Hardware = TPU_V5E) -> float:
+    """max(compute, memory) roofline time for one block."""
+    return max(flops / hw.peak_flops, bytes_moved / hw.hbm_bw)
+
+
+def analytic_block_costs(
+    blocks: Sequence[Block], hw: Hardware = TPU_V5E
+) -> tuple[Block, ...]:
+    """Return blocks with ``fwd_time`` replaced by the roofline estimate."""
+    out = []
+    for b in blocks:
+        bytes_moved = 2 * b.param_bytes + 2 * b.act_bytes  # read params+act, write act
+        t = analytic_time(b.flops, bytes_moved, hw)
+        out.append(Block(b.name, t, b.param_bytes, b.act_bytes, b.skip_bytes, b.flops))
+    return tuple(out)
+
+
+def measure_block_times(
+    fns: Sequence[Callable],
+    args: Sequence[tuple],
+    *,
+    warmup: int = 1,
+    iters: int = 3,
+) -> list[float]:
+    """Wall-clock seconds per call for each jitted block function."""
+    times = []
+    for fn, a in zip(fns, args):
+        jfn = jax.jit(fn)
+        for _ in range(warmup):
+            jax.block_until_ready(jfn(*a))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(jfn(*a))
+        times.append((time.perf_counter() - t0) / iters)
+    return times
+
+
+def reprofile_graph(graph: BlockGraph, hw: Hardware = TPU_V5E) -> BlockGraph:
+    """Analytically re-profile every block of a graph for hardware ``hw``."""
+    return BlockGraph(analytic_block_costs(graph.blocks, hw), graph.skips)

@@ -1,0 +1,447 @@
+"""Pipeline schedule synthesis under collocation constraints (paper §V).
+
+Tasks are *virtual stages*: for a partition with S pipeline stages, each
+microbatch m executes the chain
+
+    F_0 -> F_1 -> ... -> F_{S-1} -> B_{S-1} -> ... -> B_0
+
+(2S unit tasks).  F_s and B_s run on the stage's device; skip collocation
+pins stage s and its mirror onto one device (folded mapping).
+
+Components:
+
+- ``ilp_schedule``     — the paper's ILP (Eqs. 6-13) via scipy/HiGHS; exact
+                         bubble-minimal schedules for small instances.
+                         Supports free device mapping or a fixed mapping.
+- ``greedy_schedule``  — scalable template generator (backward-first list
+                         scheduling).  Recovers classic 1F1B when S == D and
+                         the Hanayo-style wave when S == 2D folded; this is
+                         the "replicate the small-instance pattern" mechanism
+                         of §V-B.
+- ``validate_schedule`` — checks all six constraint families.
+- ``simulate``          — event-driven makespan with real per-stage durations
+                          and p2p latency; bubble-ratio reporting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Virtual-stage helpers
+# --------------------------------------------------------------------------
+
+def num_virtual(S: int) -> int:
+    return 2 * S
+
+def stage_of_virtual(v: int, S: int) -> int:
+    return v if v < S else 2 * S - 1 - v
+
+def is_backward(v: int, S: int) -> bool:
+    return v >= S
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    virtual: int      # virtual stage index (0..2S-1)
+    microbatch: int
+    device: int
+    step: int         # scheduling step (unit slot)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    S: int            # pipeline stages
+    M: int            # microbatches
+    D: int            # devices
+    placements: tuple[Placement, ...]
+
+    @property
+    def makespan(self) -> int:
+        return 1 + max(p.step for p in self.placements)
+
+    def grid(self) -> list[list[Placement | None]]:
+        g: list[list[Placement | None]] = [
+            [None] * self.makespan for _ in range(self.D)
+        ]
+        for p in self.placements:
+            g[p.device][p.step] = p
+        return g
+
+    def bubble_ratio(self) -> float:
+        busy = len(self.placements)
+        return 1.0 - busy / (self.D * self.makespan)
+
+    def device_of_stage_map(self) -> dict[int, int]:
+        out: dict[int, int] = {}
+        for p in self.placements:
+            s = stage_of_virtual(p.virtual, self.S)
+            out.setdefault(s, p.device)
+        return out
+
+    def to_ascii(self) -> str:
+        """Fig. 8/9-style diagram: rows = devices, columns = steps."""
+        g = self.grid()
+        width = max(3, len(str(self.M - 1)) + 2)
+        lines = []
+        for d, row in enumerate(g):
+            cells = []
+            for p in row:
+                if p is None:
+                    cells.append("." * width)
+                else:
+                    kind = "B" if is_backward(p.virtual, self.S) else "F"
+                    s = stage_of_virtual(p.virtual, self.S)
+                    cells.append(f"{kind}{s}{p.microbatch}".ljust(width))
+            lines.append(f"d{d}| " + " ".join(cells))
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# Validation (paper constraints (6)-(11))
+# --------------------------------------------------------------------------
+
+def validate_schedule(
+    sched: Schedule,
+    device_of_stage: Callable[[int], int] | None = None,
+    collocated: Sequence[tuple[int, int]] = (),
+) -> list[str]:
+    """Return a list of violated-constraint descriptions (empty == valid)."""
+    errors: list[str] = []
+    S, M, D = sched.S, sched.M, sched.D
+    seen: dict[tuple[int, int], Placement] = {}
+    for p in sched.placements:
+        key = (p.virtual, p.microbatch)
+        if key in seen:
+            errors.append(f"(6) duplicate assignment {key}")
+        seen[key] = p
+    for v in range(num_virtual(S)):
+        for m in range(M):
+            if (v, m) not in seen:
+                errors.append(f"(6) missing task v={v} m={m}")
+    if errors:
+        return errors
+
+    # (7) device exclusivity
+    busy: dict[tuple[int, int], Placement] = {}
+    for p in sched.placements:
+        key = (p.device, p.step)
+        if key in busy:
+            errors.append(f"(7) device {p.device} double-booked at t={p.step}")
+        busy[key] = p
+
+    # (8) fixed device mapping per stage (and F/B of a stage share a device)
+    dev_of: dict[int, int] = {}
+    for p in sched.placements:
+        s = stage_of_virtual(p.virtual, S)
+        if s in dev_of and dev_of[s] != p.device:
+            errors.append(f"(8) stage {s} on devices {dev_of[s]} and {p.device}")
+        dev_of.setdefault(s, p.device)
+    if device_of_stage is not None:
+        for s, d in dev_of.items():
+            if device_of_stage(s) != d:
+                errors.append(f"(8) stage {s} expected dev {device_of_stage(s)} got {d}")
+
+    # (9) collocation
+    for s1, s2 in collocated:
+        if dev_of.get(s1) != dev_of.get(s2):
+            errors.append(f"(9) stages {s1},{s2} not collocated")
+
+    # (10) sequential execution within a microbatch
+    for m in range(M):
+        for v in range(1, num_virtual(S)):
+            if seen[(v, m)].step < seen[(v - 1, m)].step + 1:
+                errors.append(f"(10) v={v} m={m} starts before v-1 finishes")
+
+    # (11) monotonic microbatch ordering per stage
+    for v in range(num_virtual(S)):
+        for m in range(1, M):
+            if seen[(v, m)].step <= seen[(v, m - 1)].step:
+                errors.append(f"(11) v={v}: m={m} not after m={m-1}")
+    return errors
+
+
+# --------------------------------------------------------------------------
+# Greedy template generator (scalable; 1F1B / wave patterns)
+# --------------------------------------------------------------------------
+
+def greedy_schedule(
+    S: int,
+    M: int,
+    device_of_stage: Callable[[int], int],
+    D: int,
+    *,
+    backward_first: bool = True,
+    max_steps: int | None = None,
+) -> Schedule:
+    """Backward-first list scheduling.
+
+    Reproduces 1F1B when S == D with the identity mapping, and the wave
+    schedule when S == 2D with the folded mapping (paper Figs. 8/9).
+    """
+    V = num_virtual(S)
+    done_at = -np.ones((V, M), dtype=int)      # finish step of each task
+    placed: list[Placement] = []
+    remaining = V * M
+    t = 0
+    horizon = max_steps or (V * M + 4 * (S + M))
+    while remaining and t < horizon:
+        for d in range(D):
+            best = None
+            for v in range(V):
+                if device_of_stage(stage_of_virtual(v, S)) != d:
+                    continue
+                for m in range(M):
+                    if done_at[v, m] >= 0:
+                        continue
+                    if v > 0 and not (0 <= done_at[v - 1, m] <= t - 1):
+                        break  # chain: earlier microbatches of this v first
+                    if m > 0 and done_at[v, m - 1] < 0:
+                        continue
+                    if m > 0 and done_at[v, m - 1] > t - 1:
+                        continue
+                    # candidate; rank: backward first, then microbatch, then depth
+                    key = (
+                        0 if (backward_first and is_backward(v, S)) else 1,
+                        m,
+                        -v,
+                    )
+                    if best is None or key < best[0]:
+                        best = (key, v, m)
+                    break  # only the first pending microbatch of v is eligible
+            if best is not None:
+                _, v, m = best
+                placed.append(Placement(v, m, d, t))
+                done_at[v, m] = t
+                remaining -= 1
+        t += 1
+    if remaining:
+        raise RuntimeError("greedy scheduler did not finish within horizon")
+    return Schedule(S, M, D, tuple(placed))
+
+
+def template_1f1b(D: int, M: int) -> Schedule:
+    """Classic 1F1B: S == D stages, identity mapping (paper Fig. 8)."""
+    return greedy_schedule(D, M, lambda s: s, D)
+
+
+def template_wave(D: int, M: int) -> Schedule:
+    """PULSE wave: S == 2D folded stages (paper Fig. 9)."""
+    S = 2 * D
+    return greedy_schedule(S, M, lambda s: min(s, S - 1 - s), D)
+
+
+# --------------------------------------------------------------------------
+# ILP synthesizer (paper Eqs. (6)-(13)) via scipy HiGHS
+# --------------------------------------------------------------------------
+
+def ilp_schedule(
+    S: int,
+    M: int,
+    D: int,
+    *,
+    device_of_stage: Callable[[int], int] | None = None,
+    collocated: Sequence[tuple[int, int]] = (),
+    horizon: int | None = None,
+    time_limit: float = 120.0,
+) -> Schedule:
+    """Solve the scheduling ILP exactly.
+
+    ``device_of_stage`` fixes the stage->device mapping (partitioner output);
+    if None, device assignment variables y[s,d] are free (Eqs. 8/9/13) with
+    stage 0 anchored to device 0.
+    """
+    from scipy import sparse
+    from scipy.optimize import LinearConstraint, milp, Bounds
+
+    V = num_virtual(S)
+    # A feasible horizon: greedy gives an upper bound.
+    if horizon is None:
+        if device_of_stage is not None:
+            horizon = greedy_schedule(S, M, device_of_stage, D).makespan
+        else:
+            horizon = V * M
+    T = horizon
+
+    def xid(v: int, m: int, d: int, t: int) -> int:
+        return ((v * M + m) * D + d) * T + t
+
+    nx = V * M * D * T
+    free_map = device_of_stage is None
+    ny = S * D if free_map else 0
+
+    def yid(s: int, d: int) -> int:
+        return nx + s * D + d
+
+    tmax_id = nx + ny
+    nvar = nx + ny + 1
+
+    rows, cols, vals, lbs, ubs = [], [], [], [], []
+    r = 0
+
+    def add_row(entries: list[tuple[int, float]], lo: float, hi: float):
+        nonlocal r
+        for c, a in entries:
+            rows.append(r); cols.append(c); vals.append(a)
+        lbs.append(lo); ubs.append(hi)
+        r += 1
+
+    # (6) unique assignment
+    for v in range(V):
+        for m in range(M):
+            add_row([(xid(v, m, d, t), 1.0) for d in range(D) for t in range(T)],
+                    1.0, 1.0)
+
+    # (7) device exclusivity
+    for d in range(D):
+        for t in range(T):
+            add_row([(xid(v, m, d, t), 1.0) for v in range(V) for m in range(M)],
+                    -np.inf, 1.0)
+
+    # (8) device mapping
+    if free_map:
+        # sum_d y[s,d] == 1 ; link: sum_t x[v,m,d,t] == y[stage(v),d]
+        for s in range(S):
+            add_row([(yid(s, d), 1.0) for d in range(D)], 1.0, 1.0)
+        for v in range(V):
+            s = stage_of_virtual(v, S)
+            for m in range(M):
+                for d in range(D):
+                    ent = [(xid(v, m, d, t), 1.0) for t in range(T)]
+                    ent.append((yid(s, d), -1.0))
+                    add_row(ent, 0.0, 0.0)
+        # (9) collocation + anchor
+        for s1, s2 in collocated:
+            for d in range(D):
+                add_row([(yid(s1, d), 1.0), (yid(s2, d), -1.0)], 0.0, 0.0)
+        add_row([(yid(0, 0), 1.0)], 1.0, 1.0)
+    else:
+        # pin x to the fixed mapping: x[v,m,d,t] == 0 for d != dev(stage)
+        for v in range(V):
+            dv = device_of_stage(stage_of_virtual(v, S))
+            for m in range(M):
+                for d in range(D):
+                    if d != dv:
+                        add_row([(xid(v, m, d, t), 1.0) for t in range(T)],
+                                0.0, 0.0)
+
+    # times: time(v,m) = sum t * x
+    def time_entries(v: int, m: int, sign: float) -> list[tuple[int, float]]:
+        return [
+            (xid(v, m, d, t), sign * t) for d in range(D) for t in range(T)
+        ]
+
+    # (10) sequential execution
+    for m in range(M):
+        for v in range(1, V):
+            add_row(time_entries(v, m, 1.0) + time_entries(v - 1, m, -1.0),
+                    1.0, np.inf)
+    # (11) monotonic microbatches
+    for v in range(V):
+        for m in range(1, M):
+            add_row(time_entries(v, m, 1.0) + time_entries(v, m - 1, -1.0),
+                    1.0, np.inf)
+    # (12) T_max >= time(V-1, m)  (chain+monotone make this the global max)
+    for m in range(M):
+        add_row([(tmax_id, 1.0)] + time_entries(V - 1, m, -1.0), 0.0, np.inf)
+
+    A = sparse.csr_matrix((vals, (rows, cols)), shape=(r, nvar))
+    constraints = LinearConstraint(A, np.array(lbs), np.array(ubs))
+
+    # objective: min T_max + eps * sum(t * x)  (canonical early schedules)
+    c = np.zeros(nvar)
+    c[tmax_id] = 1.0
+    eps = 1.0 / (V * M * T * (T + 1))
+    for v in range(V):
+        for m in range(M):
+            for d in range(D):
+                for t in range(T):
+                    c[xid(v, m, d, t)] = eps * t
+
+    integrality = np.ones(nvar)
+    res = milp(
+        c=c,
+        constraints=constraints,
+        integrality=integrality,
+        bounds=Bounds(0, np.concatenate([np.ones(nx + ny), [T]])),
+        options={"time_limit": time_limit, "presolve": True},
+    )
+    if res.status != 0 or res.x is None:
+        raise RuntimeError(f"ILP failed: status={res.status} msg={res.message}")
+    x = np.round(res.x[:nx]).astype(int).reshape(V, M, D, T)
+    placements = []
+    for v in range(V):
+        for m in range(M):
+            d, t = np.argwhere(x[v, m] == 1)[0]
+            placements.append(Placement(v, m, int(d), int(t)))
+    return Schedule(S, M, D, tuple(placements))
+
+
+# --------------------------------------------------------------------------
+# Simulation with real durations (wall-clock model)
+# --------------------------------------------------------------------------
+
+def simulate(
+    sched: Schedule,
+    fwd_time_of_stage: Sequence[float],
+    *,
+    bwd_ratio: float = 2.0,
+    p2p_time: float = 0.0,
+) -> tuple[float, float]:
+    """Event-driven makespan with real durations.
+
+    Respects the schedule's per-device task *ordering* (not its unit slots);
+    a task starts when (a) its predecessor in the chain has finished
+    (+``p2p_time`` if it crossed devices) and (b) its device is free.
+    Returns ``(makespan_seconds, bubble_ratio)``.
+    """
+    S = sched.S
+    by_dev: dict[int, list[Placement]] = {}
+    for p in sorted(sched.placements, key=lambda p: p.step):
+        by_dev.setdefault(p.device, []).append(p)
+    finish: dict[tuple[int, int], float] = {}
+    dev_free = {d: 0.0 for d in range(sched.D)}
+    dev_of: dict[int, int] = {
+        stage_of_virtual(p.virtual, S): p.device for p in sched.placements
+    }
+    pending = {d: list(ps) for d, ps in by_dev.items()}
+    busy_time = 0.0
+    progressed = True
+    n_done = 0
+    total = len(sched.placements)
+    while n_done < total and progressed:
+        progressed = False
+        for d, queue in pending.items():
+            while queue:
+                p = queue[0]
+                key = (p.virtual, p.microbatch)
+                if p.virtual > 0:
+                    dep = (p.virtual - 1, p.microbatch)
+                    if dep not in finish:
+                        break
+                    ready = finish[dep]
+                    s_prev = stage_of_virtual(p.virtual - 1, S)
+                    s_cur = stage_of_virtual(p.virtual, S)
+                    if dev_of[s_prev] != dev_of[s_cur]:
+                        ready += p2p_time
+                else:
+                    ready = 0.0
+                s = stage_of_virtual(p.virtual, S)
+                dur = fwd_time_of_stage[s] * (
+                    bwd_ratio if is_backward(p.virtual, S) else 1.0
+                )
+                start = max(ready, dev_free[d])
+                finish[key] = start + dur
+                dev_free[d] = start + dur
+                busy_time += dur
+                queue.pop(0)
+                n_done += 1
+                progressed = True
+    if n_done < total:
+        raise RuntimeError("simulation deadlocked (invalid schedule ordering)")
+    makespan = max(finish.values())
+    bubble = 1.0 - busy_time / (sched.D * makespan)
+    return makespan, bubble

@@ -1,0 +1,187 @@
+"""Hybrid parallelism tuner (paper §VI, Eqs. 14-17).
+
+Given per-stage profiled costs, enumerate every factorization ``N = P * G``
+and every power-of-two microbatch size ``b``; reject configurations whose
+peak memory (Eq. 14) exceeds the device budget; score the rest with the
+iteration-time model (Eq. 15 + 16) and return the argmin of per-sample time
+(Eq. 17).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+from repro.core.graph import BlockGraph
+from repro.core.hw import Hardware, TPU_V5E
+from repro.core import partition as part_mod
+from repro.core.schedule import simulate, template_1f1b, template_wave
+
+
+@dataclasses.dataclass(frozen=True)
+class StageProfile:
+    """Per-stage profiled quantities; indices follow pipeline stage order."""
+
+    fwd_time_per_sample: tuple[float, ...]   # T_f^s(b) = b * this
+    param_bytes: tuple[int, ...]             # M_theta^s
+    act_bytes_per_sample: tuple[int, ...]    # M_a^s
+    out_bytes_per_sample: tuple[int, ...]    # M_o^s
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.fwd_time_per_sample)
+
+
+def profile_partition(graph: BlockGraph, part: part_mod.Partition) -> StageProfile:
+    f, p, a, o = [], [], [], []
+    for s in range(part.num_stages):
+        lo, hi = part.stage_range(s)
+        blocks = graph.blocks[lo:hi]
+        f.append(sum(b.fwd_time for b in blocks))
+        p.append(sum(b.param_bytes for b in blocks))
+        a.append(sum(b.act_bytes + b.skip_bytes for b in blocks))
+        o.append(blocks[-1].act_bytes)
+    return StageProfile(tuple(f), tuple(p), tuple(a), tuple(o))
+
+
+@dataclasses.dataclass(frozen=True)
+class TunerChoice:
+    P: int                 # pipeline-parallel degree (devices per pipeline)
+    G: int                 # data-parallel replicas
+    b: int                 # microbatch size
+    t_sample: float        # modelled seconds per training sample (Eq. 17)
+    t_sched: float         # modelled iteration time (Eq. 15)
+    peak_mem: float        # modelled peak bytes (Eq. 14)
+    wave: bool             # folded wave (S=2P) vs plain 1F1B (S=P)
+
+
+def peak_memory(
+    prof: StageProfile, P: int, b: int, *, wave: bool, param_state_factor: float = 7.0
+) -> float:
+    """Eq. (14).  The busiest devices are the innermost collocated pair
+    (stages P-1 and P, 0-indexed) which retain activations for all
+    in-flight microbatches (P of them in the wave steady state)."""
+    S = prof.num_stages
+    if wave:
+        i, j = P - 1, P  # innermost pair on the same device
+        m_theta = prof.param_bytes[i] + prof.param_bytes[j]
+        m_act = prof.act_bytes_per_sample[i] + prof.act_bytes_per_sample[j]
+        m_out = prof.out_bytes_per_sample[i - 1] if i >= 1 else prof.out_bytes_per_sample[0]
+    else:
+        # 1F1B: stage 0 retains P microbatches
+        m_theta = prof.param_bytes[0]
+        m_act = prof.act_bytes_per_sample[0]
+        m_out = prof.out_bytes_per_sample[0]
+    return (
+        param_state_factor * m_theta
+        + P * m_act * b
+        + P * m_out * b
+    )
+
+
+def t_allreduce(param_bytes: float, G: int, hw: Hardware) -> float:
+    """Eq. (16): ring all-reduce of the largest stage's gradients."""
+    if G <= 1:
+        return 0.0
+    return hw.t_lat + 2.0 * (G - 1) * param_bytes / (G * hw.intra_bw)
+
+
+def t_sched_paper(
+    prof: StageProfile, P: int, b: int, G: int, hw: Hardware
+) -> float:
+    """Eq. (15), verbatim: (10P-4) T_f(b) + (10P-12)(t_lat + b M_o / B) + T_AR.
+
+    The closed form assumes the default wave configuration with M = 2P
+    microbatches in flight (paper's minimal-stage setting S = 2P)."""
+    t_f = max(prof.fwd_time_per_sample) * b
+    m_o = max(prof.out_bytes_per_sample) * b
+    m_theta = max(prof.param_bytes)
+    p2p = hw.t_lat + m_o / hw.inter_bw
+    return (
+        (10 * P - 4) * t_f
+        + max(10 * P - 12, 0) * p2p
+        + t_allreduce(m_theta, G, hw)
+    )
+
+
+def t_sched_simulated(
+    prof: StageProfile, P: int, b: int, G: int, hw: Hardware,
+    *, microbatches: int, wave: bool,
+) -> float:
+    """Higher-fidelity alternative: event-driven simulation of the actual
+    template schedule with per-stage durations (beyond-paper option)."""
+    sched = template_wave(P, microbatches) if wave else template_1f1b(P, microbatches)
+    times = [t * b for t in prof.fwd_time_per_sample]
+    m_o = max(prof.out_bytes_per_sample) * b
+    mk, _ = simulate(sched, times, bwd_ratio=2.0,
+                     p2p_time=hw.t_lat + m_o / hw.inter_bw)
+    return mk + t_allreduce(max(prof.param_bytes), G, hw)
+
+
+def tune(
+    graph: BlockGraph,
+    N: int,
+    *,
+    hw: Hardware = TPU_V5E,
+    max_microbatch: int = 512,
+    lam: float = 1.0,
+    use_simulation: bool = False,
+    microbatches_per_iter: Callable[[int], int] | None = None,
+) -> list[TunerChoice]:
+    """Enumerate (P, G, b) and return all feasible choices, best first.
+
+    ``N`` is the total device count.  ``microbatches_per_iter(P)`` defaults
+    to the paper's M = 2P wave setting.
+    """
+    # Eq. (15)'s (10P-4) closed form corresponds to M = P microbatches per
+    # iteration (6*T_f steady-state per microbatch per device + ~4P ramp),
+    # which makes Eq. (17)'s denominator b*P*G the per-iteration sample count.
+    if microbatches_per_iter is None:
+        microbatches_per_iter = lambda P: max(P, 1)
+    wave = bool(graph.skips)
+    choices: list[TunerChoice] = []
+    for P in sorted({d for d in range(1, N + 1) if N % d == 0}):
+        G = N // P
+        if wave and P >= 1:
+            S = 2 * P
+        else:
+            S = P
+        if S > graph.n or S < 1:
+            continue
+        try:
+            if P == 1:
+                part = part_mod.Partition((0, graph.n), False, 0.0, (0.0,))
+            else:
+                part = part_mod.partition(graph, P, hw=hw, lam=lam,
+                                          force_wave=wave)
+        except ValueError:
+            continue
+        prof = profile_partition(graph, part)
+        b = 1
+        while b <= max_microbatch:
+            mem = peak_memory(prof, max(P, 1), b, wave=wave and P > 1)
+            if mem >= hw.mem_limit:
+                break
+            M = microbatches_per_iter(P)
+            if use_simulation and P > 1:
+                t_iter = t_sched_simulated(prof, P, b, G, hw,
+                                           microbatches=M, wave=wave)
+            elif P > 1:
+                t_iter = t_sched_paper(prof, P, b, G, hw)
+            else:
+                # pure DP: compute + all-reduce
+                t_f = sum(prof.fwd_time_per_sample) * b
+                t_iter = 3.0 * t_f * M + t_allreduce(
+                    sum(prof.param_bytes), G, hw
+                )
+            samples = b * M * G
+            choices.append(TunerChoice(
+                P=P, G=G, b=b,
+                t_sample=t_iter / samples,
+                t_sched=t_iter,
+                peak_mem=mem,
+                wave=wave and P > 1,
+            ))
+            b *= 2
+    choices.sort(key=lambda c: c.t_sample)
+    return choices

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticTokenDataset, SyntheticLatentDataset,
+                                 ShardedLoader)

@@ -1,0 +1,2 @@
+from repro.kernels.linear_scan.ops import gated_linear_scan
+from repro.kernels.linear_scan.ref import gated_linear_scan_reference

@@ -1,0 +1,70 @@
+"""Chunked gated linear scan as a Pallas TPU kernel.
+
+TPU adaptation: the recurrence h_t = a_t*h_{t-1} + x_t is sequential in t
+but embarrassingly parallel over channels.  We put channels on the lane
+dimension (128-wide VPU lanes), tile time into VMEM-resident chunks, and
+carry the running state in a VMEM scratch buffer that persists across the
+sequentially-iterated time-chunk grid dimension — the TPU-native analogue
+of the GPU warp-scan formulations.
+
+Grid: (B*C/block_c, T/block_t) — the second dimension iterates
+sequentially on TPU, so ``state`` scratch carries between chunks of the
+same row block.  Within a chunk the scan is an unrolled loop over rows of
+the (block_t, block_c) tile (each row is a full vector op).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, o_ref, state_ref, *, block_t: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[...].astype(jnp.float32)     # (block_t, block_c)
+    x = x_ref[...].astype(jnp.float32)
+    h = state_ref[...]                     # (1, block_c)
+
+    rows = []
+    for t in range(block_t):               # static unroll within the tile
+        h = a[t][None, :] * h + x[t][None, :]
+        rows.append(h)
+    out = jnp.concatenate(rows, axis=0)
+    state_ref[...] = h
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def gated_linear_scan_fwd(a: jax.Array, x: jax.Array, *,
+                          block_t: int = 128, block_c: int = 128,
+                          interpret: bool = False) -> jax.Array:
+    """a, x: (R, T, C) — R independent rows (batch*heads).  T % block_t == 0,
+    C % block_c == 0."""
+    R, T, C = x.shape
+    bt, bc = min(block_t, T), min(block_c, C)
+    assert T % bt == 0 and C % bc == 0
+    kernel = functools.partial(_kernel, block_t=bt)
+    grid = (R * (C // bc), T // bt)
+
+    def idx(r, t):
+        return (r // (C // bc), t, r % (C // bc))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bt, bc), idx),
+            pl.BlockSpec((None, bt, bc), idx),
+        ],
+        out_specs=pl.BlockSpec((None, bt, bc), idx),
+        out_shape=jax.ShapeDtypeStruct((R, T, C), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bc), jnp.float32)],
+        interpret=interpret,
+    )(a, x)

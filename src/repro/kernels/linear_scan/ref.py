@@ -1,0 +1,27 @@
+"""Oracle: gated linear recurrence  h_t = a_t * h_{t-1} + x_t  (elementwise).
+
+This is the core state update shared by Mamba2 (per-head decay) and mLSTM
+(per-head forget gates) after the input projections; the chunked Pallas
+kernel parallelises it over (batch*channel) rows and streams time in VMEM
+chunks.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def gated_linear_scan_reference(a: jax.Array, x: jax.Array,
+                                h0: jax.Array | None = None) -> jax.Array:
+    """a, x: (B, T, C) with 0 <= a <= 1 typically.  Returns h: (B, T, C)."""
+    B, T, C = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, C), jnp.float32)
+
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+
+    a32 = jnp.swapaxes(a.astype(jnp.float32), 0, 1)
+    x32 = jnp.swapaxes(x.astype(jnp.float32), 0, 1)
+    _, hs = jax.lax.scan(step, h0, (a32, x32))
+    return jnp.swapaxes(hs, 0, 1).astype(x.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.skip_matmul.ops import skip_concat_matmul
+from repro.kernels.skip_matmul.ref import skip_concat_matmul_reference

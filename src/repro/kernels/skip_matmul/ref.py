@@ -1,0 +1,10 @@
+"""Oracle: decoder-side skip projection  y = concat([h, s], -1) @ W."""
+import jax
+import jax.numpy as jnp
+
+
+def skip_concat_matmul_reference(h: jax.Array, s: jax.Array,
+                                 w: jax.Array) -> jax.Array:
+    """h: (M, D); s: (M, D); w: (2D, N).  Returns (M, N) in h.dtype."""
+    x = jnp.concatenate([h, s], axis=-1)
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(h.dtype)

@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh).
+
+For each cell this driver:
+  1. builds the train/serve step for the arch's ParallelPlan,
+  2. ``jax.jit(step).lower(*ShapeDtypeStructs)`` (no allocation),
+  3. ``.compile()`` — proving the sharding config is coherent,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` / the parsed
+     collective schedule into an incremental JSON
+     (results/dryrun_<mesh>.json) consumed by benchmarks/roofline.py.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_arch, list_archs, ASSIGNED, PAPER_ARCHS
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, dp_size
+from repro.runtime.hlo_analysis import collective_bytes, cost_summary, \
+    memory_summary
+from repro.train import steps as steps_mod
+
+
+def adjust_plan(plan, bundle, shape, mesh):
+    """Clamp PP microbatch count to the per-replica batch on this mesh."""
+    if not plan.strategy.startswith("pp"):
+        return plan
+    dp = dp_size(mesh, plan.batch_axes)
+    per_replica = shape.global_batch // dp
+    M = min(plan.microbatches, per_replica)
+    return dataclasses.replace(plan, microbatches=max(M, 1))
+
+
+def build_cell(bundle, shape_name: str, mesh):
+    shape = SHAPES[shape_name]
+    plan = adjust_plan(bundle.plans[shape_name], bundle, shape, mesh)
+    if shape.kind in ("train", "prefill"):
+        if plan.strategy.startswith("pp"):
+            adapter = bundle.make_adapter(plan, mesh)
+            batch = bundle.batch_struct(shape, plan)
+            step, example, in_sh, out_sh = steps_mod.build_pp_train_step(
+                adapter, mesh, batch, plan, bundle.make_microbatches)
+        elif shape.kind == "train":
+            batch = bundle.batch_struct(shape, plan)
+            step, example, in_sh, out_sh = steps_mod.build_sharded_train_step(
+                bundle.loss_fn, bundle.init_fn, batch, mesh, plan)
+        else:  # prefill: forward pass only (inference compute)
+            batch = bundle.batch_struct(shape, plan)
+            step, example, in_sh, out_sh = steps_mod.build_forward_step(
+                bundle.loss_fn, bundle.init_fn, batch, mesh, plan)
+    else:  # decode
+        decode_fn = bundle.make_decode_fn(shape)
+        cache = bundle.cache_struct(shape)
+        B = shape.global_batch
+        token = {"token": jax.ShapeDtypeStruct((B, 1), jax.numpy.int32)}
+
+        def serve(params, tok, caches):
+            return decode_fn(params, tok["token"], caches)
+
+        step, example, in_sh, out_sh = steps_mod.build_sharded_serve_step(
+            serve, bundle.init_fn, cache, token, mesh, plan)
+    return step, example, plan
+
+
+def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool) -> dict:
+    bundle = get_arch(arch)
+    support = bundle.shape_support.get(shape_name, "unknown shape")
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "params": bundle.param_count,
+        "active_params": bundle.active_param_count,
+    }
+    if support != "ok":
+        rec["status"] = "skipped"
+        rec["reason"] = support
+        return rec
+    t0 = time.time()
+    try:
+        step, example, plan = build_cell(bundle, shape_name, mesh)
+        lowered = step.lower(*example)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rec.update({
+            "status": "ok",
+            "plan": {"strategy": plan.strategy, "tp": plan.tp_axis,
+                     "ep": plan.ep, "fsdp": list(plan.fsdp_axes),
+                     "batch_axes": list(plan.batch_axes),
+                     "microbatches": plan.microbatches,
+                     "int8_opt": plan.int8_optimizer,
+                     "notes": plan.notes},
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": memory_summary(compiled),
+            "cost": cost_summary(compiled),
+        })
+        stats = collective_bytes(compiled.as_text())
+        rec["collectives"] = {
+            "bytes_by_kind": stats.bytes_by_kind,
+            "count_by_kind": stats.count_by_kind,
+        }
+        print(f"[dryrun] {arch} x {shape_name}: OK "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s; "
+              f"temp={rec['memory'].get('temp_size_in_bytes', 0) or 0:,}B; "
+              f"colls: {stats})")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] {arch} x {shape_name}: FAILED {rec['error'][:200]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--assigned-only", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"mesh: {mesh_axis_sizes(mesh)} over {mesh.devices.size} devices")
+
+    out_path = args.out or os.path.join(
+        "results", f"dryrun_{'2x16x16' if args.multi_pod else '16x16'}.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    results = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+
+    if args.all or args.assigned_only:
+        archs = ASSIGNED if args.assigned_only else ASSIGNED + PAPER_ARCHS
+        cells = [(a, s) for a in archs
+                 for s in get_arch(a).plans.keys()]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        key = f"{arch}|{shape}"
+        if key in results and results[key].get("status") in ("ok", "skipped") \
+                and not args.force:
+            print(f"[dryrun] {key}: cached ({results[key]['status']})")
+            continue
+        results[key] = run_cell(arch, shape, mesh, args.multi_pod)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skipped")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {out_path}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.  The single-pod mesh
+is 16x16 = 256 chips ('data' x 'model'); the multi-pod mesh is 2x16x16 =
+512 chips with a leading 'pod' axis (DCN-connected pods; 'pod' carries only
+data parallelism / ZeRO sharding — no model collectives cross pods).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    try:
+        return jax.make_mesh(shape, axes)
+    except ValueError:
+        # host has more placeholder devices than the mesh needs (e.g. 512
+        # forced devices, single-pod 256-chip mesh): build from a prefix.
+        from jax.sharding import Mesh
+        devs = np.array(jax.devices()[:n]).reshape(shape)
+        return Mesh(devs, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_size(mesh, batch_axes=("pod", "data")) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    out = 1
+    for a in batch_axes:
+        out *= sizes.get(a, 1)
+    return out

@@ -1,0 +1,321 @@
+"""Unified LM-transformer family.
+
+One configurable decoder-only implementation covers: smollm-360m,
+h2o-danube-1.8b (SWA), internlm2-20b, granite-34b (MQA), internvl2-2b
+(vision-prefix), qwen3-moe-30b-a3b (MoE + qk-norm), deepseek-v3-671b
+(MLA + shared/routed MoE + dense prelude + MTP).
+
+Layers are stacked with a leading ``[n_layers, ...]`` axis so that the
+pipeline runtime can reshape them into ``[stages, layers_per_stage, ...]``
+and shard the stage axis over the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import (AttnConfig, MLAConfig, MoEConfig, Params,
+                                 Array)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    attn: AttnConfig | None = None
+    mla: MLAConfig | None = None
+    d_ff: int = 0                      # SwiGLU FFN size (dense layers)
+    moe: MoEConfig | None = None       # MoE FFN (replaces dense except prelude)
+    n_dense_layers: int = 0            # deepseek: first k layers dense
+    tied_embeddings: bool = False
+    mtp: bool = False                  # multi-token prediction head
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    vision_prefix: int = 0             # of stubbed patch-embedding tokens
+    moe_aux_weight: float = 0.01
+    mtp_weight: float = 0.3
+    moe_dispatch: str = "onehot"
+    mlp_gelu: bool = False             # 2-matrix GELU MLP (gpt_bigcode/granite)
+    remat: bool = False                # checkpoint each layer in the scan
+    remat_policy: str | None = None    # "dots": save matmul outputs
+    seq_shard_activations: str | None = None  # Megatron-SP residual stream
+
+    @property
+    def head_dim(self) -> int:
+        return self.attn.head_dim if self.attn else self.mla.v_head_dim
+
+    def param_count(self) -> int:
+        """Approximate total parameters (for roofline MODEL_FLOPS)."""
+        d = self.d_model
+        emb = self.vocab * d * (1 if self.tied_embeddings else 2)
+        if self.mla:
+            m = self.mla
+            attn = (d * m.q_lora_rank + m.q_lora_rank * m.n_heads *
+                    (m.qk_nope_dim + m.qk_rope_dim)
+                    + d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank * m.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                    + m.n_heads * m.v_head_dim * d)
+        else:
+            a = self.attn
+            attn = d * a.head_dim * (a.n_heads * 2 + a.n_kv_heads * 2)
+        dense_ffn = (2 if self.mlp_gelu else 3) * d * self.d_ff
+        n_moe = self.n_layers - self.n_dense_layers if self.moe else 0
+        n_dense = self.n_layers - n_moe
+        total = emb + self.n_layers * attn + n_dense * dense_ffn
+        if self.moe:
+            c = self.moe
+            per_expert = 3 * d * c.d_ff
+            shared = 3 * d * (c.shared_d_ff or c.d_ff) * c.n_shared
+            total += n_moe * (c.n_experts * per_expert + shared + d * c.n_experts)
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k + shared experts)."""
+        if not self.moe:
+            return self.param_count()
+        d, c = self.d_model, self.moe
+        n_moe = self.n_layers - self.n_dense_layers
+        inactive = n_moe * (c.n_experts - c.top_k) * 3 * d * c.d_ff
+        return self.param_count() - inactive
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_layer(key, cfg: LMConfig, dense_ffn: bool) -> Params:
+    k1, k2 = jax.random.split(key)
+    d, pd = cfg.d_model, cfg.param_dtype
+    p: Params = {"ln1": jnp.ones((d,), pd), "ln2": jnp.ones((d,), pd)}
+    if cfg.mla is not None:
+        p["attn"] = L.init_mla(k1, cfg.mla, pd)
+    else:
+        p["attn"] = L.init_attention(k1, cfg.attn, pd)
+    if dense_ffn or cfg.moe is None:
+        if cfg.mlp_gelu:
+            p["ffn"] = L.init_gelu_mlp(k2, d, cfg.d_ff, pd)
+        else:
+            p["ffn"] = L.init_swiglu(k2, d, cfg.d_ff, pd)
+    else:
+        p["ffn"] = L.init_moe(k2, cfg.moe, pd)
+    return p
+
+
+def init_lm(key, cfg: LMConfig) -> Params:
+    keys = jax.random.split(key, 6)
+    d, pd = cfg.d_model, cfg.param_dtype
+    params: Params = {
+        "embed": L.dense_init(keys[0], cfg.vocab, d, pd),
+        "final_norm": jnp.ones((d,), pd),
+    }
+    n_moe = cfg.n_layers - cfg.n_dense_layers if cfg.moe else cfg.n_layers
+    n_dense = cfg.n_layers - n_moe
+    if n_dense:
+        dk = jax.random.split(keys[1], n_dense)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, dense_ffn=True))(dk)
+    lk = jax.random.split(keys[2], n_moe)
+    params["layers"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, dense_ffn=cfg.moe is None))(lk)
+    if not cfg.tied_embeddings:
+        params["head"] = L.dense_init(keys[3], d, cfg.vocab, pd)
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": L.dense_init(keys[4], 2 * d, d, pd),
+            "norm_h": jnp.ones((d,), pd),
+            "norm_e": jnp.ones((d,), pd),
+            "block": _init_layer(keys[5], cfg, dense_ffn=True),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# apply
+# --------------------------------------------------------------------------
+
+def apply_layer(p: Params, x: Array, cfg: LMConfig, *, dense_ffn: bool,
+                positions: Array | None = None,
+                cache: Params | None = None) -> tuple[Array, Params | None, Array]:
+    """One decoder layer. Returns (x, new_cache, moe_aux_loss)."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, new_cache = L.apply_mla(p["attn"], h, cfg.mla,
+                                   positions=positions, cache=cache)
+    else:
+        a, new_cache = L.apply_attention(p["attn"], h, cfg.attn,
+                                         positions=positions, cache=cache)
+    x = x + a
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if dense_ffn or cfg.moe is None:
+        mlp = L.apply_gelu_mlp if cfg.mlp_gelu else L.apply_swiglu
+        f, aux = mlp(p["ffn"], h), jnp.zeros((), jnp.float32)
+    else:
+        f, aux = L.apply_moe(p["ffn"], h, cfg.moe, dispatch=cfg.moe_dispatch)
+    x = x + f
+    if cfg.seq_shard_activations and x.shape[1] > 1:
+        # Megatron-SP: keep the residual stream sequence-sharded between
+        # blocks; GSPMD turns the 2 per-block all-reduces into RS+AG pairs
+        # at half the bytes.
+        x = jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(
+                None, cfg.seq_shard_activations, None))
+    return x, new_cache, aux
+
+
+def embed_tokens(params: Params, tokens: Array, cfg: LMConfig,
+                 prefix_embeds: Array | None = None) -> Array:
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.dtype), x], axis=1)
+    return x
+
+
+def unembed(params: Params, x: Array, cfg: LMConfig) -> Array:
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tied_embeddings else params["head"]
+    return x @ w.astype(x.dtype)
+
+
+def _scan_layers(stack: Params, x: Array, cfg: LMConfig, *, dense_ffn: bool,
+                 positions: Array, caches: Params | None
+                 ) -> tuple[Array, Params | None, Array]:
+    """lax.scan over a stacked layer group (O(1) HLO in depth)."""
+
+    def body(carry, inp):
+        x, aux = carry
+        lp, cache = inp
+        x, new_cache, a = apply_layer(lp, x, cfg, dense_ffn=dense_ffn,
+                                      positions=positions, cache=cache)
+        return (x, aux + a), new_cache
+
+    if cfg.remat and caches is None:
+        if cfg.remat_policy == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots)
+        elif cfg.remat_policy == "dots_nb":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(body)
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stack, caches))
+    return x, new_caches, aux
+
+
+def forward(params: Params, tokens: Array, cfg: LMConfig, *,
+            prefix_embeds: Array | None = None,
+            caches: Params | None = None,
+            positions: Array | None = None,
+            ) -> tuple[Array, Params | None, Array]:
+    """Full forward -> (hidden (B,S,d), new_caches, moe_aux).
+
+    ``caches``: {"dense": stacked, "layers": stacked} or None.
+    """
+    x = embed_tokens(params, tokens, cfg, prefix_embeds)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: Params = {}
+    if "dense_layers" in params:
+        c = caches["dense"] if caches else None
+        x, nc, a = _scan_layers(params["dense_layers"], x, cfg,
+                                dense_ffn=True, positions=positions, caches=c)
+        aux += a
+        new_caches["dense"] = nc
+    c = caches["layers"] if caches else None
+    x, nc, a = _scan_layers(params["layers"], x, cfg, dense_ffn=False,
+                            positions=positions, caches=c)
+    aux += a
+    new_caches["layers"] = nc
+    return x, (new_caches if caches is not None else None), aux
+
+
+# --------------------------------------------------------------------------
+# losses / serving steps
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits: Array, labels: Array, mask: Array | None = None) -> Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0] - logz
+    nll = -ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(params: Params, batch: dict, cfg: LMConfig) -> Array:
+    """Causal LM loss. batch: {"tokens": (B,S) int32, "prefix_embeds"?}."""
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    h, _, aux = forward(params, tokens, cfg, prefix_embeds=prefix)
+    P = cfg.vision_prefix if prefix is not None else 0
+    h_text = h[:, P:]
+    logits = unembed(params, h_text[:, :-1], cfg)
+    loss = softmax_xent(logits, tokens[:, 1:])
+    if cfg.mtp:
+        loss = loss + cfg.mtp_weight * _mtp_loss(params, h_text, tokens, cfg)
+    return loss + cfg.moe_aux_weight * aux
+
+
+def _mtp_loss(params: Params, h: Array, tokens: Array, cfg: LMConfig) -> Array:
+    """DeepSeek-V3 multi-token prediction: predict token t+2 from the main
+    stream's hidden at t combined with the embedding of token t+1."""
+    mp = params["mtp"]
+    h_in = L.rms_norm(h[:, :-2], mp["norm_h"], cfg.norm_eps)
+    e_in = L.rms_norm(params["embed"][tokens[:, 1:-1]].astype(h.dtype),
+                      mp["norm_e"], cfg.norm_eps)
+    merged = jnp.concatenate([h_in, e_in], axis=-1) @ mp["proj"].astype(h.dtype)
+    pos = jnp.arange(merged.shape[1])[None, :]
+    out, _, _ = apply_layer(mp["block"], merged, cfg, dense_ffn=True,
+                            positions=pos)
+    logits = unembed(params, out, cfg)
+    return softmax_xent(logits, tokens[:, 2:])
+
+
+def init_caches(cfg: LMConfig, batch: int, max_len: int,
+                dtype=None) -> Params:
+    dtype = dtype or cfg.dtype
+    n_moe = cfg.n_layers - cfg.n_dense_layers if cfg.moe else cfg.n_layers
+    n_dense = cfg.n_layers - n_moe
+
+    def one(_):
+        if cfg.mla is not None:
+            return L.init_mla_cache(batch, max_len, cfg.mla, dtype)
+        return L.init_kv_cache(batch, max_len, cfg.attn, dtype)
+
+    caches: Params = {"layers": jax.vmap(one)(jnp.arange(n_moe))}
+    if n_dense:
+        caches["dense"] = jax.vmap(one)(jnp.arange(n_dense))
+    return caches
+
+
+def prefill(params: Params, tokens: Array, cfg: LMConfig, max_len: int, *,
+            prefix_embeds: Array | None = None,
+            ) -> tuple[Array, Params]:
+    """Prime a KV cache with a prompt; returns (last-token logits, caches)."""
+    B = tokens.shape[0]
+    caches = init_caches(cfg, B, max_len)
+    h, caches, _ = forward(params, tokens, cfg, prefix_embeds=prefix_embeds,
+                           caches=caches)
+    logits = unembed(params, h[:, -1:], cfg)
+    return logits, caches
+
+
+def decode_step(params: Params, token: Array, caches: Params, cfg: LMConfig
+                ) -> tuple[Array, Params]:
+    """One greedy decode step. token: (B,1) int32."""
+    pos = caches["layers"]["pos"][0] if "pos" in caches["layers"] else None
+    positions = pos[None, None] if pos is not None else None
+    h, caches, _ = forward(params, token, cfg, caches=caches,
+                           positions=positions)
+    logits = unembed(params, h, cfg)
+    return logits, caches

@@ -1,0 +1,294 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid architecture.
+
+Mamba2 state-space recurrence per head (state size N, head dim P):
+
+    h_t = exp(a * dt_t) * h_{t-1} + dt_t * B_t (outer) x_t      (N x P)
+    y_t = C_t . h_t + D * x_t
+
+Training uses a *chunked* formulation: scan over chunks of length Q with an
+intra-chunk quadratic form — the same structure the Pallas ``linear_scan``
+kernel accelerates.  Decoding uses the O(1) recurrent step.
+
+Zamba2 = a stack of Mamba2 blocks with a *shared* full-attention transformer
+block applied every ``shared_every`` layers (shared parameters, distinct KV
+caches per application) — the genuinely PULSE-relevant structure: the shared
+block's parameter reuse sites are long-range graph edges, and the folded
+placement collocates them (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import AttnConfig, Params, Array
+from repro.models.xlstm import causal_conv, _init_conv
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64           # N
+    head_dim: int = 64          # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2_block(key, cfg: Mamba2Config, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    # fused in-projection: [z (di), x (di), B (N), C (N), dt (H)]
+    d_in_proj = 2 * di + 2 * N + H
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,)) *
+                 (math.log(cfg.dt_max) - math.log(cfg.dt_min))
+                 + math.log(cfg.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))     # inverse softplus
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_in": L.dense_init(ks[0], d, d_in_proj, dtype),
+        "conv": _init_conv(ks[1], cfg.conv_width, di + 2 * N, dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "gn": jnp.ones((di,), dtype),
+        "w_out": L.dense_init(ks[3], di, d, dtype),
+    }
+
+
+def _ssd_chunked(x: Array, dt: Array, a: Array, B: Array, C: Array,
+                 chunk: int, h0: Array | None = None
+                 ) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x: (b,S,H,P), dt: (b,S,H), a: (H,) (negative), B,C: (b,S,N).
+    Returns (y (b,S,H,P), final_state (b,H,N,P)).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, "sequence must be divisible by chunk"
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+    da = dtc * a                                # (b,nc,Q,H) log-decay per step
+    cums = jnp.cumsum(da, axis=2)               # within-chunk cumulative decay
+
+    def chunk_step(h, inp):
+        xq, dtq, Bq, Cq, daq, cumq = inp        # (b,Q,...)
+        # intra-chunk quadratic: y_intra[t] = sum_{s<=t} C_t.B_s dt_s
+        #                         exp(cum[t]-cum[s]) x_s
+        decay = jnp.exp(cumq[:, :, None, :] - cumq[:, None, :, :])  # (b,t,s,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(mask[None, :, :, None], decay, 0.0)
+        cb = jnp.einsum("btn,bsn->bts", Cq, Bq)                     # (b,t,s)
+        w = cb[..., None] * decay * dtq[:, None, :, :]              # (b,t,s,H)
+        y = jnp.einsum("btsh,bshp->bthp", w, xq)
+        # contribution of carry-in state: y += C_t exp(cum[t]) h
+        y = y + jnp.einsum("btn,bth,bhnp->bthp", Cq, jnp.exp(cumq), h)
+        # state update: h' = exp(cum[-1]) h + sum_s exp(cum[-1]-cum[s]) dt_s B_s x_s
+        dec_last = jnp.exp(cumq[:, -1:, :] - cumq)                  # (b,Q,H)
+        h_new = (jnp.exp(cumq[:, -1, :])[:, :, None, None] * h
+                 + jnp.einsum("bsh,bsn,bshp->bhnp",
+                              dec_last * dtq, Bq, xq))
+        return h_new, y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    inputs = (
+        jnp.swapaxes(xc, 0, 1).astype(jnp.float32),
+        jnp.swapaxes(dtc, 0, 1).astype(jnp.float32),
+        jnp.swapaxes(Bc, 0, 1).astype(jnp.float32),
+        jnp.swapaxes(Cc, 0, 1).astype(jnp.float32),
+        jnp.swapaxes(da, 0, 1).astype(jnp.float32),
+        jnp.swapaxes(cums, 0, 1).astype(jnp.float32),
+    )
+    h_final, ys = jax.lax.scan(chunk_step, h0, inputs)
+    y = jnp.swapaxes(ys, 0, 1).reshape(b, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_recurrent(state: Array, x: Array, dt: Array, a: Array, B: Array,
+                  C: Array) -> tuple[Array, Array]:
+    """One decode step.  state: (b,H,N,P); x: (b,H,P); dt: (b,H); B,C: (b,N)."""
+    da = jnp.exp(dt * a)                                        # (b,H)
+    state = (state * da[..., None, None]
+             + jnp.einsum("bh,bn,bhp->bhnp", dt, B, x))
+    y = jnp.einsum("bn,bhnp->bhp", C, state)
+    return y, state
+
+
+def apply_mamba2_block(p: Params, x: Array, cfg: Mamba2Config, *,
+                       state: Params | None = None
+                       ) -> tuple[Array, Params | None]:
+    b, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    h = L.rms_norm(x, p["ln"])
+    zxbcdt = h @ p["w_in"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt_pre = zxbcdt[..., -H:]
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = causal_conv(xbc, p["conv"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(b, S, H, P)
+    B = xbc[..., di:di + N]
+    C = xbc[..., di + N:]
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    if state is None:
+        y, _ = _ssd_chunked(xs, dt, a, B, C, min(cfg.chunk, S))
+        new_state = None
+    else:
+        y, ssm = ssd_recurrent(state["ssm"], xs[:, 0], dt[:, 0], a,
+                               B[:, 0], C[:, 0])
+        y = y[:, None]
+        new_state = {"ssm": ssm, "conv": new_conv}
+    y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, S, di)
+    y = L.rms_norm(y, p["gn"]) * jax.nn.silu(z)
+    return x + y @ p["w_out"], new_state
+
+
+def init_mamba2_state(batch: int, cfg: Mamba2Config, dtype=jnp.float32) -> Params:
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.d_state), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# Zamba2 hybrid
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Zamba2Config:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int                 # number of Mamba2 blocks
+    mamba: Mamba2Config = None    # type: ignore
+    shared_attn: AttnConfig = None  # type: ignore
+    shared_d_ff: int = 10240
+    shared_every: int = 6         # apply shared block after every k mamba blocks
+    n_shared_blocks: int = 2      # alternate between this many shared blocks
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    tied_embeddings: bool = True
+
+    def shared_sites(self) -> list[int]:
+        """Mamba-layer indices after which a shared block runs."""
+        return [i for i in range(self.n_layers)
+                if i % self.shared_every == self.shared_every - 1]
+
+    def param_count(self) -> int:
+        d, di = self.d_model, self.mamba.d_inner
+        N, H = self.mamba.d_state, self.mamba.n_heads
+        per_mamba = d * (2 * di + 2 * N + H) + di * d + 2 * d + di
+        a = self.shared_attn
+        per_shared = (d * a.head_dim * (a.n_heads * 2 + a.n_kv_heads * 2)
+                      + 3 * d * self.shared_d_ff)
+        return (self.vocab * d + self.n_layers * per_mamba
+                + self.n_shared_blocks * per_shared)
+
+
+def init_zamba2(key, cfg: Zamba2Config) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + cfg.n_shared_blocks + 2)
+    pd = cfg.param_dtype
+    blocks = [init_mamba2_block(ks[i], cfg.mamba, pd)
+              for i in range(cfg.n_layers)]
+    shared = []
+    for j in range(cfg.n_shared_blocks):
+        k1, k2 = jax.random.split(ks[cfg.n_layers + j])
+        shared.append({
+            "ln1": jnp.ones((cfg.d_model,), pd),
+            "attn": L.init_attention(k1, cfg.shared_attn, pd),
+            "ln2": jnp.ones((cfg.d_model,), pd),
+            "ffn": L.init_swiglu(k2, cfg.d_model, cfg.shared_d_ff, pd),
+        })
+    return {
+        "embed": L.dense_init(ks[-1], cfg.vocab, cfg.d_model, pd),
+        "mamba_blocks": blocks,
+        "shared_blocks": shared,
+        "final_norm": jnp.ones((cfg.d_model,), pd),
+    }
+
+
+def _apply_shared(p: Params, x: Array, cfg: Zamba2Config, *,
+                  cache: Params | None = None,
+                  positions: Array | None = None) -> tuple[Array, Params | None]:
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache = L.apply_attention(p["attn"], h, cfg.shared_attn,
+                                     cache=cache, positions=positions)
+    x = x + a
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.apply_swiglu(p["ffn"], h), new_cache
+
+
+def forward(params: Params, tokens: Array, cfg: Zamba2Config, *,
+            states: dict | None = None) -> tuple[Array, dict | None]:
+    x = params["embed"][tokens].astype(cfg.dtype)
+    sites = cfg.shared_sites()
+    new_states: dict | None = None
+    positions = None
+    if states is not None:
+        new_states = {"mamba": [], "shared": []}
+        pos = states["shared"][0]["pos"] if states["shared"] else jnp.zeros((), jnp.int32)
+        positions = pos[None, None]
+    site_counter = 0
+    for i, bp in enumerate(params["mamba_blocks"]):
+        st = states["mamba"][i] if states is not None else None
+        x, ns = apply_mamba2_block(bp, x, cfg.mamba, state=st)
+        if new_states is not None:
+            new_states["mamba"].append(ns)
+        if i in sites:
+            j = site_counter % cfg.n_shared_blocks
+            sp = params["shared_blocks"][j]
+            cache = states["shared"][site_counter] if states is not None else None
+            x, nc = _apply_shared(sp, x, cfg, cache=cache, positions=positions)
+            if new_states is not None:
+                new_states["shared"].append(nc)
+            site_counter += 1
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_states
+
+
+def zamba2_loss(params: Params, batch: dict, cfg: Zamba2Config) -> Array:
+    h, _ = forward(params, batch["tokens"], cfg)
+    logits = h @ params["embed"].T.astype(h.dtype)
+    from repro.models.lm import softmax_xent
+    return softmax_xent(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+def init_states(cfg: Zamba2Config, batch: int, max_len: int) -> dict:
+    n_sites = len(cfg.shared_sites())
+    return {
+        "mamba": [init_mamba2_state(batch, cfg.mamba, cfg.dtype)
+                  for _ in range(cfg.n_layers)],
+        "shared": [L.init_kv_cache(batch, max_len, cfg.shared_attn, cfg.dtype)
+                   for _ in range(n_sites)],
+    }
+
+
+def decode_step(params: Params, token: Array, states: dict, cfg: Zamba2Config
+                ) -> tuple[Array, dict]:
+    h, states = forward(params, token, cfg, states=states)
+    return h @ params["embed"].T.astype(h.dtype), states

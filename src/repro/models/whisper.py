@@ -1,0 +1,177 @@
+"""Whisper-style encoder-decoder (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, T_frames, d).  The transformer backbone is
+real: bidirectional encoder, causal decoder with cross-attention.
+
+PULSE applicability (§VIII-B "partial skip patterns"): the encoder output is
+a skip-like tensor consumed by *every* decoder layer; the folded placement
+collocates enc/dec mirror pairs so the encoded audio rides the up-stream
+ring once instead of being re-sent per stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import AttnConfig, Params, Array
+from repro.models.lm import softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class WhisperConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_enc_layers: int
+    n_dec_layers: int
+    n_heads: int
+    d_ff: int
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def attn_cfg(self, causal: bool) -> AttnConfig:
+        return AttnConfig(self.d_model, self.n_heads, self.n_heads,
+                          self.head_dim, rope_theta=0.0, causal=causal)
+
+    def param_count(self) -> int:
+        d = self.d_model
+        per_enc = 4 * d * d + 2 * d * self.d_ff
+        per_dec = 8 * d * d + 2 * d * self.d_ff
+        return (self.vocab * d + self.n_enc_layers * per_enc
+                + self.n_dec_layers * per_dec)
+
+
+def _sinusoid(n: int, d: int) -> Array:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_layer(key, cfg: WhisperConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    d, pd = cfg.d_model, cfg.param_dtype
+    return {
+        "ln1": jnp.ones((d,), pd), "b1": jnp.zeros((d,), pd),
+        "attn": L.init_attention(k1, cfg.attn_cfg(False), pd),
+        "ln2": jnp.ones((d,), pd), "b2": jnp.zeros((d,), pd),
+        "mlp": L.init_gelu_mlp(k2, d, cfg.d_ff, pd),
+    }
+
+
+def _init_dec_layer(key, cfg: WhisperConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, pd = cfg.d_model, cfg.param_dtype
+    return {
+        "ln1": jnp.ones((d,), pd), "b1": jnp.zeros((d,), pd),
+        "attn": L.init_attention(k1, cfg.attn_cfg(True), pd),
+        "lnx": jnp.ones((d,), pd), "bx": jnp.zeros((d,), pd),
+        "xattn": L.init_attention(k2, cfg.attn_cfg(False), pd),
+        "ln2": jnp.ones((d,), pd), "b2": jnp.zeros((d,), pd),
+        "mlp": L.init_gelu_mlp(k3, d, cfg.d_ff, pd),
+    }
+
+
+def init_whisper(key, cfg: WhisperConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    pd = cfg.param_dtype
+    ek = jax.random.split(ks[0], cfg.n_enc_layers)
+    dk = jax.random.split(ks[1], cfg.n_dec_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(ek),
+        "enc_norm": jnp.ones((cfg.d_model,), pd),
+        "enc_norm_b": jnp.zeros((cfg.d_model,), pd),
+        "tok_embed": L.dense_init(ks[2], cfg.vocab, cfg.d_model, pd),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dk),
+        "dec_norm": jnp.ones((cfg.d_model,), pd),
+        "dec_norm_b": jnp.zeros((cfg.d_model,), pd),
+    }
+
+
+def encode(params: Params, frames: Array, cfg: WhisperConfig) -> Array:
+    """frames: (B, T, d) stubbed frame embeddings."""
+    x = frames.astype(cfg.dtype) + _sinusoid(frames.shape[1], cfg.d_model
+                                             ).astype(cfg.dtype)[None]
+
+    def body(x, lp):
+        h = L.layer_norm(x, lp["ln1"], lp["b1"], cfg.norm_eps)
+        a, _ = L.apply_attention(lp["attn"], h, cfg.attn_cfg(False))
+        x = x + a
+        h = L.layer_norm(x, lp["ln2"], lp["b2"], cfg.norm_eps)
+        return x + L.apply_gelu_mlp(lp["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.layer_norm(x, params["enc_norm"], params["enc_norm_b"], cfg.norm_eps)
+
+
+def decode(params: Params, tokens: Array, enc_out: Array, cfg: WhisperConfig,
+           *, caches: Params | None = None, positions: Array | None = None
+           ) -> tuple[Array, Params | None]:
+    x = params["tok_embed"][tokens].astype(cfg.dtype)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])[None, :]
+    x = x + _sinusoid(4096, cfg.d_model).astype(cfg.dtype)[positions[0]][None]
+    xa = cfg.attn_cfg(False)
+    # precompute cross K/V once per layer from enc_out (scan over layers)
+    def body(carry, inp):
+        x = carry
+        lp, cache = inp
+        h = L.layer_norm(x, lp["ln1"], lp["b1"], cfg.norm_eps)
+        a, new_cache = L.apply_attention(lp["attn"], h, cfg.attn_cfg(True),
+                                         cache=cache, positions=positions)
+        x = x + a
+        h = L.layer_norm(x, lp["lnx"], lp["bx"], cfg.norm_eps)
+        B, T = enc_out.shape[0], enc_out.shape[1]
+        kx = (enc_out @ lp["xattn"]["wk"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+        vx = (enc_out @ lp["xattn"]["wv"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+        a, _ = L.apply_attention(lp["xattn"], h, xa, cross_kv=(kx, vx))
+        x = x + a
+        h = L.layer_norm(x, lp["ln2"], lp["b2"], cfg.norm_eps)
+        return x + L.apply_gelu_mlp(lp["mlp"], h), new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+    x = L.layer_norm(x, params["dec_norm"], params["dec_norm_b"], cfg.norm_eps)
+    return x, (new_caches if caches is not None else None)
+
+
+def whisper_loss(params: Params, batch: dict, cfg: WhisperConfig) -> Array:
+    """batch: {"frames": (B,T,d), "tokens": (B,S)}."""
+    enc = encode(params, batch["frames"], cfg)
+    h, _ = decode(params, batch["tokens"][:, :-1], enc, cfg)
+    logits = h @ params["tok_embed"].T.astype(h.dtype)
+    return softmax_xent(logits, batch["tokens"][:, 1:])
+
+
+def init_dec_caches(cfg: WhisperConfig, batch: int, max_len: int) -> Params:
+    def one(_):
+        return L.init_kv_cache(batch, max_len, cfg.attn_cfg(True), cfg.dtype)
+    return jax.vmap(one)(jnp.arange(cfg.n_dec_layers))
+
+
+def prefill(params: Params, frames: Array, tokens: Array, cfg: WhisperConfig,
+            max_len: int) -> tuple[Array, Array, Params]:
+    """Encode audio + prime decoder cache. Returns (logits, enc_out, caches)."""
+    enc = encode(params, frames, cfg)
+    caches = init_dec_caches(cfg, tokens.shape[0], max_len)
+    h, caches = decode(params, tokens, enc, cfg, caches=caches)
+    logits = h[:, -1:] @ params["tok_embed"].T.astype(h.dtype)
+    return logits, enc, caches
+
+
+def decode_step(params: Params, token: Array, enc_out: Array, caches: Params,
+                cfg: WhisperConfig) -> tuple[Array, Params]:
+    pos = caches["pos"][0]
+    h, caches = decode(params, token, enc_out, cfg, caches=caches,
+                       positions=pos[None, None])
+    logits = h @ params["tok_embed"].T.astype(h.dtype)
+    return logits, caches

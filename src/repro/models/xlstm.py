@@ -1,0 +1,319 @@
+"""xLSTM: mLSTM (matrix-memory) and sLSTM (scalar-memory) blocks.
+
+mLSTM has two equivalent forms which we both implement and cross-test:
+  - parallel (training): stabilized gated-linear-attention quadratic form,
+  - recurrent (decoding): O(1)-state update.
+
+The recurrent state is the model's "KV cache" analogue: it does not grow
+with sequence length, which is why xlstm runs the ``long_500k`` shape.
+
+Block layout follows the xLSTM paper in simplified form: pre-LN, up-proj,
+causal conv(4) + SiLU on the q/k path, cell, group-norm, output gate,
+down-proj, residual.  sLSTM blocks are placed every ``slstm_every`` layers
+(ratio ~7:1 in the paper's xLSTM[7:1]).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import Params, Array
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    slstm_every: int = 6          # layer i is sLSTM iff i % slstm_every == slstm_every-1
+    conv_width: int = 4
+    proj_factor: float = 2.0      # mLSTM up-projection factor
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    tied_embeddings: bool = True
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+    def is_slstm(self, layer: int) -> bool:
+        return self.slstm_every > 0 and layer % self.slstm_every == self.slstm_every - 1
+
+    def param_count(self) -> int:
+        """Rough analytic parameter count (mLSTM-block dominated)."""
+        d, di = self.d_model, self.d_inner
+        per_block = 2 * d * di + di * d + 3 * di * di + 2 * di * self.n_heads
+        return self.vocab * d + self.n_layers * per_block
+
+
+# --------------------------------------------------------------------------
+# mLSTM cell
+# --------------------------------------------------------------------------
+
+def mlstm_parallel(q: Array, k: Array, v: Array, i_pre: Array, f_pre: Array
+                   ) -> Array:
+    """Stabilized parallel form.
+
+    q,k,v: (B,S,H,Dh); i_pre,f_pre: (B,S,H) pre-activations.
+    Returns h: (B,S,H,Dh).
+    """
+    B, S, H, Dh = q.shape
+    q = q.astype(jnp.float32) / math.sqrt(Dh)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))        # (B,S,H)
+    F = jnp.cumsum(log_f, axis=1)                                 # (B,S,H)
+    # log D[t,s] = F[t] - F[s] + i[s], masked to s <= t
+    logD = (F[:, :, None, :] - F[:, None, :, :]
+            + i_pre.astype(jnp.float32)[:, None, :, :])           # (B,t,s,H)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logD = jnp.where(mask[None, :, :, None], logD, -jnp.inf)
+    m = jnp.max(logD, axis=2)                                     # (B,t,H)
+    D = jnp.exp(logD - m[:, :, None, :])                          # (B,t,s,H)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) * D
+    n = jnp.maximum(jnp.abs(jnp.sum(scores, axis=2)), jnp.exp(-m))  # (B,t,H)
+    h = jnp.einsum("btsh,bshd->bthd", scores, v) / n[..., None]
+    return h.astype(v.dtype)
+
+
+def mlstm_recurrent(state: Params, q: Array, k: Array, v: Array,
+                    i_pre: Array, f_pre: Array) -> tuple[Array, Params]:
+    """One step. q,k,v: (B,H,Dh); i_pre,f_pre: (B,H).
+    state: {"C": (B,H,Dh,Dh), "n": (B,H,Dh), "m": (B,H)}."""
+    Dh = q.shape[-1]
+    q = q.astype(jnp.float32) / math.sqrt(Dh)
+    k = k.astype(jnp.float32); v = v.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i_ = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + state["m"], i_)
+    a = jnp.exp(log_f + state["m"] - m_new)[..., None]            # (B,H,1)
+    b = jnp.exp(i_ - m_new)[..., None]
+    C = state["C"] * a[..., None] + b[..., None] * (v[..., :, None] * k[..., None, :])
+    n = state["n"] * a + b * k
+    num = jnp.einsum("bhvd,bhd->bhv", C, q)                        # (B,H,Dh)
+    den = jnp.maximum(jnp.abs(jnp.sum(n * q, -1)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h.astype(v.dtype), {"C": C, "n": n, "m": m_new}
+
+
+def init_mlstm_state(batch: int, H: int, Dh: int, dtype=jnp.float32) -> Params:
+    return {
+        "C": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        "n": jnp.zeros((batch, H, Dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM cell (per-head vector memories, recurrent h feedback)
+# --------------------------------------------------------------------------
+
+def slstm_scan(p: Params, x: Array, state: Params) -> tuple[Array, Params]:
+    """x: (B,S,Di). Sequential scan over time.  Gates take x_t and h_{t-1}.
+    state: {"h","c","n","m"} each (B,Di)."""
+
+    def step(st, xt):
+        zi = xt @ p["wz"] + st["h"] @ p["rz"]
+        ii = xt @ p["wi"] + st["h"] @ p["ri"]
+        ff = xt @ p["wf"] + st["h"] @ p["rf"]
+        oo = xt @ p["wo"] + st["h"] @ p["ro"]
+        z = jnp.tanh(zi)
+        log_f = jax.nn.log_sigmoid(ff)
+        m_new = jnp.maximum(log_f + st["m"], ii)
+        i_s = jnp.exp(ii - m_new)
+        f_s = jnp.exp(log_f + st["m"] - m_new)
+        c = f_s * st["c"] + i_s * z
+        n = jnp.maximum(f_s * st["n"] + i_s, 1e-6)
+        h = jax.nn.sigmoid(oo) * (c / n)
+        return {"h": h, "c": c, "n": n, "m": m_new}, h
+
+    xs = jnp.swapaxes(x.astype(jnp.float32), 0, 1)    # (S,B,Di)
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.swapaxes(hs, 0, 1).astype(x.dtype), state
+
+
+def init_slstm_state(batch: int, d_inner: int) -> Params:
+    z = jnp.zeros((batch, d_inner), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": jnp.full((batch, d_inner), -1e30)}
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def _init_conv(key, width: int, channels: int, dtype) -> Array:
+    return (jax.random.normal(key, (width, channels)) / math.sqrt(width)).astype(dtype)
+
+
+def causal_conv(x: Array, w: Array, state: Array | None = None
+                ) -> tuple[Array, Array | None]:
+    """Depthwise causal conv. x: (B,S,C), w: (W,C).
+    With ``state`` (B,W-1,C) performs streaming (decode) convolution."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        new_state = None
+    else:
+        pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = pad[:, -(W - 1):]
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out, new_state
+
+
+def init_mlstm_block(key, cfg: XLSTMConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di, pd = cfg.d_model, cfg.d_inner, cfg.param_dtype
+    H, Dh = cfg.n_heads, cfg.head_dim
+    return {
+        "ln": jnp.ones((d,), pd),
+        "w_up": L.dense_init(ks[0], d, 2 * di, pd),
+        "conv": _init_conv(ks[1], cfg.conv_width, di, pd),
+        "wq": L.dense_init(ks[2], di, di, pd),
+        "wk": L.dense_init(ks[3], di, di, pd),
+        "wv": L.dense_init(ks[4], di, di, pd),
+        "w_if": L.dense_init(ks[5], di, 2 * H, pd),
+        "gn": jnp.ones((di,), pd),
+        "w_down": L.dense_init(ks[6], di, d, pd),
+    }
+
+
+def apply_mlstm_block(p: Params, x: Array, cfg: XLSTMConfig, *,
+                      state: Params | None = None) -> tuple[Array, Params | None]:
+    B, S, d = x.shape
+    H, Dh, di = cfg.n_heads, cfg.head_dim, cfg.d_inner
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = h @ p["w_up"]
+    a, z = up[..., :di], up[..., di:]
+    conv_state = state["conv"] if state is not None else None
+    c, new_conv = causal_conv(a, p["conv"], conv_state)
+    c = jax.nn.silu(c)
+    q = (c @ p["wq"]).reshape(B, S, H, Dh)
+    k = (c @ p["wk"]).reshape(B, S, H, Dh)
+    v = (a @ p["wv"]).reshape(B, S, H, Dh)
+    gates = c @ p["w_if"]
+    i_pre, f_pre = gates[..., :H], gates[..., H:]
+    if state is None:
+        out = mlstm_parallel(q, k, v, i_pre, f_pre)
+        new_state = None
+    else:
+        out, cell = mlstm_recurrent(state["cell"], q[:, 0], k[:, 0], v[:, 0],
+                                    i_pre[:, 0], f_pre[:, 0])
+        out = out[:, None]
+        new_state = {"cell": cell, "conv": new_conv}
+    out = out.reshape(B, S, di)
+    out = L.rms_norm(out, p["gn"], cfg.norm_eps)       # per-channel group norm
+    out = out * jax.nn.silu(z)
+    return x + out @ p["w_down"], new_state
+
+
+def init_slstm_block(key, cfg: XLSTMConfig) -> Params:
+    ks = jax.random.split(key, 11)
+    d, di, pd = cfg.d_model, cfg.d_inner, cfg.param_dtype
+    p = {"ln": jnp.ones((d,), pd),
+         "w_up": L.dense_init(ks[0], d, di, pd),
+         "conv": _init_conv(ks[1], cfg.conv_width, di, pd),
+         "gn": jnp.ones((di,), pd),
+         "w_down": L.dense_init(ks[2], di, d, pd)}
+    for n, kk in zip(("wz", "wi", "wf", "wo"), ks[3:7]):
+        p[n] = L.dense_init(kk, di, di, pd)
+    for n, kk in zip(("rz", "ri", "rf", "ro"), ks[7:11]):
+        p[n] = (jax.random.normal(kk, (di, di)) / math.sqrt(di) * 0.1).astype(pd)
+    return p
+
+
+def apply_slstm_block(p: Params, x: Array, cfg: XLSTMConfig, *,
+                      state: Params | None = None) -> tuple[Array, Params | None]:
+    B, S, d = x.shape
+    di = cfg.d_inner
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    u = h @ p["w_up"]
+    conv_state = state["conv"] if state is not None else None
+    c, new_conv = causal_conv(u, p["conv"], conv_state)
+    c = jax.nn.silu(c)
+    cell_state = state["cell"] if state is not None else init_slstm_state(B, di)
+    out, new_cell = slstm_scan(p, c, cell_state)
+    out = L.rms_norm(out, p["gn"], cfg.norm_eps)
+    new_state = ({"cell": new_cell, "conv": new_conv}
+                 if state is not None else None)
+    return x + out @ p["w_down"], new_state
+
+
+# --------------------------------------------------------------------------
+# Full model
+# --------------------------------------------------------------------------
+
+def init_xlstm(key, cfg: XLSTMConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = []
+    for i in range(cfg.n_layers):
+        if cfg.is_slstm(i):
+            blocks.append(init_slstm_block(keys[i], cfg))
+        else:
+            blocks.append(init_mlstm_block(keys[i], cfg))
+    p: Params = {
+        "embed": L.dense_init(keys[-2], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "blocks": blocks,   # heterogeneous list (not stacked)
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tied_embeddings:
+        p["head"] = L.dense_init(keys[-1], cfg.d_model, cfg.vocab, cfg.param_dtype)
+    return p
+
+
+def forward(params: Params, tokens: Array, cfg: XLSTMConfig, *,
+            states: list | None = None) -> tuple[Array, list | None]:
+    x = params["embed"][tokens].astype(cfg.dtype)
+    new_states = [] if states is not None else None
+    for i, bp in enumerate(params["blocks"]):
+        st = states[i] if states is not None else None
+        if cfg.is_slstm(i):
+            x, ns = apply_slstm_block(bp, x, cfg, state=st)
+        else:
+            x, ns = apply_mlstm_block(bp, x, cfg, state=st)
+        if new_states is not None:
+            new_states.append(ns)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_states
+
+
+def unembed(params: Params, x: Array, cfg: XLSTMConfig) -> Array:
+    w = params["embed"].T if cfg.tied_embeddings else params["head"]
+    return x @ w.astype(x.dtype)
+
+
+def xlstm_loss(params: Params, batch: dict, cfg: XLSTMConfig) -> Array:
+    h, _ = forward(params, batch["tokens"], cfg)
+    logits = unembed(params, h[:, :-1], cfg)
+    from repro.models.lm import softmax_xent
+    return softmax_xent(logits, batch["tokens"][:, 1:])
+
+
+def init_states(cfg: XLSTMConfig, batch: int) -> list:
+    states = []
+    for i in range(cfg.n_layers):
+        conv = jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), cfg.dtype)
+        if cfg.is_slstm(i):
+            states.append({"cell": init_slstm_state(batch, cfg.d_inner),
+                           "conv": conv})
+        else:
+            states.append({"cell": init_mlstm_state(batch, cfg.n_heads,
+                                                    cfg.head_dim), "conv": conv})
+    return states
+
+
+def decode_step(params: Params, token: Array, states: list, cfg: XLSTMConfig
+                ) -> tuple[Array, list]:
+    h, states = forward(params, token, cfg, states=states)
+    return unembed(params, h, cfg), states

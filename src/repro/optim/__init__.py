@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_schedule,
+                               int8_adamw_init, int8_adamw_update)

@@ -1,0 +1,104 @@
+"""Compiled-HLO analysis: collective bytes, per-op breakdowns, roofline terms.
+
+``collective_bytes`` parses an HLO module's text (from ``lowered.as_text()``
+or ``compiled.as_text()``) and sums the output-shape bytes of every
+collective op, grouped by kind.  Notes:
+
+- Ops inside ``while`` bodies are counted ONCE (XLA emits the body once);
+  callers that know the trip structure (pipeline ticks, layer scans) must
+  scale accordingly — the roofline harness reconstructs totals by compiling
+  probe configs with trip counts {1, 2} and extrapolating linearly, which is
+  exact for loop-invariant bodies.
+- For all-reduce, bytes are counted once (output size); ring implementations
+  move ~2x(N-1)/N of that per device — the roofline model applies the ring
+  factor separately.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %cp.1 = bf16[1,16,128]{2,1,0} collective-permute(%x), ...
+#        ROOT %tuple = (f32[4], f32[4]) all-to-all(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<kind>all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def __str__(self):
+        parts = [f"{k}: {v/1e6:.2f}MB x{self.count_by_kind[k]}"
+                 for k, v in sorted(self.bytes_by_kind.items())]
+        return "; ".join(parts) or "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    by_kind: dict = defaultdict(int)
+    cnt: dict = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        kind = m.group("kind").replace("-start", "")
+        b = _shape_bytes(m.group("shape"))
+        by_kind[kind] += b
+        cnt[kind] += 1
+    return CollectiveStats(dict(by_kind), dict(cnt))
+
+
+def cost_summary(compiled) -> dict:
+    """flops / bytes accessed from compiled.cost_analysis() (may be
+    per-partition depending on backend; treat relatively)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        out[k] = getattr(ma, k, None)
+    return out

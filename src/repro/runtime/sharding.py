@@ -1,0 +1,215 @@
+"""Sharding rules: logical param/activation layouts -> mesh PartitionSpecs.
+
+Megatron-style TP over the 'model' axis, ZeRO/FSDP over 'data' (+'pod'),
+expert parallelism for MoE over 'model'.  Rules are right-aligned: a rule
+``("fsdp", "tp")`` on a leaf of ndim 3 becomes ``P(None, fsdp_axes, tp)`` —
+stacked-layer leading dims stay unsharded (they are scanned over).
+
+``build_param_specs`` walks a params pytree by key-path and applies the
+first matching rule (match = last path component, or ``parent/leaf``).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+Pytree = Any
+
+# rule tables: name -> tuple of logical axes for the *trailing* dims.
+# logical axes: "tp" (tensor parallel), "fsdp" (param sharding over data),
+# "ep" (expert parallel), None (replicated).
+
+LM_RULES: dict[str, tuple] = {
+    "embed": ("fsdp", "tp"),
+    "head": ("fsdp", "tp"),
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # MoE expert tensors (E, d, f) / (E, f, d): experts over 'ep'
+    "ffn/w_gate": ("ep", "fsdp", None),
+    "ffn/w_up": ("ep", "fsdp", None),
+    "ffn/w_down": ("ep", None, "fsdp"),
+    "shared/w_gate": ("fsdp", "tp"),
+    "shared/w_up": ("fsdp", "tp"),
+    "shared/w_down": ("tp", "fsdp"),
+    "router": (None, None),
+    # MLA
+    "wq_a": ("fsdp", None),
+    "wq_b": (None, "tp"),
+    "wkv_a": ("fsdp", None),
+    "wkv_b": (None, "tp"),
+    # conv / misc
+    "conv": (None, None),
+    "proj": ("fsdp", None),
+}
+
+DENSE_ONLY_KEYS = {"dense_layers"}   # deepseek prelude uses dense ffn rules
+
+
+def _is_moe_leaf(path: tuple[str, ...]) -> bool:
+    # expert tensors live under layers/ffn with ndim 3 handled by rule table
+    return len(path) >= 2 and path[-2] == "ffn"
+
+
+def _axes_product(entry, axis_sizes: dict) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return axis_sizes.get(entry, 1)
+    out = 1
+    for a in entry:
+        out *= axis_sizes.get(a, 1)
+    return out
+
+
+def fit_spec(spec: P, shape, axis_sizes: dict | None) -> P:
+    """Drop sharding on any dim the mesh axes do not divide evenly."""
+    if axis_sizes is None:
+        return spec
+    fitted = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        n = _axes_product(entry, axis_sizes)
+        if entry is None or n <= 1:
+            fitted.append(None)
+        elif dim % n == 0:
+            fitted.append(entry)
+        else:
+            fitted.append(None)
+    return P(*fitted)
+
+
+def build_param_specs(
+    params: Pytree,
+    *,
+    tp_axis: str | None = "model",
+    fsdp_axes: tuple[str, ...] | str | None = ("data",),
+    ep_axis: str | None = None,
+    rules: dict[str, tuple] | None = None,
+    min_fsdp_size: int = 2 ** 12,
+    axis_sizes: dict | None = None,
+) -> Pytree:
+    """PartitionSpec pytree matching ``params``.
+
+    ``ep_axis`` switches *stacked* expert tensors (ndim >= 4 leaves under
+    ``ffn``) to expert parallelism.  Small leaves (< min_fsdp_size elems)
+    stay replicated.  With ``axis_sizes`` every spec is divisibility-checked
+    against the mesh and non-dividing entries fall back to replication.
+    """
+    rules = dict(LM_RULES, **(rules or {}))
+    if isinstance(fsdp_axes, str):
+        fsdp_axes = (fsdp_axes,)
+
+    def logical_to_mesh(name):
+        if name == "tp":
+            return tp_axis
+        if name == "fsdp":
+            return fsdp_axes if fsdp_axes else None
+        if name == "ep":
+            return ep_axis if ep_axis else tp_axis
+        if isinstance(name, (tuple, list)) or (
+                isinstance(name, str) and name not in ()):
+            return name          # literal mesh axis (or tuple of axes)
+        return None
+
+    def spec_for(path: tuple[str, ...], leaf) -> P:
+        if leaf.ndim == 0 or leaf.size < min_fsdp_size:
+            return P()
+        key2 = "/".join(path[-2:])
+        key1 = path[-1]
+        rule = None
+        if ep_axis is not None and key2 in rules and _is_moe_leaf(path) \
+                and leaf.ndim >= 4:
+            rule = rules[key2]          # stacked (L, E, d, f) expert tensors
+        elif key1 in rules:
+            rule = rules[key1]
+        if rule is None:
+            # default: FSDP over the trailing dim
+            rule = ("fsdp",) if leaf.ndim >= 1 else ()
+        axes = [logical_to_mesh(r) for r in rule]
+        pad = leaf.ndim - len(axes)
+        if pad < 0:
+            axes = axes[-leaf.ndim:]
+            pad = 0
+        return fit_spec(P(*([None] * pad), *axes), leaf.shape, axis_sizes)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+            return type(node)(t)
+        return spec_for(path, node)
+
+    return walk(params, ())
+
+
+def batch_specs(batch: Pytree, dp_axes: Sequence[str] = ("pod", "data"),
+                mesh=None) -> Pytree:
+    """Shard the leading batch dim of every leaf over the DP axes present
+    in the mesh (divisibility-checked)."""
+    axes = tuple(a for a in dp_axes if mesh is None or a in mesh.axis_names)
+    sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+             if mesh is not None else None)
+
+    def f(x):
+        if x.ndim < 1 or not axes:
+            return P()
+        return fit_spec(P(axes, *([None] * (x.ndim - 1))), x.shape, sizes)
+
+    return jax.tree.map(f, batch)
+
+
+def cache_specs(caches: Pytree, *, dp_axes=("pod", "data"),
+                tp_axis: str | None = "model",
+                seq_shard_axis: str | None = None, mesh=None) -> Pytree:
+    """Decode-state sharding, name-aware and right-aligned.
+
+    - GQA "k"/"v" [..., B, S, H, Dh]: batch over DP, heads over TP; with
+      ``seq_shard_axis`` the sequence dim shards instead of batch (the
+      LSE-merge long-context decode layout for batch=1 cells).
+    - MLA "kv" [..., B, S, r] / "k_rope" [..., B, S, 1, dr]: batch/seq only.
+    - Mamba "ssm" [B, H, N, P] and mLSTM "C" [B, H, D, D]: batch over DP,
+      heads over TP.  "conv"/"h"/"c"/"n"/"m": batch over DP.
+    """
+    axes = tuple(a for a in dp_axes if mesh is None or a in mesh.axis_names)
+    bspec = axes if axes else None   # fit_spec drops it when B is indivisible
+    sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+             if mesh is not None else None)
+
+    def ralign(x, trailing):
+        pad = x.ndim - len(trailing)
+        return fit_spec(P(*([None] * pad), *trailing), x.shape, sizes)
+
+    def f(path, x):
+        name = ""
+        for e in reversed(path):
+            if hasattr(e, "key"):
+                name = str(e.key)
+                break
+        if name in ("k", "v") and x.ndim >= 4:
+            return ralign(x, (bspec, seq_shard_axis, tp_axis, None))
+        if name == "kv" and x.ndim >= 3:
+            return ralign(x, (bspec, seq_shard_axis, None))
+        if name == "k_rope" and x.ndim >= 4:
+            return ralign(x, (bspec, seq_shard_axis, None, None))
+        if name in ("ssm", "C") and x.ndim >= 4:
+            return ralign(x, (axes, tp_axis, None, None))
+        if name in ("conv", "h", "c", "n", "m") and x.ndim >= 2:
+            return ralign(x, (axes,) + (None,) * (min(x.ndim, 3) - 1))
+        if name == "pos" or x.ndim == 0:
+            return P()
+        return ralign(x, (axes,) + (None,) * max(x.ndim - 1, 0)) \
+            if x.ndim >= 1 else P()
+
+    return jax.tree_util.tree_map_with_path(f, caches)
+
+
+def to_shardings(specs: Pytree, mesh) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

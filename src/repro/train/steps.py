@@ -1,0 +1,235 @@
+"""Train/serve step builders for every parallelism strategy.
+
+``build_train_step(bundle, mesh, shape_name, ...)`` dispatches on the
+bundle's :class:`ParallelPlan`:
+
+- ``"sharded"``: pure GSPMD — TP / EP / FSDP / DP entirely via parameter &
+  batch PartitionSpecs; XLA inserts the collectives.  Covers every arch
+  whose layer count or memory footprint makes PP the wrong tool (DESIGN.md
+  §4 table).
+- ``"pp_1f1b"`` / ``"pp_wave"``: the PULSE runtime — shard_map pipeline over
+  the 'model' axis, DP (+ZeRO-1 gradient/optimizer sharding) over 'data'
+  (+'pod'); wave folds stages symmetrically per the paper.
+
+All builders return ``(step_fn, example_inputs, in_shardings,
+out_shardings)`` where example_inputs are ShapeDtypeStructs — the dry-run
+lowers without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         int8_adamw_init, int8_adamw_update)
+from repro.runtime import sharding as shard_rules
+from repro.runtime.pipeline import PipelineConfig
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    strategy: str = "sharded"           # sharded | pp_1f1b | pp_wave
+    batch_axes: tuple = ("pod", "data")
+    tp_axis: str | None = "model"
+    fsdp_axes: tuple = ("data",)
+    ep: bool = False                    # expert parallelism over tp_axis
+    pp_degree: int = 16
+    microbatches: int = 16
+    int8_optimizer: bool = False
+    seq_shard_axis: str | None = None   # decode-cache sequence sharding
+    custom_rules: dict | None = None
+    notes: str = ""
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _filter_axes(mesh, axes):
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def param_specs_for(params_struct, mesh, plan: ParallelPlan) -> Pytree:
+    fsdp = _filter_axes(mesh, plan.fsdp_axes)
+    return shard_rules.build_param_specs(
+        params_struct,
+        tp_axis=plan.tp_axis if plan.tp_axis in mesh.axis_names else None,
+        fsdp_axes=fsdp or None,
+        ep_axis=(plan.tp_axis if plan.ep else None),
+        rules=plan.custom_rules,
+        axis_sizes=dict(zip(mesh.axis_names, mesh.devices.shape)))
+
+
+def opt_specs_like(param_specs: Pytree, int8: bool,
+                   fsdp_axes: tuple = ()) -> Pytree:
+    if not int8:
+        return {"m": param_specs, "v": param_specs, "step": P()}
+    # int8 moments are flat (nblocks, 256) tensors; shard blocks over the
+    # ZeRO axes (block count is padded to stay divisible — optim.adamw).
+    zspec = P(fsdp_axes) if fsdp_axes else P()
+    q = jax.tree.map(lambda s: {"q": zspec, "s": zspec}, param_specs,
+                     is_leaf=lambda x: isinstance(x, P))
+    return {"m": q, "v": q, "step": P()}
+
+
+# ===========================================================================
+# GSPMD ("sharded") strategy
+# ===========================================================================
+
+def build_sharded_train_step(loss_fn: Callable, init_fn: Callable,
+                             batch_struct: Pytree, mesh, plan: ParallelPlan,
+                             opt_cfg: AdamWConfig = AdamWConfig()):
+    key_s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    params_struct = jax.eval_shape(init_fn, key_s)
+    o_init = int8_adamw_init if plan.int8_optimizer else adamw_init
+    o_update = int8_adamw_update if plan.int8_optimizer else adamw_update
+    opt_struct = jax.eval_shape(o_init, params_struct)
+
+    p_specs = param_specs_for(params_struct, mesh, plan)
+    o_specs = opt_specs_like(p_specs, plan.int8_optimizer,
+                             _filter_axes(mesh, plan.fsdp_axes))
+    b_specs = shard_rules.batch_specs(
+        batch_struct, dp_axes=_filter_axes(mesh, plan.batch_axes), mesh=mesh)
+
+    def train_step(params, opt_state, batch, rng):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
+        params, opt_state = o_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    in_sh = (_ns(mesh, p_specs), _ns(mesh, o_specs), _ns(mesh, b_specs),
+             NamedSharding(mesh, P()))
+    out_sh = (_ns(mesh, p_specs), _ns(mesh, o_specs), NamedSharding(mesh, P()))
+    step = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0, 1))
+    example = (params_struct, opt_struct, batch_struct, key_s)
+    return step, example, in_sh, out_sh
+
+
+def build_forward_step(loss_fn: Callable, init_fn: Callable,
+                       batch_struct: Pytree, mesh, plan: ParallelPlan):
+    """Inference-prefill proxy: lower the forward pass only (no grad,
+    no optimizer) with the same parameter shardings."""
+    key_s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    params_struct = jax.eval_shape(init_fn, key_s)
+    p_specs = param_specs_for(params_struct, mesh, plan)
+    b_specs = shard_rules.batch_specs(
+        batch_struct, dp_axes=_filter_axes(mesh, plan.batch_axes), mesh=mesh)
+    in_sh = (_ns(mesh, p_specs), _ns(mesh, b_specs), NamedSharding(mesh, P()))
+    out_sh = NamedSharding(mesh, P())
+    step = jax.jit(lambda params, batch, rng: loss_fn(params, batch, rng),
+                   in_shardings=in_sh, out_shardings=out_sh)
+    example = (params_struct, batch_struct, key_s)
+    return step, example, in_sh, out_sh
+
+
+def build_sharded_serve_step(decode_fn: Callable, init_fn: Callable,
+                             cache_struct: Pytree, token_struct: Pytree,
+                             mesh, plan: ParallelPlan):
+    """decode_fn(params, token, caches) -> (logits, caches)."""
+    key_s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    params_struct = jax.eval_shape(init_fn, key_s)
+    p_specs = param_specs_for(params_struct, mesh, plan)
+    c_specs = shard_rules.cache_specs(
+        cache_struct, dp_axes=_filter_axes(mesh, plan.batch_axes),
+        tp_axis=plan.tp_axis if plan.tp_axis in mesh.axis_names else None,
+        seq_shard_axis=plan.seq_shard_axis, mesh=mesh)
+    t_specs = shard_rules.batch_specs(
+        token_struct, dp_axes=_filter_axes(mesh, plan.batch_axes), mesh=mesh)
+
+    dp_axes = _filter_axes(mesh, plan.batch_axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tok_leaf = jax.tree.leaves(token_struct)[0]
+    tok_spec = shard_rules.fit_spec(
+        P(dp_axes, None) if dp_axes else P(), tok_leaf.shape, sizes)
+    tok_out = NamedSharding(mesh, tok_spec)
+    in_sh = (_ns(mesh, p_specs), _ns(mesh, t_specs), _ns(mesh, c_specs))
+    out_sh = (tok_out, _ns(mesh, c_specs))
+
+    def serve_step(params, token, caches):
+        logits, caches = decode_fn(params, token, caches)
+        next_tok = jnp.argmax(logits[..., -1:, :], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    step = jax.jit(serve_step, in_shardings=in_sh,
+                   out_shardings=out_sh, donate_argnums=(2,))
+    example = (params_struct, token_struct, cache_struct)
+    return step, example, in_sh, out_sh
+
+
+# ===========================================================================
+# PULSE pipeline strategies
+# ===========================================================================
+
+def build_pp_train_step(adapter, mesh, batch_struct: Pytree,
+                        plan: ParallelPlan,
+                        make_microbatches: Callable,
+                        opt_cfg: AdamWConfig = AdamWConfig(),
+                        extra_stack_fsdp: bool = False):
+    """adapter: LMPipelineAdapter | DiffusionPipelineAdapter (already built
+    with a PipelineConfig matching the mesh's 'model' axis).
+
+    ``make_microbatches(batch, rng, params_edge)`` -> pipeline args after the
+    stacks (e.g. (edge, mbs) or (edge, mbs, aux)); the step differentiates
+    w.r.t. stacks + edge.
+    """
+    key_s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    # Parameter state is stored in pipeline form: (stacks tuple, edge dict).
+    params_struct = jax.eval_shape(adapter.init_pipeline_params, key_s)
+    o_init = int8_adamw_init if plan.int8_optimizer else adamw_init
+    o_update = int8_adamw_update if plan.int8_optimizer else adamw_update
+    opt_struct = jax.eval_shape(o_init, params_struct)
+
+    fsdp = _filter_axes(mesh, plan.fsdp_axes)
+    stack_spec = P("model") if not extra_stack_fsdp else P("model", fsdp)
+    stacks_struct, edge_struct = params_struct
+
+    def stack_specs(tree):
+        return jax.tree.map(lambda _: stack_spec, tree)
+
+    edge_specs = shard_rules.build_param_specs(
+        edge_struct, tp_axis=None, fsdp_axes=fsdp or None)
+    p_specs = (tuple(stack_specs(s) for s in stacks_struct), edge_specs)
+    o_specs = opt_specs_like(p_specs, plan.int8_optimizer, fsdp)
+    b_specs = shard_rules.batch_specs(
+        batch_struct, dp_axes=_filter_axes(mesh, plan.batch_axes), mesh=mesh)
+
+    pipe_fn = adapter.build()
+    dp_axes = _filter_axes(mesh, plan.batch_axes)
+
+    def loss_of(params, batch, rng):
+        stacks, edge = params
+        args = make_microbatches(batch, rng, edge)
+        mb_like = args[0]
+        in_specs = (
+            *(jax.tree.map(lambda _: P("model"), s) for s in stacks),
+            jax.tree.map(lambda _: P(), edge),
+            *(jax.tree.map(
+                lambda x: P(None, dp_axes, *([None] * (x.ndim - 2)))
+                if hasattr(x, "ndim") and x.ndim >= 2 else P(), a)
+              for a in args),
+        )
+        from jax import shard_map
+        return shard_map(pipe_fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=P(), check_vma=False)(*stacks, edge, *args)
+
+    def train_step(params, opt_state, batch, rng):
+        loss, grads = jax.value_and_grad(loss_of)(params, batch, rng)
+        params, opt_state = o_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    in_sh = (_ns(mesh, p_specs), _ns(mesh, o_specs), _ns(mesh, b_specs),
+             NamedSharding(mesh, P()))
+    out_sh = (_ns(mesh, p_specs), _ns(mesh, o_specs), NamedSharding(mesh, P()))
+    step = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0, 1))
+    example = (params_struct, opt_struct, batch_struct, key_s)
+    return step, example, in_sh, out_sh

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# smoke tests and benches must see ONE device; the 512-device override is
+# confined to launch/dryrun.py (and subprocess tests set their own flags).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,59 @@
+"""Measure PULSE-vs-baseline collective-permute bytes from compiled HLO."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.models.diffusion import UViTConfig, init_uvit
+from repro.runtime.pipeline import PipelineConfig
+from repro.runtime.adapters import DiffusionPipelineAdapter, make_diffusion_microbatches
+from repro.runtime.hlo_analysis import collective_bytes
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+key = jax.random.PRNGKey(0)
+cfg = UViTConfig("t", img_size=8, in_ch=4, patch=2, d_model=32,
+                 n_layers=8, n_heads=4, d_ff=64, n_classes=10)
+params = init_uvit(key, cfg)
+B, M = 8, 4
+batch = {"latents": jax.random.normal(key, (B, 8, 8, 4)),
+         "labels": jax.random.randint(key, (B,), 0, 10)}
+mb, aux = make_diffusion_microbatches(batch, key, M, cfg, "uvit")
+pcfg = PipelineConfig(num_devices=4, num_microbatches=M, data_axes=("data",), dp_size=2)
+ad = DiffusionPipelineAdapter(cfg, pcfg, "uvit")
+mb_spec = jax.tree.map(lambda _: P(None, "data"), mb)
+aux_spec = jax.tree.map(lambda _: P(None, "data"), aux)
+
+def lower(fn, stacks, edge):
+    def loss(stacks, edge, mb, aux):
+        return shard_map(fn, mesh=mesh,
+                         in_specs=(jax.tree.map(lambda _: P("model"), stacks[0]),
+                                   jax.tree.map(lambda _: P("model"), stacks[1]),
+                                   jax.tree.map(lambda _: P(), edge),
+                                   mb_spec, aux_spec),
+                         out_specs=P(), check_vma=False)(stacks[0], stacks[1], edge, mb, aux)
+    g = jax.jit(jax.grad(loss, argnums=(0, 1)))
+    return g.lower(stacks, edge, mb, aux).compile()
+
+stacks, edge = ad.split_params(params)
+c_wave = lower(ad.build(), stacks, edge)
+st_wave = collective_bytes(c_wave.as_text())
+print("PULSE wave   :", st_wave)
+
+stacks_b, edge_b = ad.split_params_skip_carry(params)
+c_base = lower(ad.build_skip_carry_baseline(), stacks_b, edge_b)
+st_base = collective_bytes(c_base.as_text())
+print("1F1B baseline:", st_base)
+
+cp_w = st_wave.bytes_by_kind.get("collective-permute", 0)
+cp_b = st_base.bytes_by_kind.get("collective-permute", 0)
+print(f"per-tick collective-permute: wave={cp_w} base={cp_b} "
+      f"reduction={100*(1-cp_w/cp_b):.1f}%")
+# correctness too: baseline loss should be finite
+l = jax.jit(lambda s,e: shard_map(ad.build_skip_carry_baseline(), mesh=mesh,
+      in_specs=(jax.tree.map(lambda _: P("model"), s[0]),
+                jax.tree.map(lambda _: P("model"), s[1]),
+                jax.tree.map(lambda _: P(), e), mb_spec, aux_spec),
+      out_specs=P(), check_vma=False)(s[0], s[1], e, mb, aux))(stacks_b, edge_b)
+print("baseline loss:", float(l))
+assert np.isfinite(float(l))

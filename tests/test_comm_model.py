@@ -1,0 +1,42 @@
+"""Analytic comm model == measured partition volumes (paper §II-C/§V-B)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import make_unet_like
+from repro.core.comm_model import (naive_pp_volume, pulse_volume,
+                                   partition_comm_volume, zero_volume_per_iter)
+from repro.core.partition import partition, blockwise_partition
+
+
+@given(st.integers(2, 8), st.sampled_from([2, 4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_formulas_match_measurement(n_pairs, D):
+    K = 2 * n_pairs
+    if K < 2 * D or n_pairs % (D // 2 or 1):
+        return   # wave needs 2D stages over K blocks
+    a = 1 << 20
+    g = make_unet_like(n_pairs, 0, act_bytes=a, skip_bytes=a)
+    pulse = partition(g, D)
+    base = blockwise_partition(g, D)
+    v_pulse = partition_comm_volume(g, pulse)
+    v_base = partition_comm_volume(g, base)
+    assert abs(v_pulse.fwd_total - pulse_volume(D, a)) < 1e-6
+    assert abs(v_base.fwd_total - naive_pp_volume(K, D, a)) < 1e-6
+    assert v_pulse.skip_bytes == 0.0        # skip locality
+
+
+def test_reduction_grows_with_depth():
+    a = 1 << 20
+    red = []
+    for n_pairs, D in [(4, 4), (8, 8), (24, 8)]:
+        g = make_unet_like(n_pairs, 0, act_bytes=a, skip_bytes=a)
+        vp = partition_comm_volume(g, partition(g, D)).fwd_total
+        vb = partition_comm_volume(g, blockwise_partition(g, D)).fwd_total
+        red.append(1 - vp / vb)
+    assert red[0] < red[1] < red[2]
+    assert red[2] > 0.85    # K=48,D=8: 1 - 2(D-1)/((K+4)D/4-1) = 0.86
+
+
+def test_zero_volume():
+    p = 10 * (1 << 20)
+    assert zero_volume_per_iter(p, 8, 2) < zero_volume_per_iter(p, 8, 3)
+    assert zero_volume_per_iter(p, 1, 2) == 0.0

@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, attention_reference
+from repro.kernels.skip_matmul import (skip_concat_matmul,
+                                       skip_concat_matmul_reference)
+from repro.kernels.linear_scan import (gated_linear_scan,
+                                       gated_linear_scan_reference)
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.mark.parametrize("B,S,T,Hq,Hkv,D", [
+    (2, 128, 128, 4, 2, 64),
+    (1, 256, 256, 2, 2, 32),
+    (2, 128, 256, 4, 1, 64),
+    (1, 128, 128, 8, 8, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_sweep(B, S, T, Hq, Hkv, D, causal, window):
+    if not causal and T < S:
+        pytest.skip("cross shapes need T >= S")
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, T, Hkv, D))
+    out = flash_attention(q, k, v, causal, window)
+    g = Hq // Hkv
+    ref = attention_reference(q, jnp.repeat(k, g, 2), jnp.repeat(v, g, 2),
+                              causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(KEY, (1, 128, 2, 64)).astype(dtype)
+    out = flash_attention(q, q, q, True, None)
+    ref = attention_reference(q, q, q, causal=True)
+    assert out.dtype == dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_grad():
+    q = jax.random.normal(KEY, (1, 128, 2, 32))
+    g = jax.grad(lambda q: flash_attention(q, q, q, True, None).sum())(q)
+    gr = jax.grad(lambda q: attention_reference(q, q, q, causal=True).sum())(q)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("M,D,N", [(128, 128, 128), (256, 256, 128),
+                                   (128, 384, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_skip_matmul_sweep(M, D, N, dtype):
+    ks = jax.random.split(KEY, 3)
+    h = jax.random.normal(ks[0], (M, D)).astype(dtype)
+    s = jax.random.normal(ks[1], (M, D)).astype(dtype)
+    w = (jax.random.normal(ks[2], (2 * D, N)) * 0.1).astype(dtype)
+    out = skip_concat_matmul(h, s, w)
+    ref = skip_concat_matmul_reference(h, s, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_skip_matmul_batched_and_grad():
+    ks = jax.random.split(KEY, 3)
+    h = jax.random.normal(ks[0], (2, 128, 128))
+    s = jax.random.normal(ks[1], (2, 128, 128))
+    w = jax.random.normal(ks[2], (256, 128)) * 0.1
+    out = skip_concat_matmul(h, s, w)
+    assert out.shape == (2, 128, 128)
+    gk = jax.grad(lambda *a: skip_concat_matmul(*a).sum(),
+                  argnums=(0, 1, 2))(h, s, w)
+    gr = jax.grad(lambda *a: skip_concat_matmul_reference(
+        a[0].reshape(-1, 128), a[1].reshape(-1, 128), a[2]).sum(),
+        argnums=(0, 1, 2))(h, s, w)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a).reshape(b.shape),
+                                   np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("R,T,C", [(2, 128, 128), (3, 256, 128),
+                                   (1, 128, 256)])
+def test_linear_scan_sweep(R, T, C):
+    ks = jax.random.split(KEY, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (R, T, C)))
+    x = jax.random.normal(ks[1], (R, T, C))
+    h = gated_linear_scan(a, x)
+    ref = gated_linear_scan_reference(a, x)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_linear_scan_grad():
+    ks = jax.random.split(KEY, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 128, 128)))
+    x = jax.random.normal(ks[1], (2, 128, 128))
+    ga = jax.grad(lambda a, x: (gated_linear_scan(a, x) ** 2).sum(),
+                  argnums=(0, 1))(a, x)
+    gr = jax.grad(lambda a, x: (gated_linear_scan_reference(a, x) ** 2).sum(),
+                  argnums=(0, 1))(a, x)
+    for p, q in zip(ga, gr):
+        np.testing.assert_allclose(np.asarray(p), np.asarray(q),
+                                   rtol=1e-3, atol=1e-3)

@@ -1,0 +1,109 @@
+"""mLSTM / sLSTM / Mamba2 / Zamba2 parallel-recurrent equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.xlstm import (XLSTMConfig, init_xlstm, xlstm_loss,
+                                init_states, decode_step, forward, unembed,
+                                mlstm_parallel, mlstm_recurrent,
+                                init_mlstm_state)
+from repro.models.mamba import (Mamba2Config, Zamba2Config, _ssd_chunked,
+                                ssd_recurrent, init_zamba2, zamba2_loss,
+                                init_states as z_states,
+                                decode_step as z_decode, forward as z_forward)
+from repro.models.layers import AttnConfig
+
+KEY = jax.random.PRNGKey(1)
+
+
+@given(st.integers(0, 1000), st.sampled_from([4, 8]), st.sampled_from([2, 4]))
+@settings(max_examples=8, deadline=None)
+def test_mlstm_parallel_equals_recurrent(seed, S, H):
+    key = jax.random.PRNGKey(seed)
+    B, Dh = 2, 8
+    ks = jax.random.split(key, 5)
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, Dh)) for i in range(3))
+    i_pre = jax.random.normal(ks[3], (B, S, H))
+    f_pre = jax.random.normal(ks[4], (B, S, H)) * 2
+    hp = mlstm_parallel(q, k, v, i_pre, f_pre)
+    stt = init_mlstm_state(B, H, Dh)
+    outs = []
+    for t in range(S):
+        o, stt = mlstm_recurrent(stt, q[:, t], k[:, t], v[:, t],
+                                 i_pre[:, t], f_pre[:, t])
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(hp), np.asarray(jnp.stack(outs, 1)),
+                               rtol=2e-4, atol=2e-5)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=8, deadline=None)
+def test_ssd_chunked_equals_recurrent(seed):
+    key = jax.random.PRNGKey(seed)
+    cfg = Mamba2Config(d_model=32, d_state=8, head_dim=8, chunk=4)
+    b, S, H, P, N = 2, 8, cfg.n_heads, 8, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (b, S, N))
+    C_ = jax.random.normal(ks[4], (b, S, N))
+    y, hf = _ssd_chunked(x, dt, a, B_, C_, 4)
+    stt = jnp.zeros((b, H, N, P))
+    ys = []
+    for t in range(S):
+        yt, stt = ssd_recurrent(stt, x[:, t], dt[:, t], a, B_[:, t], C_[:, t])
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ys, 1)),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(stt),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_xlstm_decode_matches_forward():
+    cfg = XLSTMConfig("t", vocab=64, d_model=32, n_layers=4, n_heads=2,
+                      slstm_every=3)
+    p = init_xlstm(KEY, cfg)
+    tok = jax.random.randint(KEY, (2, 10), 0, 64)
+    sts = init_states(cfg, 2)
+    outs = []
+    for t in range(10):
+        lg, sts = decode_step(p, tok[:, t:t + 1], sts, cfg)
+        outs.append(lg)
+    h, _ = forward(p, tok, cfg)
+    ref = unembed(p, h, cfg)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_zamba2_decode_matches_forward():
+    cfg = Zamba2Config("t", vocab=64, d_model=32, n_layers=6,
+                       mamba=Mamba2Config(d_model=32, d_state=8, head_dim=8,
+                                          chunk=4),
+                       shared_attn=AttnConfig(32, 4, 4, 8), shared_d_ff=64,
+                       shared_every=3, n_shared_blocks=2)
+    p = init_zamba2(KEY, cfg)
+    tok = jax.random.randint(KEY, (2, 8), 0, 64)
+    sts = z_states(cfg, 2, 8)
+    outs = []
+    for t in range(8):
+        lg, sts = z_decode(p, tok[:, t:t + 1], sts, cfg)
+        outs.append(lg)
+    h, _ = z_forward(p, tok, cfg)
+    ref = h @ p["embed"].T
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(ref), rtol=2e-3, atol=2e-3)
+    loss = zamba2_loss(p, {"tokens": tok}, cfg)
+    assert jnp.isfinite(loss)
+
+
+def test_zamba2_shares_parameters():
+    cfg = Zamba2Config("t", vocab=64, d_model=32, n_layers=6,
+                       mamba=Mamba2Config(d_model=32, d_state=8, head_dim=8,
+                                          chunk=4),
+                       shared_attn=AttnConfig(32, 4, 4, 8), shared_d_ff=64,
+                       shared_every=3, n_shared_blocks=1)
+    p = init_zamba2(KEY, cfg)
+    assert len(p["shared_blocks"]) == 1      # one param set, two apply sites
+    assert len(cfg.shared_sites()) == 2

@@ -1,0 +1,88 @@
+"""Partitioner: Algorithm 1 vs brute-force reference; invariants."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Block, BlockGraph, SkipEdge, make_unet_like
+from repro.core.partition import (partition, partition_bidirectional,
+                                  partition_reference, linear_partition,
+                                  blockwise_partition)
+
+
+def _random_nested_graph(rnd, n_pairs, mid):
+    g = make_unet_like(n_pairs, mid)
+    blocks = tuple(
+        Block(b.name, rnd.uniform(0.2, 3.0), b.param_bytes,
+              int(b.act_bytes * rnd.uniform(0.5, 2.0)), b.skip_bytes)
+        for b in g.blocks)
+    return BlockGraph(blocks, g.skips)
+
+
+@given(st.integers(2, 4), st.integers(0, 2), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_bidirectional_matches_bruteforce(n_pairs, mid, seed):
+    rnd = random.Random(seed)
+    g = _random_nested_graph(rnd, n_pairs, mid)
+    for p in (2, 4):
+        if p > g.n:
+            continue
+        got = partition_bidirectional(g, p, lam=0.0)
+        ref = partition_reference(g, p, lam=0.0)
+        assert abs(got.objective - ref.objective) < 1e-9
+        assert got.validate_collocation(g)
+
+
+@given(st.integers(2, 4), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_bidirectional_with_comm_term(n_pairs, seed):
+    rnd = random.Random(seed)
+    g = _random_nested_graph(rnd, n_pairs, 1)
+    got = partition_bidirectional(g, 4, lam=1.0)
+    ref = partition_reference(g, 4, lam=1.0)
+    assert abs(got.objective - ref.objective) < 1e-9
+
+
+@given(st.lists(st.floats(0.1, 5.0), min_size=6, max_size=20),
+       st.integers(2, 5))
+@settings(max_examples=30, deadline=None)
+def test_linear_partition_beats_blockwise(times, p):
+    g = BlockGraph(tuple(Block(f"b{i}", t) for i, t in enumerate(times)))
+    if p > g.n:
+        return
+    lp = linear_partition(g, p, lam=0.0)
+    bw = blockwise_partition(g, p, lam=0.0)
+    assert lp.objective <= bw.objective + 1e-9
+    # lower bound: total/p and max single block
+    assert lp.objective >= max(max(times), sum(times) / p) - 1e-9
+
+
+def test_folded_device_mapping():
+    g = make_unet_like(8, 0)
+    part = partition(g, 4)
+    assert part.num_stages == 8 and part.folded
+    assert [part.device_of_stage(s) for s in range(8)] == [0, 1, 2, 3, 3, 2, 1, 0]
+    assert part.validate_collocation(g)
+
+
+def test_skipless_graph_degenerates_to_linear():
+    g = BlockGraph(tuple(Block(f"b{i}", 1.0) for i in range(12)))
+    part = partition(g, 4)
+    assert not part.folded and part.num_stages == 4
+
+
+def test_infeasible_raises():
+    g = make_unet_like(2, 0)   # 4 blocks
+    with pytest.raises(ValueError):
+        partition_bidirectional(g, 6, lam=0.0)
+
+
+def test_paper_fig7_style_improvement():
+    """Heterogeneous UNet-like graph: skip-aware DP must beat block-wise."""
+    from repro.models.diffusion import UNetConfig, unet_block_graph
+    cfg = UNetConfig("x", img_size=32, base_ch=64, ch_mults=(1, 2, 4, 4),
+                     blocks_per_level=2, attn_levels=(1, 2, 3), ctx_dim=256)
+    g = unet_block_graph(cfg, batch=8)
+    dp = partition_bidirectional(g, 8, lam=0.0)
+    bw = blockwise_partition(g, 8, folded=True, lam=0.0)
+    assert dp.objective < bw.objective

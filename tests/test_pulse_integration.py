@@ -1,0 +1,31 @@
+"""End-to-end PULSE planning: graph -> partition -> schedule -> tuner."""
+import jax.numpy as jnp
+
+from repro.core.graph import make_unet_like
+from repro.core.partition import partition
+from repro.core.schedule import template_wave, validate_schedule, simulate
+from repro.core.tuner import tune, profile_partition
+from repro.core.comm_model import partition_comm_volume
+from repro.core.hw import TPU_V5E, ASCEND_910A_CLUSTER
+from repro.models.diffusion import UViTConfig, uvit_block_graph
+
+
+def test_full_planning_pipeline_uvit():
+    cfg = UViTConfig("t", img_size=32, d_model=512, n_layers=16, n_heads=8,
+                     d_ff=2048)
+    g = uvit_block_graph(cfg, batch=32)
+    D = 4
+    part = partition(g, D)
+    assert part.folded and part.validate_collocation(g)
+    v = partition_comm_volume(g, part)
+    assert v.skip_bytes == 0.0
+    sched = template_wave(D, 8)
+    colloc = [(s, part.num_stages - 1 - s) for s in range(D)]
+    assert not validate_schedule(sched, lambda s: min(s, 2 * D - 1 - s),
+                                 collocated=colloc)
+    prof = profile_partition(g, part)
+    mk, bubble = simulate(sched, prof.fwd_time_per_sample, bwd_ratio=2.0)
+    assert mk > 0 and 0 <= bubble < 0.6
+    choices = tune(g, 16, hw=ASCEND_910A_CLUSTER)
+    assert choices
+    assert choices[0].t_sample <= choices[-1].t_sample

@@ -1,0 +1,61 @@
+"""ILP scheduler + templates (paper Figs. 8/9, Eqs. 6-13)."""
+import pytest
+
+from repro.core.schedule import (template_1f1b, template_wave, ilp_schedule,
+                                 greedy_schedule, validate_schedule, simulate)
+
+
+def test_1f1b_template_valid_and_tight():
+    for D, M in [(2, 2), (4, 4), (4, 8), (8, 4)]:
+        s = template_1f1b(D, M)
+        assert not validate_schedule(s, lambda st: st)
+        assert s.makespan == 2 * (D + M - 1)   # classic 1F1B bound
+
+
+def test_wave_template_valid():
+    for D, M in [(2, 2), (4, 4), (4, 8)]:
+        s = template_wave(D, M)
+        S = 2 * D
+        colloc = [(i, S - 1 - i) for i in range(D)]
+        assert not validate_schedule(s, lambda st: min(st, S - 1 - st),
+                                     collocated=colloc)
+        # work bound: each device owns 2 stages x (F+B) x M unit tasks
+        assert 4 * M <= s.makespan <= 4 * M + 2 * (S - 1)
+
+
+def test_ilp_matches_greedy_small():
+    dev = lambda st: min(st, 3 - st)
+    ilp = ilp_schedule(4, 2, 2, device_of_stage=dev,
+                       collocated=[(0, 3), (1, 2)])
+    assert not validate_schedule(ilp, dev, collocated=[(0, 3), (1, 2)])
+    greedy = greedy_schedule(4, 2, dev, 2)
+    assert ilp.makespan <= greedy.makespan
+
+
+def test_ilp_free_mapping_collocates():
+    """Free device assignment must discover a collocated mapping."""
+    ilp = ilp_schedule(4, 2, 2, device_of_stage=None,
+                       collocated=[(0, 3), (1, 2)], horizon=10)
+    errors = validate_schedule(ilp, None, collocated=[(0, 3), (1, 2)])
+    assert not errors
+    dev = ilp.device_of_stage_map()
+    assert dev[0] == dev[3] and dev[1] == dev[2]
+    assert dev[0] == 0    # anchored
+
+
+def test_simulation_durations():
+    s = template_wave(4, 4)
+    mk, bubble = simulate(s, [1.0] * 8, bwd_ratio=2.0, p2p_time=0.0)
+    # useful work per device = M * (enc F + dec F + enc B + dec B) = 4*6
+    assert mk >= 24.0
+    assert 0.0 <= bubble < 0.5
+    mk2, _ = simulate(s, [1.0] * 8, bwd_ratio=2.0, p2p_time=0.5)
+    assert mk2 > mk
+
+
+def test_monotone_in_microbatches():
+    prev = 0
+    for M in (2, 4, 8):
+        s = template_wave(4, M)
+        assert s.makespan > prev
+        prev = s.makespan

@@ -1,0 +1,55 @@
+"""Hybrid parallelism tuner (paper §VI, Eqs. 14-17)."""
+import dataclasses
+
+from repro.core.graph import make_unet_like
+from repro.core.hw import V100_CLUSTER, Hardware
+from repro.core.tuner import tune, peak_memory, t_allreduce, profile_partition
+from repro.core.partition import partition
+
+
+def _graph():
+    return make_unet_like(8, 0, enc_time=0.05, dec_time=0.05,
+                          act_bytes=64 << 20, skip_bytes=64 << 20,
+                          param_bytes=256 << 20)
+
+
+def test_memory_monotone_in_microbatch():
+    g = _graph()
+    part = partition(g, 4)
+    prof = profile_partition(g, part)
+    mems = [peak_memory(prof, 4, b, wave=True) for b in (1, 2, 4, 8)]
+    assert all(m2 > m1 for m1, m2 in zip(mems, mems[1:]))
+
+
+def test_allreduce_model():
+    hw = V100_CLUSTER
+    assert t_allreduce(1 << 30, 1, hw) == 0.0
+    t8 = t_allreduce(1 << 30, 8, hw)
+    t16 = t_allreduce(1 << 30, 16, hw)
+    assert 0 < t8 < t16 < 2 * (1 << 30) / hw.intra_bw + 1e-3
+
+
+def test_tuner_respects_memory_limit():
+    g = _graph()
+    tight = dataclasses.replace(V100_CLUSTER, mem_limit=8 * (1 << 30))
+    choices = tune(g, 16, hw=tight)
+    assert choices, "some config must be feasible"
+    assert all(c.peak_mem < tight.mem_limit for c in choices)
+
+
+def test_tuner_prefers_pp_when_comm_bound():
+    """On a comm-starved cluster with a heavy model, pure DP pays a huge
+    all-reduce; the tuner should pick P > 1 (paper Fig. 10 Ascend trend)."""
+    g = make_unet_like(8, 0, enc_time=0.01, dec_time=0.01,
+                       act_bytes=1 << 20, skip_bytes=1 << 20,
+                       param_bytes=2 << 30)       # 2 GiB per block
+    slow_net = Hardware("slow", 100e12, 1e12, 2e9, 1e9, 32 * (1 << 30))
+    best = tune(g, 16, hw=slow_net)[0]
+    assert best.P > 1
+
+
+def test_simulation_mode_agrees_on_ranking():
+    g = _graph()
+    a = tune(g, 16, hw=V100_CLUSTER)[0]
+    b = tune(g, 16, hw=V100_CLUSTER, use_simulation=True)[0]
+    assert abs(a.t_sample / max(b.t_sample, 1e-12)) < 50   # same ballpark
