@@ -1,0 +1,77 @@
+"""Auto-pipeline compile path: planning cost + plan quality benchmark.
+
+Measures, across graph sizes and device counts, (a) wall-clock of the full
+compile path — partition + schedule synthesis + validation + layout — and
+(b) the quality gap between the DP partition and the blockwise baseline on
+heterogeneous graphs, via the event-driven simulator (modelled makespan).
+
+CSV rows: ``name,us_per_call,derived`` (harness contract; derived is the
+baseline/pulse simulated-makespan ratio for the quality rows).
+"""
+from __future__ import annotations
+
+import time
+
+
+def run():
+    from repro.core.graph import Block, BlockGraph, make_unet_like
+    from repro.core.partition import blockwise_partition, partition
+    from repro.core.schedule import schedule_for_partition, simulate
+    from repro.core.tuner import profile_partition
+    from repro.models.diffusion import UViTConfig, uvit_pipeline_graph
+    from repro.models.lm import LMConfig, lm_pipeline_graph
+    from repro.models.layers import AttnConfig
+    from repro.runtime.adapters import diffusion_model_fns, lm_model_fns
+    from repro.runtime.compile import auto_pipeline
+
+    rows = []
+
+    # ---- compile-path latency (plan + schedule + layout, no lowering) ---
+    cases = []
+    for n_pairs, D in [(8, 4), (16, 8), (32, 8)]:
+        cfg = UViTConfig("b", img_size=8, in_ch=4, patch=2, d_model=32,
+                         n_layers=2 * n_pairs, n_heads=4, d_ff=64,
+                         n_classes=10)
+        cases.append((f"auto_pipeline_plan_uvit{2*n_pairs}b_d{D}",
+                      uvit_pipeline_graph(cfg),
+                      diffusion_model_fns(cfg, "uvit"), D))
+    lcfg = LMConfig(name="b", vocab=64, d_model=32, n_layers=32,
+                    attn=AttnConfig(32, 4, 2, 8), d_ff=64)
+    cases.append(("auto_pipeline_plan_lm32b_d8",
+                  lm_pipeline_graph(lcfg), lm_model_fns(lcfg), 8))
+
+    for name, graph, fns, D in cases:
+        t0 = time.perf_counter()
+        iters = 5
+        for _ in range(iters):
+            cp = auto_pipeline(graph, fns, D, pipeline_devices=D,
+                               microbatches=2 * D)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        rows.append(f"{name},{us:.0f},makespan={cp.schedule.makespan}")
+
+    # ---- plan quality: DP partition vs blockwise on heterogeneous UNet --
+    for n_pairs, D in [(8, 4), (24, 8)]:
+        g0 = make_unet_like(n_pairs, 0)
+        import random
+        rnd = random.Random(0)
+        g = BlockGraph(tuple(
+            Block(b.name, rnd.uniform(0.2, 3.0), b.param_bytes, b.act_bytes,
+                  b.skip_bytes) for b in g0.blocks), g0.skips)
+        t0 = time.perf_counter()
+        pulse = partition(g, D, lam=0.0)
+        us = (time.perf_counter() - t0) * 1e6
+        # same device count as the DP plan: 2D folded stages over D devices
+        base = blockwise_partition(g, 2 * D, folded=True, lam=0.0)
+        M = 2 * D
+        mk_p, _ = simulate(schedule_for_partition(pulse, M),
+                           profile_partition(g, pulse).fwd_time_per_sample)
+        mk_b, _ = simulate(schedule_for_partition(base, M),
+                           profile_partition(g, base).fwd_time_per_sample)
+        rows.append(f"auto_pipeline_quality_k{2*n_pairs}_d{D},{us:.0f},"
+                    f"sim_speedup={mk_b / mk_p:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -17,7 +17,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.runtime.compat import shard_map
 from repro.models.diffusion import UViTConfig, init_uvit
 from repro.runtime.pipeline import PipelineConfig
 from repro.runtime.adapters import DiffusionPipelineAdapter, make_diffusion_microbatches

@@ -18,9 +18,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (partition_balance, comm_volume, hybrid_ablation,
-                            throughput_model, zero_breakdown, moe_dispatch)
+                            throughput_model, zero_breakdown, moe_dispatch,
+                            auto_pipeline)
     modules = [partition_balance, comm_volume, hybrid_ablation,
-               throughput_model, zero_breakdown, moe_dispatch]
+               throughput_model, zero_breakdown, moe_dispatch,
+               auto_pipeline]
     if not args.fast:
         from benchmarks import schedule_synthesis, pipeline_cpu
         modules += [schedule_synthesis, pipeline_cpu]

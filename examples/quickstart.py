@@ -54,3 +54,19 @@ for c in tune(g, 16, hw=ASCEND_910A_CLUSTER)[:3]:
     print(f"  P={c.P:2d} G={c.G:2d} b={c.b:3d}  "
           f"t/sample={c.t_sample*1e3:.2f} ms  "
           f"peak={c.peak_mem/2**30:.1f} GiB  wave={c.wave}")
+
+# 6. the auto-pipeline compile path (graph -> partition -> schedule ->
+#    executor; runtime/compile.py) -----------------------------------------
+from repro.runtime.adapters import diffusion_model_fns
+from repro.runtime.compile import auto_pipeline
+
+small = UViTConfig("uvit-s", img_size=8, in_ch=4, patch=2, d_model=64,
+                   n_layers=8, n_heads=4, d_ff=128, n_classes=10)
+from repro.models.diffusion import uvit_pipeline_graph
+rg = uvit_pipeline_graph(small)
+compiled = auto_pipeline(rg, diffusion_model_fns(small, "uvit"), 4,
+                         microbatches=8)
+print("\ncompile path (planning on one device; executor runs under a")
+print("multi-device mesh — see launch/train.py --pipeline):")
+print(compiled.describe())
+print(compiled.schedule.to_ascii())

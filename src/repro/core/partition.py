@@ -1,12 +1,15 @@
 """Skip-aware model partitioning (paper §IV, Algorithm 1).
 
-Three partitioners:
+Five partitioners:
 
 - ``blockwise_partition``      — the paper's baseline: equal-count contiguous
                                  stages, no cost awareness.
 - ``linear_partition``         — classic cost-balanced linear partition
-                                 (used when the graph has no skip edges; the
-                                 bidirectional DP degenerates to this).
+                                 (the S = D skip-free default).
+- ``partition_symmetric_fold`` — mirror-symmetric fold for skip-free graphs
+                                 forced into a wave (min-max over mirror-pair
+                                 costs); the skip-free dispatch target of
+                                 ``partition_bidirectional``.
 - ``partition_bidirectional``  — Algorithm 1: bidirectional DP over
                                  prefix/suffix states with symmetric
                                  collocation constraints for nested skips.
@@ -28,7 +31,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.graph import BlockGraph
+from repro.core.graph import Block, BlockGraph
 from repro.core.hw import Hardware, TPU_V5E
 
 INF = float("inf")
@@ -68,6 +71,26 @@ class Partition:
             if self.cuts[s] <= b < self.cuts[s + 1]:
                 return s
         raise ValueError(f"block {b} outside partition")
+
+    def stage_sizes(self) -> tuple[int, ...]:
+        return tuple(self.cuts[s + 1] - self.cuts[s]
+                     for s in range(self.num_stages))
+
+    def collocated_pairs(self) -> tuple[tuple[int, int], ...]:
+        """Stage pairs pinned to one device by the fold (schedule Eq. (9))."""
+        if not self.folded:
+            return ()
+        S = self.num_stages
+        return tuple((s, S - 1 - s) for s in range(S // 2))
+
+    def mirror_symmetric(self) -> bool:
+        """True iff stage s and stage S-1-s have equal block counts — the
+        shape the folded executor (and fully-paired skip graphs) require."""
+        if not self.folded:
+            return False
+        S, n = self.num_stages, self.cuts[-1]
+        return all(self.cuts[s] + self.cuts[S - s] == n
+                   for s in range(S + 1))
 
     def validate_collocation(self, graph: BlockGraph) -> bool:
         """All skip endpoints on the same device?"""
@@ -156,6 +179,47 @@ def linear_partition(
 
 
 # --------------------------------------------------------------------------
+# Mirror-symmetric fold for skip-free graphs (force_wave)
+# --------------------------------------------------------------------------
+
+def partition_symmetric_fold(
+    graph: BlockGraph, p: int, *,
+    hw: Hardware = TPU_V5E, lam: float = 1.0,
+) -> Partition:
+    """Folded partition with mirror-symmetric cuts for skip-free graphs.
+
+    The folded executor collocates stage s with stage p-1-s and requires
+    equal block counts per pair, so a plain min-max linear partition is not
+    a valid fold shape under heterogeneous costs.  Since each device runs
+    both stages of its pair, balancing device load reduces to a min-max
+    linear partition over mirror-pair costs t[i] + t[n-1-i]; the resulting
+    half-cuts are mirrored onto the full graph.
+
+    The lam comm term on the pair graph is an approximation: it charges the
+    summed enc+dec act bytes of the stage's last pair under one latency,
+    whereas the true up-stream transfer leaves from the stage's first
+    pair's mirror and each boundary is two physical hops.  Exact for
+    uniform act_bytes; a heuristic otherwise (compute balance dominates).
+    """
+    n = graph.n
+    if p % 2 != 0:
+        raise ValueError("symmetric fold needs an even stage count")
+    if n % 2 != 0:
+        raise ValueError(
+            f"symmetric fold needs an even block count, got {n}")
+    D = p // 2
+    pairs = tuple(
+        Block(f"pair{i}",
+              graph.blocks[i].fwd_time + graph.blocks[n - 1 - i].fwd_time,
+              act_bytes=(graph.blocks[i].act_bytes
+                         + graph.blocks[n - 1 - i].act_bytes))
+        for i in range(n // 2))
+    half = linear_partition(BlockGraph(pairs), D, hw=hw, lam=lam)
+    cuts = list(half.cuts) + [n - c for c in reversed(half.cuts[:-1])]
+    return _mk_partition(graph, cuts, True, hw, lam)
+
+
+# --------------------------------------------------------------------------
 # Algorithm 1: bidirectional skip-aware DP (nested skips)
 # --------------------------------------------------------------------------
 
@@ -196,7 +260,7 @@ def partition_bidirectional(
     if p > n:
         raise ValueError(f"cannot split {n} blocks into {p} stages")
     if not graph.skips:
-        return linear_partition(graph, p, hw=hw, lam=lam, folded=True)
+        return partition_symmetric_fold(graph, p, hw=hw, lam=lam)
     if not graph.is_nested():
         return partition_reference(graph, p, hw=hw, lam=lam)
 

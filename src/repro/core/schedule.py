@@ -234,6 +234,34 @@ def template_wave(D: int, M: int) -> Schedule:
     return greedy_schedule(S, M, lambda s: min(s, S - 1 - s), D)
 
 
+def schedule_for_partition(part, M: int, *, use_ilp: bool = False,
+                           time_limit: float = 120.0) -> Schedule:
+    """Synthesize + validate a schedule for a partitioner output.
+
+    ``part`` is any object with the :class:`~repro.core.partition.Partition`
+    interface (num_stages / num_devices / device_of_stage /
+    collocated_pairs).  Greedy template synthesis by default (recovers 1F1B
+    and the wave pattern, §V-B); ``use_ilp`` solves Eqs. (6)-(13) exactly.
+    Raises ``ValueError`` listing every violated constraint if the
+    synthesized schedule is invalid — planning bugs surface here, before an
+    executor is built.
+    """
+    S, D = part.num_stages, part.num_devices
+    if use_ilp:
+        sched = ilp_schedule(S, M, D, device_of_stage=part.device_of_stage,
+                             collocated=part.collocated_pairs(),
+                             time_limit=time_limit)
+    else:
+        sched = greedy_schedule(S, M, part.device_of_stage, D)
+    errors = validate_schedule(sched, part.device_of_stage,
+                               collocated=part.collocated_pairs())
+    if errors:
+        raise ValueError(
+            f"synthesized schedule violates constraints: {errors[:5]}"
+            + (f" (+{len(errors) - 5} more)" if len(errors) > 5 else ""))
+    return sched
+
+
 # --------------------------------------------------------------------------
 # ILP synthesizer (paper Eqs. (6)-(13)) via scipy HiGHS
 # --------------------------------------------------------------------------

@@ -53,6 +53,9 @@ class TunerChoice:
     t_sched: float         # modelled iteration time (Eq. 15)
     peak_mem: float        # modelled peak bytes (Eq. 14)
     wave: bool             # folded wave (S=2P) vs plain 1F1B (S=P)
+    partition: "part_mod.Partition | None" = None
+    # ^ the partition this choice was scored on — the compile path
+    #   (runtime.compile.auto_pipeline) lowers it directly.
 
 
 def peak_memory(
@@ -181,6 +184,7 @@ def tune(
                 t_sched=t_iter,
                 peak_mem=mem,
                 wave=wave and P > 1,
+                partition=part,
             ))
             b *= 2
     choices.sort(key=lambda c: c.t_sample)

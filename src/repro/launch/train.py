@@ -149,14 +149,13 @@ def _build_smoke_trainer(args, key, opt_cfg):
 
 
 def _build_pipeline_trainer(args, key, opt_cfg):
-    """Wave-PP trainer on simulated host devices (the PULSE runtime)."""
+    """Wave-PP trainer on simulated host devices via the PULSE compile path:
+    graph -> partition -> schedule -> executor (runtime.compile)."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
-    from jax import shard_map
-    from repro.models.diffusion import UViTConfig, init_uvit
-    from repro.runtime.pipeline import PipelineConfig
-    from repro.runtime.adapters import (DiffusionPipelineAdapter,
+    from repro.models.diffusion import UViTConfig, uvit_pipeline_graph
+    from repro.runtime.compile import auto_pipeline
+    from repro.runtime.adapters import (diffusion_model_fns,
                                         make_diffusion_microbatches)
     from repro.optim import adamw_init, adamw_update
     from repro.data import SyntheticLatentDataset, ShardedLoader
@@ -166,14 +165,14 @@ def _build_pipeline_trainer(args, key, opt_cfg):
     cfg = UViTConfig("uvit-pp", img_size=8, in_ch=4, patch=2, d_model=64,
                      n_layers=2 * D, n_heads=4, d_ff=128, n_classes=10)
     M = args.microbatches
-    pcfg = PipelineConfig(num_devices=D, num_microbatches=M,
-                          data_axes=("data",), dp_size=2)
-    ad = DiffusionPipelineAdapter(cfg, pcfg, "uvit")
-    params = init_uvit(key, cfg)
-    stacks, edge = ad.split_params(params)
-    params = (stacks, edge)
+    graph = uvit_pipeline_graph(cfg, batch=args.global_batch // M)
+    compiled = auto_pipeline(graph, diffusion_model_fns(cfg, "uvit"),
+                             args.devices, pipeline_devices=D,
+                             microbatches=M, dp_size=2)
+    print("[train] " + compiled.describe().replace("\n", "\n[train] "))
+    params = compiled.init_pipeline_params(key)
     opt_state = adamw_init(params)
-    fn = ad.build()
+    loss_of_mb = compiled.bind(mesh)
 
     ds = SyntheticLatentDataset(img_size=8, channels=4, n_classes=10)
     loader = ShardedLoader(ds, global_batch=args.global_batch)
@@ -182,18 +181,8 @@ def _build_pipeline_trainer(args, key, opt_cfg):
         return {k: jnp.asarray(v) for k, v in raw.items()}
 
     def loss_of(params, batch, rng):
-        stacks, edge = params
         mb, aux = make_diffusion_microbatches(batch, rng, M, cfg, "uvit")
-        specs = lambda t, s: jax.tree.map(lambda _: s, t)
-        return shard_map(
-            fn, mesh=mesh,
-            in_specs=(specs(stacks[0], P("model")),
-                      specs(stacks[1], P("model")),
-                      specs(edge, P()),
-                      jax.tree.map(lambda x: P(None, "data"), mb),
-                      jax.tree.map(lambda x: P(None, "data"), aux)),
-            out_specs=P(), check_vma=False)(stacks[0], stacks[1], edge,
-                                            mb, aux)
+        return loss_of_mb(params, mb, aux)
 
     @jax.jit
     def step_fn(params, opt_state, batch, rng, lr):

@@ -653,3 +653,38 @@ def unet_block_graph(cfg: UNetConfig, batch: int,
     from repro.core.profiler import analytic_block_costs
     return BlockGraph(analytic_block_costs(blocks, hw),
                       tuple(sorted(edges, key=lambda e: e.src)))
+
+
+def uvit_pipeline_graph(cfg: UViTConfig, batch: int = 1,
+                        fwd_times=None, hw: Hardware = TPU_V5E) -> BlockGraph:
+    """Runtime-aligned UViT graph for the auto-pipeline compile path.
+
+    Unlike :func:`uvit_block_graph` (which models embed/out as blocks for
+    the analytic comm studies), this graph has exactly one block per
+    enc/dec transformer block — matching ``params["enc_blocks"]`` /
+    ``params["dec_blocks"]`` rows — with the fully-paired skip edges
+    (enc i -> dec mirror) the partitioner collocates.  ``fwd_times``
+    (length 2*half) injects profiled per-block times.
+    """
+    d, n, ff = cfg.d_model, cfg.n_tokens, cfg.d_ff
+    act = batch * n * d * 2
+    attn_fl = 2 * batch * (4 * n * d * d + 2 * n * n * d)
+    mlp_fl = 2 * batch * (2 * n * d * ff)
+    per_param = (4 * d * d + 2 * d * ff) * 2
+    from repro.core.profiler import analytic_block_costs
+    blocks = []
+    for i in range(cfg.half):
+        blocks.append(Block(f"enc{i}", 0.0, per_param, act, act,
+                            attn_fl + mlp_fl))
+    for i in range(cfg.half):
+        blocks.append(Block(f"dec{i}", 0.0, per_param + 2 * d * d * 2, act, 0,
+                            attn_fl + mlp_fl + 2 * batch * n * 2 * d * d))
+    blocks = list(analytic_block_costs(blocks, hw))
+    if fwd_times is not None:
+        if len(fwd_times) != 2 * cfg.half:
+            raise ValueError("fwd_times must have one entry per block")
+        blocks = [dataclasses.replace(b, fwd_time=float(t))
+                  for b, t in zip(blocks, fwd_times)]
+    total = 2 * cfg.half
+    skips = tuple(SkipEdge(i, total - 1 - i, act) for i in range(cfg.half))
+    return BlockGraph(tuple(blocks), skips)

@@ -319,3 +319,36 @@ def decode_step(params: Params, token: Array, caches: Params, cfg: LMConfig
                            positions=positions)
     logits = unembed(params, h, cfg)
     return logits, caches
+
+
+# --------------------------------------------------------------------------
+# PULSE planner export (runtime-aligned: one block per decoder layer)
+# --------------------------------------------------------------------------
+
+def lm_pipeline_graph(cfg: LMConfig, batch: int = 1, seq: int = 512,
+                      fwd_times=None, hw=None):
+    """Block graph for the auto-pipeline compile path.
+
+    One block per row of ``params["layers"]``; embeddings / head / norms are
+    edge params (replicated) and excluded, so the graph lines up 1:1 with
+    the stacked block parameters the executor shards.  ``fwd_times``
+    overrides the analytic roofline estimate with profiled per-layer times
+    (the paper's §IV-A profiling step).
+    """
+    from repro.core.graph import Block, BlockGraph
+    from repro.core.hw import TPU_V5E
+    from repro.core.profiler import analytic_block_costs
+
+    d, ff = cfg.d_model, cfg.d_ff
+    act = batch * seq * d * 2
+    flops = 2 * batch * seq * (4 * d * d + 2 * d * ff)
+    per_param = (4 * d * d + 2 * d * ff) * 2
+    blocks = [Block(f"layer{i}", 0.0, per_param, act, 0, flops)
+              for i in range(cfg.n_layers)]
+    blocks = list(analytic_block_costs(blocks, hw or TPU_V5E))
+    if fwd_times is not None:
+        if len(fwd_times) != cfg.n_layers:
+            raise ValueError("fwd_times must have one entry per layer")
+        blocks = [dataclasses.replace(b, fwd_time=float(t))
+                  for b, t in zip(blocks, fwd_times)]
+    return BlockGraph(tuple(blocks))

@@ -18,6 +18,7 @@ from repro.models import lm as lm_mod
 from repro.models import diffusion as diff_mod
 from repro.models.lm import LMConfig
 from repro.models.diffusion import UViTConfig, HunyuanDiTConfig
+from repro.runtime.compat import tree_to_host
 from repro.runtime.pipeline import (PipelineConfig, make_linear_pipeline,
                                     make_wave_pipeline,
                                     make_skip_carry_pipeline)
@@ -72,6 +73,7 @@ class LMPipelineAdapter:
         return (_regroup(half, D), _regroup(rest, D, reverse=True)), edge
 
     def merge_params(self, stacks: tuple, edge: Pytree) -> Pytree:
+        stacks = tree_to_host(stacks)   # legacy-JAX shard reassembly fix
         if not self.wave:
             layers = _ungroup(stacks[0])
         else:
@@ -142,8 +144,10 @@ class DiffusionPipelineAdapter:
     """
 
     cfg: Any                     # UViTConfig | HunyuanDiTConfig
-    pcfg: PipelineConfig
-    kind: str = "uvit"           # "uvit" | "hunyuan"
+    pcfg: PipelineConfig | None  # None: callbacks-only (diffusion_model_fns
+    kind: str = "uvit"           # borrows embed/loss/_blk_kwargs; build/
+                                 # split_params need a real PipelineConfig).
+                                 # kind: "uvit" | "hunyuan"
 
     def init_pipeline_params(self, key) -> tuple:
         init = (diff_mod.init_uvit if self.kind == "uvit"
@@ -159,6 +163,7 @@ class DiffusionPipelineAdapter:
         return (enc, dec), edge
 
     def merge_params(self, stacks: tuple, edge: Pytree) -> Pytree:
+        stacks = tree_to_host(stacks)   # legacy-JAX shard reassembly fix
         return {**edge,
                 "enc_blocks": _ungroup(stacks[0]),
                 "dec_blocks": _ungroup(stacks[1], reverse=True)}
@@ -273,3 +278,78 @@ def make_diffusion_microbatches(batch: dict, rng, M: int, cfg,
         aux["ctx"] = split(batch["text_embeds"].astype(cfg.dtype))
         aux["temb"] = split(temb)
     return mb, aux
+
+
+# ===========================================================================
+# Block-level model fns for the auto-compile path (runtime.compile)
+# ===========================================================================
+
+def lm_model_fns(cfg: LMConfig):
+    """Unified-LM family as block-level compile-path callables.
+
+    Pairs with :func:`repro.models.lm.lm_pipeline_graph` (skip-free; the
+    compiler emits a linear S=D pipeline, or a folded S=2D wave under
+    ``force_wave``).
+    """
+    from repro.runtime.compile import PipelineModelFns
+
+    def embed_fn(edge_p, mb, aux):
+        return lm_mod.embed_tokens(edge_p, mb["tokens"], cfg)
+
+    def block_fn(lp, x, aux):
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, _, _ = lm_mod.apply_layer(lp, x, cfg, dense_ffn=False,
+                                     positions=positions)
+        return x
+
+    def loss_fn(edge_p, x, mb, aux):
+        logits = lm_mod.unembed(edge_p, x[:, :-1], cfg)
+        return lm_mod.softmax_xent(logits, mb["tokens"][:, 1:])
+
+    def split_blocks(params):
+        edge = {k: v for k, v in params.items() if k != "layers"}
+        return (params["layers"],), edge
+
+    def merge_blocks(stacks, edge):
+        return {**edge, "layers": stacks[0]}
+
+    return PipelineModelFns(
+        init_fn=lambda key: lm_mod.init_lm(key, cfg),
+        embed_fn=embed_fn, loss_fn=loss_fn, block_fn=block_fn,
+        split_blocks=split_blocks, merge_blocks=merge_blocks)
+
+
+def diffusion_model_fns(cfg: Any, kind: str = "uvit"):
+    """UViT / Hunyuan-DiT as block-level compile-path callables.
+
+    Pairs with :func:`repro.models.diffusion.uvit_pipeline_graph`: every
+    encoder block emits its output as a skip; the mirror decoder block
+    consumes it (fully-paired graph -> mirror-symmetric folded partitions).
+    """
+    from repro.runtime.compile import PipelineModelFns
+
+    ad = DiffusionPipelineAdapter(cfg, None, kind)   # callbacks only
+
+    def enc_block_fn(bp, x, aux):
+        y = diff_mod._apply_vit_block(bp, x, cfg, **ad._blk_kwargs(aux))
+        return y, y
+
+    def dec_block_fn(bp, x, skip, aux):
+        return diff_mod._apply_vit_block(bp, x, cfg, skip=skip,
+                                         **ad._blk_kwargs(aux))
+
+    def split_blocks(params):
+        edge = {k: v for k, v in params.items()
+                if k not in ("enc_blocks", "dec_blocks")}
+        return (params["enc_blocks"], params["dec_blocks"]), edge
+
+    def merge_blocks(stacks, edge):
+        return {**edge, "enc_blocks": stacks[0], "dec_blocks": stacks[1]}
+
+    init = diff_mod.init_uvit if kind == "uvit" else diff_mod.init_hunyuan
+    return PipelineModelFns(
+        init_fn=lambda key: init(key, cfg),
+        embed_fn=ad.embed_fn, loss_fn=ad.loss_fn,
+        enc_block_fn=enc_block_fn, dec_block_fn=dec_block_fn,
+        split_blocks=split_blocks, merge_blocks=merge_blocks,
+        num_param_stacks=2)

@@ -1,0 +1,64 @@
+"""Version-compatible JAX API imports.
+
+``jax.shard_map`` is a top-level API from JAX 0.6 on; earlier releases ship
+it as ``jax.experimental.shard_map.shard_map`` with a ``check_rep`` kwarg
+instead of ``check_vma``.  Every caller in this repo (runtime, train steps,
+tests/helpers, benchmarks) imports ``shard_map`` from here and writes
+against the modern signature; this wrapper translates for old releases.
+
+Policy (see README "JAX compat imports"): never ``from jax import <new
+API>`` directly in runtime or test code — route through this module so a
+single site handles the version split.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+try:  # JAX >= 0.6: public API, `check_vma` kwarg
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+    _LEGACY = False
+except ImportError:  # JAX < 0.6: experimental API, `check_rep` kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _LEGACY = True
+
+
+def shard_map(f: Callable, mesh: Any = None, in_specs: Any = None,
+              out_specs: Any = None, check_vma: bool = True,
+              **kwargs) -> Callable:
+    """``jax.shard_map`` with the modern signature on any JAX version."""
+    if _LEGACY:
+        kwargs.setdefault("check_rep", check_vma)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma, **kwargs)
+
+
+def tree_to_host(tree: Any) -> Any:
+    """Pull every concrete array in a pytree to host memory.
+
+    Workaround for a legacy-JAX CPU miscompile: re-assembling shard_map
+    gradient outputs (NamedSharding over the 'model' axis, replicated over
+    'data') with ``jnp.concatenate`` outside jit inserts an all-reduce that
+    treats the replicated 'data' copies as partial sums — every value comes
+    back exactly dp_size times too large.  Device_get first: the host copy
+    is a plain committed array and reassembles correctly.  No-op on tracers
+    so merge helpers stay usable under jit (where sharding propagation
+    handles the concat correctly).
+
+    Applied on every JAX version, not just the legacy branch: the host
+    copy costs one transfer per merge (a cold path — grad checks and
+    checkpoint export), while gating on the version risks silent wrong
+    gradients on untested intermediate releases.  Correctness wins.
+    """
+    import jax
+    import numpy as np
+
+    def pull(x):
+        if isinstance(x, jax.core.Tracer):
+            return x
+        if isinstance(x, jax.Array):
+            return np.asarray(x)
+        return x
+
+    return jax.tree.map(pull, tree)

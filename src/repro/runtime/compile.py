@@ -1,0 +1,399 @@
+"""PULSE auto-pipeline compile path: graph -> partition -> schedule -> executor.
+
+This is the paper's end-to-end story wired together.  :func:`auto_pipeline`
+takes a :class:`~repro.core.graph.BlockGraph`, a block-level model
+description (:class:`PipelineModelFns`) and a device budget, then
+
+1. **plans**: runs the hybrid tuner (§VI) — or a pinned partitioner call —
+   to pick (P, G, b) and the skip-aware partition (§IV, Algorithm 1);
+2. **schedules**: synthesizes the pipeline schedule from the partition's
+   stage->device mapping (§V: wave / 1F1B templates via the greedy
+   synthesizer, optionally the exact ILP) and validates every constraint
+   family before anything executes;
+3. **lowers**: builds a shard_map executor for the partition.  Unlike the
+   hand-written executors' hard-wired S=D / S=2D even splits, stages here
+   carry *padded block stacks* plus true per-device block counts, so the
+   uneven stage boundaries the DP partitioner actually emits run unchanged
+   (masked block scans; see runtime.pipeline).
+
+The returned :class:`CompiledPipeline` is adapter-compatible (``build`` /
+``split_params`` / ``merge_params`` / ``init_pipeline_params``) so the
+training step builders in ``train.steps`` drive it directly, and carries
+the planning artefacts (choice, partition, schedule) for inspection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.graph import BlockGraph
+from repro.core.hw import Hardware, TPU_V5E
+from repro.core.partition import Partition, partition as partition_graph
+from repro.core.schedule import Schedule, schedule_for_partition
+from repro.core.tuner import TunerChoice, tune
+from repro.runtime.compat import tree_to_host
+from repro.runtime.pipeline import (PipelineConfig, make_linear_pipeline,
+                                    make_wave_pipeline, scan_blocks,
+                                    scan_blocks_consume, scan_blocks_emit,
+                                    shard_pipeline)
+
+Pytree = Any
+
+
+# ===========================================================================
+# Model description consumed by the compiler
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class PipelineModelFns:
+    """Block-level callables + parameter layout for one model family.
+
+    The graph handed to :func:`auto_pipeline` must have exactly one block
+    per row of the model's stacked block parameters (edge params — embed,
+    head, norms — live outside the graph and are replicated).
+
+    ``split_blocks(params) -> (stacks, edge)`` where ``stacks`` is a
+    1-tuple ``(blocks,)`` for a homogeneous stack (rows 0..n-1 in graph
+    order) or a 2-tuple ``(enc_blocks, dec_blocks)`` when encoder and
+    decoder blocks have different parameter structures (UNet/UViT).
+    ``merge_blocks`` is the exact inverse.
+    """
+
+    init_fn: Callable                      # key -> params
+    embed_fn: Callable                     # (edge_p, mb, aux) -> x
+    loss_fn: Callable                      # (edge_p, x, mb, aux) -> scalar
+    split_blocks: Callable                 # params -> (stacks, edge)
+    merge_blocks: Callable                 # (stacks, edge) -> params
+    block_fn: Callable | None = None       # (block_p, x, aux) -> x
+    enc_block_fn: Callable | None = None   # (block_p, x, aux) -> (x, skip)
+    dec_block_fn: Callable | None = None   # (block_p, x, skip, aux) -> x
+    num_param_stacks: int = 1              # len(split_blocks(params)[0])
+
+
+# ===========================================================================
+# Stage layout: partition cuts -> padded per-device stacks
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class StageLayout:
+    """Mapping between a model's flat block stack and per-device stage
+    stacks for a (possibly uneven) partition.
+
+    ``counts[d]`` is device d's true block count per half (folded) or per
+    stage (linear); every stage stack is padded to ``pad`` rows so one SPMD
+    program covers all devices.
+    """
+
+    partition: Partition
+    counts: tuple[int, ...]
+    pad: int
+
+    @classmethod
+    def from_partition(cls, part: Partition) -> "StageLayout":
+        cuts, D = part.cuts, part.num_devices
+        if part.folded and not part.mirror_symmetric():
+            raise ValueError(
+                "folded executor needs mirror-symmetric cuts "
+                f"(stage s and stage S-1-s of equal size); got {cuts}. "
+                "Partially-skipped graphs (mid blocks, sparse skips) can "
+                "yield legal asymmetric folds the executor cannot lower "
+                "yet — see ROADMAP open items")
+        # with mirror symmetry the first D cuts describe both halves
+        counts = part.stage_sizes()[:D]
+        return cls(part, counts, max(counts))
+
+    # ---- device -> block-row ranges ------------------------------------
+    def enc_ranges(self) -> list[tuple[int, int]]:
+        cuts = self.partition.cuts
+        return [(cuts[d], cuts[d + 1])
+                for d in range(self.partition.num_devices)]
+
+    def dec_ranges(self) -> list[tuple[int, int]]:
+        """Rows into the decoder-half stack; index d = stage S-1-d."""
+        cuts = self.partition.cuts
+        mid = cuts[self.partition.num_stages // 2]
+        return [(mid - cuts[d + 1], mid - cuts[d])
+                for d in range(self.partition.num_devices)]
+
+    # ---- padded stacking (host-level; runs outside jit) ----------------
+    def _stack(self, blocks: Pytree, ranges: Sequence[tuple[int, int]]
+               ) -> Pytree:
+        pad = self.pad
+
+        def f(x):
+            rows = []
+            for lo, hi in ranges:
+                r = x[lo:hi]
+                if hi - lo < pad:
+                    z = jnp.zeros((pad - (hi - lo),) + r.shape[1:], r.dtype)
+                    r = jnp.concatenate([r, z], 0)
+                rows.append(r)
+            return jnp.stack(rows)
+
+        return jax.tree.map(f, blocks)
+
+    def _unstack(self, stacked: Pytree, ranges: Sequence[tuple[int, int]]
+                 ) -> Pytree:
+        stacked = tree_to_host(stacked)   # legacy-JAX shard reassembly fix
+        order = sorted(range(len(ranges)), key=lambda d: ranges[d][0])
+
+        def f(x):
+            parts = [x[d, : ranges[d][1] - ranges[d][0]] for d in order]
+            return jnp.concatenate(parts, 0)
+
+        return jax.tree.map(f, stacked)
+
+    def split(self, stacks: tuple) -> tuple:
+        """Model block stacks -> per-device padded stage stacks."""
+        part = self.partition
+        if not part.folded:
+            if len(stacks) != 1:
+                raise ValueError("linear pipeline needs one block stack")
+            return (self._stack(stacks[0], self.enc_ranges()),)
+        if len(stacks) == 1:
+            mid = part.cuts[part.num_stages // 2]
+            enc_b = jax.tree.map(lambda x: x[:mid], stacks[0])
+            dec_b = jax.tree.map(lambda x: x[mid:], stacks[0])
+        else:
+            enc_b, dec_b = stacks
+        return (self._stack(enc_b, self.enc_ranges()),
+                self._stack(dec_b, self.dec_ranges()))
+
+    def merge(self, stage_stacks: tuple, n_model_stacks: int) -> tuple:
+        """Inverse of :meth:`split` (also correct for gradients)."""
+        part = self.partition
+        if not part.folded:
+            return (self._unstack(stage_stacks[0], self.enc_ranges()),)
+        enc_b = self._unstack(stage_stacks[0], self.enc_ranges())
+        dec_b = self._unstack(stage_stacks[1], self.dec_ranges())
+        if n_model_stacks == 1:
+            return (jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], 0), enc_b, dec_b),)
+        return (enc_b, dec_b)
+
+
+# ===========================================================================
+# Compiled pipeline
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPipeline:
+    """Planner output lowered to a runnable shard_map pipeline."""
+
+    graph: BlockGraph
+    partition: Partition
+    schedule: Schedule
+    layout: StageLayout
+    pcfg: PipelineConfig
+    model_fns: PipelineModelFns
+    choice: TunerChoice | None = None      # set when the tuner drove the plan
+
+    @property
+    def folded(self) -> bool:
+        return self.partition.folded
+
+    # ---- parameter plumbing (adapter-compatible) -----------------------
+    def split_params(self, params: Pytree) -> tuple:
+        stacks, edge = self.model_fns.split_blocks(params)
+        return self.layout.split(tuple(stacks)), edge
+
+    def merge_params(self, stage_stacks: tuple, edge: Pytree) -> Pytree:
+        stacks = self.layout.merge(tuple(stage_stacks),
+                                   self.model_fns.num_param_stacks)
+        return self.model_fns.merge_blocks(stacks, edge)
+
+    def init_pipeline_params(self, key) -> tuple:
+        return self.split_params(self.model_fns.init_fn(key))
+
+    # ---- executor ------------------------------------------------------
+    def build(self) -> Callable:
+        """Lower to the generalized executor.
+
+        Folded: ``fn(enc_stack, dec_stack, edge, mbs, aux) -> loss``.
+        Linear: ``fn(stack, edge, mbs) -> loss``.
+        """
+        fns, pcfg = self.model_fns, self.pcfg
+        axis, counts = pcfg.axis, self.layout.counts
+
+        def my_count():
+            return jnp.asarray(counts, jnp.int32)[jax.lax.axis_index(axis)]
+
+        if self.folded:
+            if fns.block_fn is None and (fns.enc_block_fn is None
+                                         or fns.dec_block_fn is None):
+                raise ValueError(
+                    "folded pipeline needs model_fns.block_fn or both "
+                    "enc_block_fn and dec_block_fn")
+            enc_block = fns.enc_block_fn or (
+                lambda bp, x, aux: (fns.block_fn(bp, x, aux), {}))
+            dec_block = fns.dec_block_fn or (
+                lambda bp, x, skip, aux: fns.block_fn(bp, x, aux))
+
+            def enc_stage_fn(stage_p, x, aux):
+                return scan_blocks_emit(enc_block, stage_p, x, my_count(), aux)
+
+            def dec_stage_fn(stage_p, x, skips, aux):
+                return scan_blocks_consume(
+                    dec_block, stage_p, skips, x, my_count(), aux)
+
+            return make_wave_pipeline(
+                pcfg, embed_fn=fns.embed_fn, enc_stage_fn=enc_stage_fn,
+                dec_stage_fn=dec_stage_fn, loss_fn=fns.loss_fn)
+
+        if fns.block_fn is None:
+            raise ValueError("linear pipeline needs model_fns.block_fn")
+
+        def stage_fn(stage_p, x):
+            return scan_blocks(fns.block_fn, stage_p, x, my_count(), None)
+
+        return make_linear_pipeline(
+            pcfg,
+            embed_fn=lambda e, mb: fns.embed_fn(e, mb, None),
+            stage_fn=stage_fn,
+            loss_fn=lambda e, x, mb: fns.loss_fn(e, x, mb, None))
+
+    def bind(self, mesh) -> Callable:
+        """``loss(params, mbs[, aux])`` with params = (stage_stacks, edge),
+        ready for jit/grad on a multi-device mesh."""
+        fn = self.build()
+        pcfg = self.pcfg
+        axis, data = pcfg.axis, pcfg.data_axes
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        missing = [a for a in (axis, *data) if a not in sizes]
+        if missing:
+            # the lowered executor psums over every configured axis; a mesh
+            # without them would fail mid-trace with an unbound-axis error
+            raise ValueError(
+                f"mesh axes {mesh.axis_names} missing {missing} required by "
+                f"this plan (pass matching data_axes to auto_pipeline)")
+        dp = math.prod(sizes[a] for a in data)
+        if sizes[axis] != pcfg.num_devices or dp != pcfg.dp_size:
+            # a size mismatch would not raise — it would silently mis-scale
+            # the loss (dp) or gather clamped stage counts (model axis)
+            raise ValueError(
+                f"mesh sizes {sizes} do not match the plan "
+                f"(model={pcfg.num_devices}, dp={pcfg.dp_size}); rebuild "
+                f"with auto_pipeline(..., dp_size={dp})")
+
+        def batch_spec(t):
+            return jax.tree.map(
+                lambda x: P(None, data)
+                if data and getattr(x, "ndim", 0) >= 2 else P(), t)
+
+        def wrap(edge, *batch_args):
+            return shard_pipeline(
+                fn, mesh, stacked_args=2 if self.folded else 1, axis=axis,
+                batch_specs=(jax.tree.map(lambda _: P(), edge),
+                             *(batch_spec(a) for a in batch_args)))
+
+        if self.folded:
+            def loss(params, mbs, aux):
+                stacks, edge = params
+                return wrap(edge, mbs, aux)(stacks[0], stacks[1], edge,
+                                            mbs, aux)
+        else:
+            def loss(params, mbs):
+                stacks, edge = params
+                return wrap(edge, mbs)(stacks[0], edge, mbs)
+        return loss
+
+    def describe(self) -> str:
+        part, sched = self.partition, self.schedule
+        lines = [
+            f"auto_pipeline: S={part.num_stages} stages over "
+            f"D={part.num_devices} devices "
+            f"({'folded wave' if part.folded else 'linear 1F1B'}), "
+            f"M={self.pcfg.num_microbatches} microbatches",
+            f"  cuts={part.cuts} stage sizes={part.stage_sizes()}",
+            f"  schedule: makespan={sched.makespan} slots, "
+            f"bubble={sched.bubble_ratio():.2f}",
+        ]
+        if self.choice is not None:
+            c = self.choice
+            lines.append(f"  tuner: P={c.P} G={c.G} b={c.b} "
+                         f"t/sample={c.t_sample*1e3:.3f} ms")
+        return "\n".join(lines)
+
+
+# ===========================================================================
+# Entry point
+# ===========================================================================
+
+def auto_pipeline(
+    graph: BlockGraph,
+    model_fns: PipelineModelFns,
+    N: int,
+    hw: Hardware = TPU_V5E,
+    *,
+    microbatches: int | None = None,
+    lam: float = 1.0,
+    force_wave: bool | None = None,
+    pipeline_devices: int | None = None,
+    data_axes: tuple[str, ...] = ("data",),
+    dp_size: int | None = None,
+    remat: bool = True,
+    remat_policy: str | None = None,
+    use_ilp: bool = False,
+) -> CompiledPipeline:
+    """Plan, schedule, and lower a pipeline for ``graph`` on ``N`` devices.
+
+    By default the hybrid tuner (§VI) picks (P, G, b) and supplies its
+    partition; ``dp_size`` then defaults to the chosen G, matching the
+    mesh the plan implies.  Pass ``pipeline_devices`` to pin the pipeline
+    degree and call the partitioner directly (deterministic; used by tests
+    and the training driver, which already knows its mesh shape —
+    ``dp_size`` defaults to 1 there).
+    """
+    def lowerable(p: Partition) -> bool:
+        return not p.folded or p.mirror_symmetric()
+
+    choice: TunerChoice | None = None
+    if pipeline_devices is not None:
+        part = partition_graph(graph, pipeline_devices, hw=hw, lam=lam,
+                               force_wave=force_wave)
+        if not lowerable(part):
+            raise ValueError(
+                f"partition {part.cuts} is folded but not mirror-symmetric "
+                "(partially-skipped graph); the executor cannot lower it — "
+                "only fully-paired skip graphs fold today (ROADMAP open "
+                "item)")
+        if graph.skips and not part.folded:
+            raise ValueError(
+                "graph has skip edges but the plan is linear: the linear "
+                "executor has no skip transport, so skips would be "
+                "silently dropped — skip graphs need a folded plan")
+    else:
+        if force_wave is not None:
+            raise ValueError(
+                "force_wave requires pipeline_devices: the tuner derives "
+                "wave vs linear from graph.skips and would ignore it")
+        choices = tune(graph, N, hw=hw, lam=lam)
+        choices = [c for c in choices if c.partition is not None and c.P > 1
+                   and lowerable(c.partition)]
+        if not choices:
+            raise ValueError(
+                f"tuner found no feasible, lowerable pipeline plan for N={N}")
+        choice = choices[0]
+        part = choice.partition
+
+    D = part.num_devices
+    M = microbatches if microbatches is not None else (
+        2 * D if part.folded else max(D, 2))
+    if dp_size is None:
+        dp_size = choice.G if choice is not None else 1
+    # Schedule synthesis + full constraint validation happens here; an
+    # invalid plan raises before any executor is built.
+    sched = schedule_for_partition(part, M, use_ilp=use_ilp)
+
+    pcfg = PipelineConfig(num_devices=D, num_microbatches=M,
+                          data_axes=data_axes, dp_size=dp_size,
+                          remat=remat, remat_policy=remat_policy)
+    layout = StageLayout.from_partition(part)
+    return CompiledPipeline(graph=graph, partition=part, schedule=sched,
+                            layout=layout, pcfg=pcfg, model_fns=model_fns,
+                            choice=choice)

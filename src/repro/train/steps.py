@@ -28,6 +28,7 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          int8_adamw_init, int8_adamw_update)
 from repro.runtime import sharding as shard_rules
+from repro.runtime.compat import shard_map
 from repro.runtime.pipeline import PipelineConfig
 
 Pytree = Any
@@ -174,8 +175,10 @@ def build_pp_train_step(adapter, mesh, batch_struct: Pytree,
                         make_microbatches: Callable,
                         opt_cfg: AdamWConfig = AdamWConfig(),
                         extra_stack_fsdp: bool = False):
-    """adapter: LMPipelineAdapter | DiffusionPipelineAdapter (already built
-    with a PipelineConfig matching the mesh's 'model' axis).
+    """adapter: LMPipelineAdapter | DiffusionPipelineAdapter — or a
+    CompiledPipeline from ``runtime.compile.auto_pipeline`` (same
+    interface) — already built with a PipelineConfig matching the mesh's
+    'model' axis.
 
     ``make_microbatches(batch, rng, params_edge)`` -> pipeline args after the
     stacks (e.g. (edge, mbs) or (edge, mbs, aux)); the step differentiates
@@ -217,7 +220,6 @@ def build_pp_train_step(adapter, mesh, batch_struct: Pytree,
                 if hasattr(x, "ndim") and x.ndim >= 2 else P(), a)
               for a in args),
         )
-        from jax import shard_map
         return shard_map(pipe_fn, mesh=mesh, in_specs=in_specs,
                          out_specs=P(), check_vma=False)(*stacks, edge, *args)
 

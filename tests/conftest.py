@@ -1,9 +1,16 @@
+import os
+import sys
+
 import jax
 import pytest
 
 # smoke tests and benches must see ONE device; the 512-device override is
 # confined to launch/dryrun.py (and subprocess tests set their own flags).
 jax.config.update("jax_platform_name", "cpu")
+
+# make `helpers.*` (hypothesis shim, subprocess scripts) importable from
+# test modules regardless of how pytest was invoked
+sys.path.insert(0, os.path.dirname(__file__))
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,26 @@
+"""Test helpers: subprocess equivalence scripts + optional-dep shims."""
+import os
+import subprocess
+import sys
+
+_HELPERS_DIR = os.path.dirname(__file__)
+_SUBPROCESS_ENV = dict(
+    os.environ,
+    PYTHONPATH=os.path.abspath(os.path.join(_HELPERS_DIR, "..", "..",
+                                            "src")))
+
+
+def run_helper(script: str, *args: str, timeout: int = 1200) -> str:
+    """Run a helper script (multi-device subprocess) and return stdout.
+
+    Asserts a zero exit, attaching the output tails on failure — shared by
+    every subprocess-based equivalence test.
+    """
+    res = subprocess.run(
+        [sys.executable, os.path.join(_HELPERS_DIR, script), *args],
+        env=_SUBPROCESS_ENV, capture_output=True, text=True,
+        timeout=timeout)
+    assert res.returncode == 0, (
+        f"{script} {args} failed:\nSTDOUT:\n{res.stdout[-3000:]}\n"
+        f"STDERR:\n{res.stderr[-3000:]}")
+    return res.stdout

@@ -3,7 +3,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.runtime.compat import shard_map
 
 from repro.models.diffusion import UViTConfig, init_uvit
 from repro.runtime.pipeline import PipelineConfig

@@ -1,0 +1,78 @@
+"""`hypothesis` shim: property tests collect and run without the optional dep.
+
+When hypothesis is installed (``pip install -e .[test]``) this module
+re-exports the real ``given`` / ``settings`` / ``st``, with shrinking and
+the full strategy library.  Otherwise a tiny deterministic fallback kicks
+in: each ``@given`` test runs ``max_examples`` cases drawn from a
+``random.Random`` seeded by the test's qualified name (crc32 — stable
+across processes, unlike ``hash``).
+
+Only the strategy surface this repo uses is implemented: ``integers``,
+``floats``, ``sampled_from``, ``lists``.  Extend here before reaching for
+new strategies in tests.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            choices = list(seq)
+            return _Strategy(lambda r: r.choice(choices))
+
+        @staticmethod
+        def lists(elem: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            return _Strategy(lambda r: [
+                elem.sample(r)
+                for _ in range(r.randint(min_size, max_size))])
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies_args):
+        def deco(fn):
+            inner = fn
+
+            def wrapper():
+                # read at call time so @settings works above OR below @given
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(inner, "_shim_max_examples", 20))
+                seed0 = zlib.crc32(inner.__qualname__.encode())
+                for i in range(n):
+                    r = random.Random(seed0 + i)
+                    drawn = tuple(s.sample(r) for s in strategies_args)
+                    inner(*drawn)
+
+            # no functools.wraps: __wrapped__ would make pytest read the
+            # inner signature and demand fixtures for the drawn arguments
+            for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+                setattr(wrapper, attr, getattr(inner, attr))
+            return wrapper
+        return deco

@@ -13,7 +13,7 @@ from repro.models.layers import AttnConfig
 from repro.runtime.pipeline import PipelineConfig
 from repro.runtime.adapters import (DiffusionPipelineAdapter, LMPipelineAdapter,
                                     make_diffusion_microbatches)
-from jax import shard_map
+from repro.runtime.compat import shard_map
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 key = jax.random.PRNGKey(0)

@@ -1,5 +1,5 @@
 """Analytic comm model == measured partition volumes (paper §II-C/§V-B)."""
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_compat import given, settings, st
 
 from repro.core.graph import make_unet_like
 from repro.core.comm_model import (naive_pp_volume, pulse_volume,

@@ -1,5 +1,6 @@
 """Diffusion backbones + DDPM objective + block-graph exports."""
 import jax
+import pytest
 import jax.numpy as jnp
 import numpy as np
 
@@ -21,6 +22,7 @@ def test_cosine_schedule_bounds():
     assert bool(jnp.all(ab[:-1] >= ab[1:]))
 
 
+@pytest.mark.slow
 def test_uvit_loss_and_shapes():
     cfg = UViTConfig("t", img_size=8, in_ch=4, patch=2, d_model=32,
                      n_layers=4, n_heads=4, d_ff=64, n_classes=10)
@@ -46,6 +48,7 @@ def test_uvit_graph_nested_symmetric():
         assert g.blocks[e.dst].name.startswith("dec")
 
 
+@pytest.mark.slow
 def test_hunyuan_loss():
     cfg = HunyuanDiTConfig("t", img_size=8, in_ch=4, patch=2, d_model=32,
                            n_layers=4, n_heads=4, d_ff=64, ctx_dim=16,
@@ -58,6 +61,7 @@ def test_hunyuan_loss():
     assert hunyuan_block_graph(cfg, 2).is_nested()
 
 
+@pytest.mark.slow
 def test_unet_loss_and_heterogeneous_graph():
     cfg = UNetConfig("t", img_size=16, in_ch=4, base_ch=16, ch_mults=(1, 2),
                      blocks_per_level=2, attn_levels=(1,), ctx_dim=16,

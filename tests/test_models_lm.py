@@ -24,6 +24,7 @@ def _check_decode(cfg, steps=1, rtol=3e-4):
     return p
 
 
+@pytest.mark.slow
 def test_gqa_tied():
     cfg = LMConfig("t", vocab=128, d_model=64, n_layers=4,
                    attn=AttnConfig(64, 4, 2, 16), d_ff=128,
@@ -35,18 +36,21 @@ def test_gqa_tied():
     assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
 
 
+@pytest.mark.slow
 def test_mqa():
     cfg = LMConfig("t", vocab=128, d_model=64, n_layers=3,
                    attn=AttnConfig(64, 4, 1, 16), d_ff=128)
     _check_decode(cfg)
 
 
+@pytest.mark.slow
 def test_swa():
     cfg = LMConfig("t", vocab=128, d_model=64, n_layers=3,
                    attn=AttnConfig(64, 4, 4, 16, window=6), d_ff=128)
     _check_decode(cfg, steps=4)
 
 
+@pytest.mark.slow
 def test_qk_norm_moe_scatter():
     cfg = LMConfig("t", vocab=128, d_model=64, n_layers=3,
                    attn=AttnConfig(64, 4, 2, 16, qk_norm=True),
@@ -56,6 +60,7 @@ def test_qk_norm_moe_scatter():
     _check_decode(cfg)
 
 
+@pytest.mark.slow
 def test_mla_moe_mtp():
     cfg = LMConfig("t", vocab=128, d_model=64, n_layers=4,
                    mla=MLAConfig(64, 4, q_lora_rank=32, kv_lora_rank=16,
@@ -70,6 +75,7 @@ def test_mla_moe_mtp():
     assert jnp.isfinite(loss)
 
 
+@pytest.mark.slow
 def test_vision_prefix():
     cfg = LMConfig("t", vocab=128, d_model=64, n_layers=2,
                    attn=AttnConfig(64, 4, 2, 16), d_ff=128, vision_prefix=4)

@@ -1,8 +1,9 @@
 """mLSTM / sLSTM / Mamba2 / Zamba2 parallel-recurrent equivalence."""
 import jax
+import pytest
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_compat import given, settings, st
 
 from repro.models.xlstm import (XLSTMConfig, init_xlstm, xlstm_loss,
                                 init_states, decode_step, forward, unembed,
@@ -17,6 +18,7 @@ from repro.models.layers import AttnConfig
 KEY = jax.random.PRNGKey(1)
 
 
+@pytest.mark.slow
 @given(st.integers(0, 1000), st.sampled_from([4, 8]), st.sampled_from([2, 4]))
 @settings(max_examples=8, deadline=None)
 def test_mlstm_parallel_equals_recurrent(seed, S, H):
@@ -61,6 +63,7 @@ def test_ssd_chunked_equals_recurrent(seed):
                                rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_xlstm_decode_matches_forward():
     cfg = XLSTMConfig("t", vocab=64, d_model=32, n_layers=4, n_heads=2,
                       slstm_every=3)
@@ -77,6 +80,7 @@ def test_xlstm_decode_matches_forward():
                                np.asarray(ref), rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_zamba2_decode_matches_forward():
     cfg = Zamba2Config("t", vocab=64, d_model=32, n_layers=6,
                        mamba=Mamba2Config(d_model=32, d_state=8, head_dim=8,

@@ -2,7 +2,7 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers.hypothesis_compat import given, settings, st
 
 from repro.core.graph import Block, BlockGraph, SkipEdge, make_unet_like
 from repro.core.partition import (partition, partition_bidirectional,

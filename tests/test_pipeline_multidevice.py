@@ -3,35 +3,20 @@
 The heavyweight numerical equivalence checks live in tests/helpers/ and run
 in a subprocess so the main pytest process keeps a single CPU device.
 """
-import os
-import subprocess
-import sys
-
 import pytest
 
-HELPERS = os.path.join(os.path.dirname(__file__), "helpers")
-ENV = dict(os.environ,
-           PYTHONPATH=os.path.abspath(
-               os.path.join(os.path.dirname(__file__), "..", "src")))
+from helpers import run_helper
 
 
-def _run(script):
-    res = subprocess.run(
-        [sys.executable, os.path.join(HELPERS, script)],
-        env=ENV, capture_output=True, text=True, timeout=1200)
-    assert res.returncode == 0, (
-        f"{script} failed:\nSTDOUT:\n{res.stdout[-3000:]}\n"
-        f"STDERR:\n{res.stderr[-3000:]}")
-    return res.stdout
-
-
+@pytest.mark.slow
 def test_pipeline_equivalence():
-    out = _run("pipeline_equiv.py")
+    out = run_helper("pipeline_equiv.py")
     assert "PIPELINE EQUIVALENCE: ALL OK" in out
 
 
+@pytest.mark.slow
 def test_comm_volume_reduction():
-    out = _run("comm_volume_hlo.py")
+    out = run_helper("comm_volume_hlo.py")
     assert "reduction=" in out
     # PULSE must cut collective-permute bytes vs the skip-carry baseline
     red = float(out.split("reduction=")[1].split("%")[0])

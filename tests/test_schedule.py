@@ -1,8 +1,14 @@
-"""ILP scheduler + templates (paper Figs. 8/9, Eqs. 6-13)."""
+"""ILP scheduler + templates (paper Figs. 8/9, Eqs. 6-13) + property
+tests: randomized (S, M, D, collocation) sweeps of the greedy synthesizer.
+"""
+import random
+
 import pytest
 
+from helpers.hypothesis_compat import given, settings, st
 from repro.core.schedule import (template_1f1b, template_wave, ilp_schedule,
-                                 greedy_schedule, validate_schedule, simulate)
+                                 greedy_schedule, validate_schedule, simulate,
+                                 schedule_for_partition)
 
 
 def test_1f1b_template_valid_and_tight():
@@ -23,6 +29,7 @@ def test_wave_template_valid():
         assert 4 * M <= s.makespan <= 4 * M + 2 * (S - 1)
 
 
+@pytest.mark.slow
 def test_ilp_matches_greedy_small():
     dev = lambda st: min(st, 3 - st)
     ilp = ilp_schedule(4, 2, 2, device_of_stage=dev,
@@ -32,6 +39,7 @@ def test_ilp_matches_greedy_small():
     assert ilp.makespan <= greedy.makespan
 
 
+@pytest.mark.slow
 def test_ilp_free_mapping_collocates():
     """Free device assignment must discover a collocated mapping."""
     ilp = ilp_schedule(4, 2, 2, device_of_stage=None,
@@ -59,3 +67,77 @@ def test_monotone_in_microbatches():
         s = template_wave(4, M)
         assert s.makespan > prev
         prev = s.makespan
+
+
+# ---------------------------------------------------------------------------
+# property tests: schedule synthesis under random shapes + collocations
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 5), st.integers(2, 6), st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_greedy_folded_always_valid(D, M, seed):
+    """Folded S=2D mapping: zero constraint violations, simulate never
+    deadlocks, for random shapes and durations."""
+    rnd = random.Random(seed)
+    S = 2 * D
+    dev = lambda s: min(s, S - 1 - s)
+    sched = greedy_schedule(S, M, dev, D)
+    colloc = [(s, S - 1 - s) for s in range(D)]
+    assert not validate_schedule(sched, dev, collocated=colloc)
+    times = [rnd.uniform(0.1, 2.0) for _ in range(S)]
+    mk, bubble = simulate(sched, times, bwd_ratio=rnd.uniform(1.0, 3.0),
+                          p2p_time=rnd.uniform(0.0, 0.5))
+    assert mk > 0 and 0.0 <= bubble < 1.0
+
+
+@given(st.integers(2, 8), st.integers(2, 5), st.integers(2, 4),
+       st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_greedy_random_mapping_always_valid(S, M, D, seed):
+    """Arbitrary stage->device mappings (random collocation groups): the
+    greedy synthesizer must still satisfy all six constraint families and
+    produce a deadlock-free ordering."""
+    rnd = random.Random(seed)
+    devs = [rnd.randrange(D) for _ in range(S)]
+    dev = lambda s: devs[s]
+    sched = greedy_schedule(S, M, dev, D)
+    colloc = [(i, j) for i in range(S) for j in range(i + 1, S)
+              if devs[i] == devs[j]]
+    assert not validate_schedule(sched, dev, collocated=colloc)
+    times = [rnd.uniform(0.1, 2.0) for _ in range(S)]
+    mk, _ = simulate(sched, times, bwd_ratio=2.0,
+                     p2p_time=rnd.uniform(0.0, 0.3))
+    assert mk > 0        # simulate raises RuntimeError on deadlock
+
+
+@given(st.integers(1, 4), st.integers(2, 6), st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_schedule_for_partition_uneven_cuts(D, M, seed):
+    """Partition-driven synthesis validates for random uneven cuts."""
+    from repro.core.graph import Block, BlockGraph
+    from repro.core.partition import linear_partition
+    rnd = random.Random(seed)
+    n = rnd.randint(max(2, D), 3 * D + 2)
+    g = BlockGraph(tuple(Block(f"b{i}", rnd.uniform(0.2, 3.0))
+                         for i in range(n)))
+    part = linear_partition(g, D, lam=0.0)
+    sched = schedule_for_partition(part, M)    # raises if invalid
+    assert sched.makespan >= 2 * M             # F+B per microbatch somewhere
+
+
+@pytest.mark.slow
+@given(st.integers(2, 3), st.integers(2, 3), st.integers(0, 1000))
+@settings(max_examples=4, deadline=None)
+def test_ilp_never_worse_than_greedy_random(D, M, seed):
+    """Exact ILP (Eqs. 6-13) matches or beats the greedy template on
+    random small instances (random stage->device mappings)."""
+    rnd = random.Random(seed)
+    S = 2 * D
+    devs = [rnd.randrange(D) for _ in range(S)]
+    dev = lambda s: devs[s]
+    colloc = [(i, j) for i in range(S) for j in range(i + 1, S)
+              if devs[i] == devs[j]]
+    greedy = greedy_schedule(S, M, dev, D)
+    ilp = ilp_schedule(S, M, D, device_of_stage=dev, collocated=colloc)
+    assert not validate_schedule(ilp, dev, collocated=colloc)
+    assert ilp.makespan <= greedy.makespan

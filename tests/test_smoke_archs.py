@@ -7,7 +7,13 @@ import pytest
 from repro.configs.smoke import SMOKE_FACTORIES
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
-ARCHS = sorted(SMOKE_FACTORIES)
+# Large configs take multi-second jits each; tier-1 keeps a light
+# cross-family subset and the rest run with `-m slow` / `-m ""`.
+_HEAVY = {"deepseek-v3-671b", "sdv2-unet", "hunyuan-dit", "zamba2-2.7b",
+          "granite-34b", "xlstm-125m", "whisper-base", "qwen3-moe-30b-a3b",
+          "h2o-danube-1.8b", "internlm2-20b", "uvit-h", "internvl2-2b"}
+ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+         for a in sorted(SMOKE_FACTORIES)]
 
 
 @pytest.mark.parametrize("arch", ARCHS)
