@@ -40,6 +40,8 @@ def run():
     cases.append(("auto_pipeline_plan_lm32b_d8",
                   lm_pipeline_graph(lcfg), lm_model_fns(lcfg), 8))
 
+    from repro.runtime.schedule_exec import StepTables
+
     for name, graph, fns, D in cases:
         t0 = time.perf_counter()
         iters = 5
@@ -48,6 +50,15 @@ def run():
                                microbatches=2 * D)
         us = (time.perf_counter() - t0) / iters * 1e6
         rows.append(f"{name},{us:.0f},makespan={cp.schedule.makespan}")
+        # schedule -> step-table lowering cost (host-side, per compile)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            tabs = StepTables.from_schedule(cp.schedule,
+                                            folded=cp.folded)
+            cp.schedule.device_programs()
+        us = (time.perf_counter() - t0) / iters * 1e6
+        rows.append(f"{name.replace('_plan_', '_lower_')},{us:.0f},"
+                    f"steps={tabs.num_steps}")
 
     # ---- plan quality: DP partition vs blockwise on heterogeneous UNet --
     for n_pairs, D in [(8, 4), (24, 8)]:

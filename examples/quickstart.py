@@ -70,3 +70,16 @@ print("\ncompile path (planning on one device; executor runs under a")
 print("multi-device mesh — see launch/train.py --pipeline):")
 print(compiled.describe())
 print(compiled.schedule.to_ascii())
+
+# 7. the lowered step programs: the same grid as dense arrays, and the
+#    executor-facing step tables the scan body actually reads ------------
+from repro.runtime.schedule_exec import StepTables
+
+progs = compiled.schedule.device_programs()
+print(f"\ndevice_programs: virtual[D, T] over {progs.num_devices} devices x "
+      f"{progs.num_steps} steps (-1 = idle):")
+print(progs.virtual)
+tabs = StepTables.from_schedule(compiled.schedule, folded=compiled.folded)
+print(f"step tables (forward slots only, {tabs.num_steps} steps; "
+      "0=idle 1=enc 2=dec):")
+print(tabs.sel)

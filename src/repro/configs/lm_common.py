@@ -2,10 +2,8 @@
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ArchBundle, ShapeSpec, SHAPES, token_batch_struct
 from repro.models import lm as lm_mod

@@ -9,7 +9,6 @@ output shapes.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import lm as lm_mod
 from repro.models import whisper as wh

@@ -7,7 +7,7 @@ Tiny model: FSDP over 'model' + DP over pod x data.
 """
 import jax
 import jax.numpy as jnp
-from repro.configs.base import ArchBundle, ShapeSpec, SHAPES
+from repro.configs.base import ArchBundle, ShapeSpec
 from repro.models import whisper as wh
 from repro.models.whisper import WhisperConfig
 from repro.train.steps import ParallelPlan

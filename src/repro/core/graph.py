@@ -13,7 +13,6 @@ the comm-volume model (`core.comm_model`) all consume this structure, while
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 
 @dataclasses.dataclass(frozen=True)

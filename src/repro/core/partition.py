@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import math
 from typing import Sequence
 
 import numpy as np

@@ -53,6 +53,31 @@ class Placement:
 
 
 @dataclasses.dataclass(frozen=True)
+class DevicePrograms:
+    """Dense per-device step programs lowered from a :class:`Schedule`.
+
+    Three ``[D, makespan]`` arrays: ``virtual[d, t]`` / ``microbatch[d, t]``
+    give the task device ``d`` runs at step ``t`` (``-1`` when idle) and
+    ``valid[d, t]`` marks occupied slots.  This is ``Schedule.grid()`` in
+    array form — the lowering-facing representation the table-driven
+    executors (``runtime.schedule_exec``) consume, and the thing to print
+    next to :meth:`Schedule.to_ascii` when debugging a plan.
+    """
+
+    virtual: np.ndarray
+    microbatch: np.ndarray
+    valid: np.ndarray
+
+    @property
+    def num_devices(self) -> int:
+        return self.virtual.shape[0]
+
+    @property
+    def num_steps(self) -> int:
+        return self.virtual.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
 class Schedule:
     S: int            # pipeline stages
     M: int            # microbatches
@@ -70,6 +95,31 @@ class Schedule:
         for p in self.placements:
             g[p.device][p.step] = p
         return g
+
+    def device_programs(self) -> DevicePrograms:
+        """Extract the per-device step programs as dense arrays.
+
+        The arrays agree with :meth:`grid` slot-for-slot (property-tested);
+        executors lower *these*, so what runs is exactly what was
+        synthesized and validated.  Raises ``ValueError`` (not an opaque
+        ``IndexError``) on out-of-range placements — ``validate_schedule``
+        reports the same malformations as constraint family (7).
+        """
+        T = self.makespan
+        for p in self.placements:
+            err = placement_bounds_error(p, self.S, self.M, self.D)
+            if err is not None:
+                raise ValueError(
+                    f"placement v={p.virtual} m={p.microbatch}: {err}; "
+                    "run validate_schedule for the full report")
+        virt = np.full((self.D, T), -1, dtype=np.int32)
+        mb = np.full((self.D, T), -1, dtype=np.int32)
+        valid = np.zeros((self.D, T), dtype=bool)
+        for p in self.placements:
+            virt[p.device, p.step] = p.virtual
+            mb[p.device, p.step] = p.microbatch
+            valid[p.device, p.step] = True
+        return DevicePrograms(virt, mb, valid)
 
     def bubble_ratio(self) -> float:
         busy = len(self.placements)
@@ -104,6 +154,26 @@ class Schedule:
 # Validation (paper constraints (6)-(11))
 # --------------------------------------------------------------------------
 
+def placement_bounds_error(p: Placement, S: int, M: int, D: int
+                           ) -> str | None:
+    """Bounds check shared by validate_schedule / device_programs /
+    StepTables lowering — one source of truth for what 'in bounds' means.
+
+    Microbatch/virtual bounds matter as much as device/step: the executors
+    index [M]-sized buffers with clamped dynamic indices, so an
+    out-of-range microbatch would silently corrupt microbatch M-1's slots
+    instead of failing.
+    """
+    if not 0 <= p.virtual < num_virtual(S):
+        return f"virtual stage {p.virtual} out of range [0, {num_virtual(S)})"
+    if not 0 <= p.microbatch < M:
+        return f"microbatch {p.microbatch} out of range [0, {M})"
+    if not 0 <= p.device < D:
+        return f"device {p.device} out of range [0, {D})"
+    if p.step < 0:
+        return f"negative step {p.step}"
+    return None
+
 def validate_schedule(
     sched: Schedule,
     device_of_stage: Callable[[int], int] | None = None,
@@ -112,6 +182,14 @@ def validate_schedule(
     """Return a list of violated-constraint descriptions (empty == valid)."""
     errors: list[str] = []
     S, M, D = sched.S, sched.M, sched.D
+    # Placement bounds first (family (7)): an out-of-range virtual stage,
+    # microbatch, device, or negative step would otherwise pass validation
+    # and crash later in grid()/device_programs()/lowering with an opaque
+    # IndexError — or worse, silently corrupt a clamped buffer slot.
+    for p in sched.placements:
+        err = placement_bounds_error(p, S, M, D)
+        if err is not None:
+            errors.append(f"(7) v={p.virtual} m={p.microbatch}: {err}")
     seen: dict[tuple[int, int], Placement] = {}
     for p in sched.placements:
         key = (p.virtual, p.microbatch)
@@ -125,7 +203,7 @@ def validate_schedule(
     if errors:
         return errors
 
-    # (7) device exclusivity
+    # (7) device exclusivity (bounds were checked up front)
     busy: dict[tuple[int, int], Placement] = {}
     for p in sched.placements:
         key = (p.device, p.step)

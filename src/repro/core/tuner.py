@@ -9,8 +9,7 @@ iteration-time model (Eq. 15 + 16) and return the argmin of per-sample time
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Sequence
+from typing import Callable
 
 from repro.core.graph import BlockGraph
 from repro.core.hw import Hardware, TPU_V5E
@@ -53,6 +52,9 @@ class TunerChoice:
     t_sched: float         # modelled iteration time (Eq. 15)
     peak_mem: float        # modelled peak bytes (Eq. 14)
     wave: bool             # folded wave (S=2P) vs plain 1F1B (S=P)
+    M: int = 1             # microbatches per iteration the score assumed —
+    #   auto_pipeline executes this M so the iteration it runs is the one
+    #   the tuner ranked (previously the executor silently ran M = 2D).
     partition: "part_mod.Partition | None" = None
     # ^ the partition this choice was scored on — the compile path
     #   (runtime.compile.auto_pipeline) lowers it directly.
@@ -64,7 +66,6 @@ def peak_memory(
     """Eq. (14).  The busiest devices are the innermost collocated pair
     (stages P-1 and P, 0-indexed) which retain activations for all
     in-flight microbatches (P of them in the wave steady state)."""
-    S = prof.num_stages
     if wave:
         i, j = P - 1, P  # innermost pair on the same device
         m_theta = prof.param_bytes[i] + prof.param_bytes[j]
@@ -90,19 +91,27 @@ def t_allreduce(param_bytes: float, G: int, hw: Hardware) -> float:
 
 
 def t_sched_paper(
-    prof: StageProfile, P: int, b: int, G: int, hw: Hardware
+    prof: StageProfile, P: int, b: int, G: int, hw: Hardware,
+    *, M: int | None = None,
 ) -> float:
-    """Eq. (15), verbatim: (10P-4) T_f(b) + (10P-12)(t_lat + b M_o / B) + T_AR.
+    """Eq. (15): (10P-4) T_f(b) + (10P-12)(t_lat + b M_o / B) + T_AR.
 
-    The closed form assumes the default wave configuration with M = 2P
-    microbatches in flight (paper's minimal-stage setting S = 2P)."""
+    The paper's closed form corresponds to M = P microbatches per
+    iteration on the S = 2P wave: 6 T_f steady state per microbatch per
+    device plus a ~4P ramp, i.e. (6M + 4P - 4) T_f at M = P.  Passing a
+    different ``M`` prices that iteration shape with the same wave model
+    (so custom ``microbatches_per_iter`` overrides in :func:`tune` are
+    scored for the M they actually execute); ``tune`` records the scored M
+    on ``TunerChoice.M`` and the executor runs the same iteration shape."""
+    if M is None:
+        M = P
     t_f = max(prof.fwd_time_per_sample) * b
     m_o = max(prof.out_bytes_per_sample) * b
     m_theta = max(prof.param_bytes)
     p2p = hw.t_lat + m_o / hw.inter_bw
     return (
-        (10 * P - 4) * t_f
-        + max(10 * P - 12, 0) * p2p
+        (6 * M + 4 * P - 4) * t_f
+        + max(6 * M + 4 * P - 12, 0) * p2p
         + t_allreduce(m_theta, G, hw)
     )
 
@@ -134,11 +143,12 @@ def tune(
     """Enumerate (P, G, b) and return all feasible choices, best first.
 
     ``N`` is the total device count.  ``microbatches_per_iter(P)`` defaults
-    to the paper's M = 2P wave setting.
+    to M = P — the iteration shape Eq. (15)'s (10P-4) closed form prices
+    (6*T_f steady-state per microbatch per device + ~4P ramp), which makes
+    Eq. (17)'s denominator b*M*G the per-iteration sample count.  The M
+    each choice was scored with is recorded on ``TunerChoice.M``;
+    ``auto_pipeline`` executes that M.
     """
-    # Eq. (15)'s (10P-4) closed form corresponds to M = P microbatches per
-    # iteration (6*T_f steady-state per microbatch per device + ~4P ramp),
-    # which makes Eq. (17)'s denominator b*P*G the per-iteration sample count.
     if microbatches_per_iter is None:
         microbatches_per_iter = lambda P: max(P, 1)
     wave = bool(graph.skips)
@@ -170,7 +180,7 @@ def tune(
                 t_iter = t_sched_simulated(prof, P, b, G, hw,
                                            microbatches=M, wave=wave)
             elif P > 1:
-                t_iter = t_sched_paper(prof, P, b, G, hw)
+                t_iter = t_sched_paper(prof, P, b, G, hw, M=M)
             else:
                 # pure DP: compute + all-reduce
                 t_f = sum(prof.fwd_time_per_sample) * b
@@ -184,6 +194,7 @@ def tune(
                 t_sched=t_iter,
                 peak_mem=mem,
                 wave=wave and P > 1,
+                M=M,
                 partition=part,
             ))
             b *= 2

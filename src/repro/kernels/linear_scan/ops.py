@@ -7,7 +7,6 @@ so the same kernel serves both directions (time-flipped).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,7 @@ import traceback
 
 import jax
 
-from repro.configs import get_arch, list_archs, ASSIGNED, PAPER_ARCHS
+from repro.configs import get_arch, ASSIGNED, PAPER_ARCHS
 from repro.configs.base import SHAPES
 from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, dp_size
 from repro.runtime.hlo_analysis import collective_bytes, cost_summary, \

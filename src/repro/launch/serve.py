@@ -30,7 +30,6 @@ def main(argv=None):
     key = jax.random.PRNGKey(0)
 
     # build the family-appropriate decode path via the smoke config's family
-    from repro.configs import smoke as sm
     factory = SMOKE_FACTORIES[name]
     loss_fn, init_fn, make_batch, cfg = factory()
     params = init_fn(key)

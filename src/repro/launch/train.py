@@ -49,7 +49,6 @@ def main(argv=None):
 
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro.checkpoint import CheckpointManager, restore_checkpoint, \
         latest_step

@@ -12,12 +12,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Params = dict
 Array = jax.Array

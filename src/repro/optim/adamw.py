@@ -12,7 +12,6 @@ params apply leaf-wise to the state (ZeRO-1 = shard these specs over 'data').
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax
@@ -135,8 +134,6 @@ def int8_adamw_update(params: Pytree, grads: Pytree, state: Pytree,
     b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
     if cfg.clip_norm:
         grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
-
-    is_state = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
 
     def upd(p, g, mq, vq):
         g32 = g.astype(jnp.float32)

@@ -17,7 +17,6 @@ import jax.numpy as jnp
 from repro.models import lm as lm_mod
 from repro.models import diffusion as diff_mod
 from repro.models.lm import LMConfig
-from repro.models.diffusion import UViTConfig, HunyuanDiTConfig
 from repro.runtime.compat import tree_to_host
 from repro.runtime.pipeline import (PipelineConfig, make_linear_pipeline,
                                     make_wave_pipeline,

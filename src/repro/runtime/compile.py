@@ -14,7 +14,12 @@ description (:class:`PipelineModelFns`) and a device budget, then
    hand-written executors' hard-wired S=D / S=2D even splits, stages here
    carry *padded block stacks* plus true per-device block counts, so the
    uneven stage boundaries the DP partitioner actually emits run unchanged
-   (masked block scans; see runtime.pipeline).
+   (masked block scans; see runtime.pipeline).  The execution *order* is
+   lowered from the validated schedule itself: per-device step tables
+   extracted by ``runtime.schedule_exec`` drive the scan body, so a
+   different synthesized schedule (e.g. an ILP improvement) changes what
+   runs.  ``executor="closed_form"`` selects the closed-form wave/1F1B
+   executors instead — kept as differential references.
 
 The returned :class:`CompiledPipeline` is adapter-compatible (``build`` /
 ``split_params`` / ``merge_params`` / ``init_pipeline_params``) so the
@@ -41,6 +46,8 @@ from repro.runtime.pipeline import (PipelineConfig, make_linear_pipeline,
                                     make_wave_pipeline, scan_blocks,
                                     scan_blocks_consume, scan_blocks_emit,
                                     shard_pipeline)
+from repro.runtime.schedule_exec import (make_linear_pipeline_from_schedule,
+                                         make_wave_pipeline_from_schedule)
 
 Pytree = Any
 
@@ -192,6 +199,7 @@ class CompiledPipeline:
     pcfg: PipelineConfig
     model_fns: PipelineModelFns
     choice: TunerChoice | None = None      # set when the tuner drove the plan
+    executor: str = "table"                # "table" | "closed_form"
 
     @property
     def folded(self) -> bool:
@@ -212,11 +220,23 @@ class CompiledPipeline:
 
     # ---- executor ------------------------------------------------------
     def build(self) -> Callable:
-        """Lower to the generalized executor.
+        """Lower to an executor.
+
+        ``executor="table"`` (default) lowers the *validated schedule
+        itself*: per-device step tables extracted from ``self.schedule``
+        drive the scan body (runtime.schedule_exec), so greedy and ILP
+        schedules alike execute exactly as synthesized.
+        ``executor="closed_form"`` selects the hand-written wave/1F1B
+        executors whose scan dataflow realizes the template orders
+        implicitly — kept as differential references.
 
         Folded: ``fn(enc_stack, dec_stack, edge, mbs, aux) -> loss``.
         Linear: ``fn(stack, edge, mbs) -> loss``.
         """
+        if self.executor not in ("table", "closed_form"):
+            raise ValueError(
+                f"unknown executor {self.executor!r}; expected 'table' or "
+                "'closed_form'")
         fns, pcfg = self.model_fns, self.pcfg
         axis, counts = pcfg.axis, self.layout.counts
 
@@ -241,6 +261,11 @@ class CompiledPipeline:
                 return scan_blocks_consume(
                     dec_block, stage_p, skips, x, my_count(), aux)
 
+            if self.executor == "table":
+                return make_wave_pipeline_from_schedule(
+                    pcfg, self.schedule, embed_fn=fns.embed_fn,
+                    enc_stage_fn=enc_stage_fn, dec_stage_fn=dec_stage_fn,
+                    loss_fn=fns.loss_fn)
             return make_wave_pipeline(
                 pcfg, embed_fn=fns.embed_fn, enc_stage_fn=enc_stage_fn,
                 dec_stage_fn=dec_stage_fn, loss_fn=fns.loss_fn)
@@ -251,11 +276,14 @@ class CompiledPipeline:
         def stage_fn(stage_p, x):
             return scan_blocks(fns.block_fn, stage_p, x, my_count(), None)
 
+        embed = lambda e, mb: fns.embed_fn(e, mb, None)
+        loss = lambda e, x, mb: fns.loss_fn(e, x, mb, None)
+        if self.executor == "table":
+            return make_linear_pipeline_from_schedule(
+                pcfg, self.schedule, embed_fn=embed, stage_fn=stage_fn,
+                loss_fn=loss)
         return make_linear_pipeline(
-            pcfg,
-            embed_fn=lambda e, mb: fns.embed_fn(e, mb, None),
-            stage_fn=stage_fn,
-            loss_fn=lambda e, x, mb: fns.loss_fn(e, x, mb, None))
+            pcfg, embed_fn=embed, stage_fn=stage_fn, loss_fn=loss)
 
     def bind(self, mesh) -> Callable:
         """``loss(params, mbs[, aux])`` with params = (stage_stacks, edge),
@@ -270,7 +298,7 @@ class CompiledPipeline:
             # without them would fail mid-trace with an unbound-axis error
             raise ValueError(
                 f"mesh axes {mesh.axis_names} missing {missing} required by "
-                f"this plan (pass matching data_axes to auto_pipeline)")
+                "this plan (pass matching data_axes to auto_pipeline)")
         dp = math.prod(sizes[a] for a in data)
         if sizes[axis] != pcfg.num_devices or dp != pcfg.dp_size:
             # a size mismatch would not raise — it would silently mis-scale
@@ -312,10 +340,11 @@ class CompiledPipeline:
             f"  cuts={part.cuts} stage sizes={part.stage_sizes()}",
             f"  schedule: makespan={sched.makespan} slots, "
             f"bubble={sched.bubble_ratio():.2f}",
+            f"  executor: {self.executor}",
         ]
         if self.choice is not None:
             c = self.choice
-            lines.append(f"  tuner: P={c.P} G={c.G} b={c.b} "
+            lines.append(f"  tuner: P={c.P} G={c.G} b={c.b} M={c.M} "
                          f"t/sample={c.t_sample*1e3:.3f} ms")
         return "\n".join(lines)
 
@@ -339,15 +368,23 @@ def auto_pipeline(
     remat: bool = True,
     remat_policy: str | None = None,
     use_ilp: bool = False,
+    executor: str = "table",
 ) -> CompiledPipeline:
     """Plan, schedule, and lower a pipeline for ``graph`` on ``N`` devices.
 
     By default the hybrid tuner (§VI) picks (P, G, b) and supplies its
-    partition; ``dp_size`` then defaults to the chosen G, matching the
-    mesh the plan implies.  Pass ``pipeline_devices`` to pin the pipeline
-    degree and call the partitioner directly (deterministic; used by tests
-    and the training driver, which already knows its mesh shape —
-    ``dp_size`` defaults to 1 there).
+    partition; ``microbatches`` then defaults to the M the tuner's
+    iteration-time score assumed (``TunerChoice.M``), and ``dp_size`` to
+    the chosen G — the executed iteration matches the scored one.  Pass
+    ``pipeline_devices`` to pin the pipeline degree and call the
+    partitioner directly (deterministic; used by tests and the training
+    driver, which already knows its mesh shape — ``dp_size`` defaults to 1
+    there, ``microbatches`` to 2D folded / max(D, 2) linear).
+
+    ``executor`` selects the lowering: ``"table"`` (default) executes the
+    validated schedule via per-device step tables (runtime.schedule_exec);
+    ``"closed_form"`` uses the hand-written wave/1F1B executors as
+    differential references (these require M >= D for folded plans).
     """
     def lowerable(p: Partition) -> bool:
         return not p.folded or p.mirror_symmetric()
@@ -382,8 +419,14 @@ def auto_pipeline(
         part = choice.partition
 
     D = part.num_devices
-    M = microbatches if microbatches is not None else (
-        2 * D if part.folded else max(D, 2))
+    if microbatches is not None:
+        M = microbatches
+    elif choice is not None:
+        # execute the M the tuner scored (Eq. 15 assumed M = P) — the
+        # planner and the executor must agree on the iteration shape
+        M = choice.M
+    else:
+        M = 2 * D if part.folded else max(D, 2)
     if dp_size is None:
         dp_size = choice.G if choice is not None else 1
     # Schedule synthesis + full constraint validation happens here; an
@@ -396,4 +439,4 @@ def auto_pipeline(
     layout = StageLayout.from_partition(part)
     return CompiledPipeline(graph=graph, partition=part, schedule=sched,
                             layout=layout, pcfg=pcfg, model_fns=model_fns,
-                            choice=choice)
+                            choice=choice, executor=executor)

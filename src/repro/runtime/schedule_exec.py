@@ -1,0 +1,402 @@
+"""Table-driven pipeline executors lowered from a validated Schedule.
+
+The closed-form executors in ``runtime.pipeline`` realize the wave / 1F1B
+orders through index arithmetic baked into the scan body (``my_mb = t - d``,
+``skip_row = t2 - (D-1) + 2d``).  A synthesized
+:class:`~repro.core.schedule.Schedule` — greedy *or* ILP — therefore never
+changed what actually ran, and planner/executor disagreements stayed
+invisible.  This module makes the Schedule the single source of truth:
+
+1. :class:`StepTables` extracts, per device, a dense *forward step program*
+   from the schedule's F placements: which task (encoder/decoder selector)
+   runs at each step, on which microbatch, which receive slot the incoming
+   boundary activation lands in, and when to emit the loss.  Every
+   cross-device dependency is checked against the synchronous-scan dataflow
+   at lowering time — a schedule the executor could not realize raises
+   ``ValueError`` here instead of silently computing garbage.
+
+2. :func:`make_wave_pipeline_from_schedule` /
+   :func:`make_linear_pipeline_from_schedule` lower those tables into
+   shard_map executors.  The scan body reads its (selector, microbatch,
+   receive slot, loss mask) from the precomputed per-device arrays; incoming
+   activations and each device's skip stash live in microbatch-indexed
+   buffers carried through the scan, so the skip cache pairing comes from
+   the schedule's actual F placement, not a closed form.  Any *valid*
+   schedule — including ILP schedules whose step timing differs from the
+   greedy templates — executes exactly as synthesized.
+
+Backward placements (virtual stage >= S) are realized by JAX autodiff as
+the transposed scan, mirroring the forward order — the same convention as
+the closed-form executors (paper Figs. 8/9 backward halves).
+
+Cost model vs the closed forms: the table executors ppermute both ring
+directions every step and carry ``O(M)`` activation buffers (the closed
+forms carry one register per direction), trading peak memory for complete
+schedule generality.  The closed forms remain available as differential
+references via ``auto_pipeline(..., executor="closed_form")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import Schedule, placement_bounds_error
+from repro.runtime.pipeline import (PipelineConfig, _wrap_remat, ring_perms,
+                                    tree_index, tree_local)
+
+Pytree = Any
+
+IDLE, RUN_ENC, RUN_DEC = 0, 1, 2
+
+
+# ===========================================================================
+# Step-table extraction (host-side, numpy)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class StepTables:
+    """Per-device forward step programs + message routing for one Schedule.
+
+    All arrays are ``[D, num_steps]`` over the *compressed forward step
+    axis*: the schedule's global steps that contain at least one forward
+    placement, in order (``forward_steps`` maps compressed index -> global
+    step).  Compression preserves the relative order of every placement, so
+    the synchronous scan (one ppermute hop per step) realizes the same
+    partial order the schedule was validated against.
+
+    - ``sel``: ``IDLE`` / ``RUN_ENC`` / ``RUN_DEC`` (linear pipelines only
+      use ``IDLE`` / ``RUN_ENC``).
+    - ``mb``: microbatch of the slot (0 when idle — never read).
+    - ``down_mb`` / ``down_valid``: receive slot for the down-ring channel
+      at the *start* of the step (what the upstream device sent last step).
+    - ``up_mb`` / ``up_valid``: same for the up-ring channel.
+    - ``loss``: slot computes the final-stage output and emits the loss.
+    """
+
+    D: int
+    M: int
+    forward_steps: tuple[int, ...]
+    sel: np.ndarray
+    mb: np.ndarray
+    down_mb: np.ndarray
+    down_valid: np.ndarray
+    up_mb: np.ndarray
+    up_valid: np.ndarray
+    loss: np.ndarray
+
+    @property
+    def num_steps(self) -> int:
+        return self.sel.shape[1]
+
+    @classmethod
+    def from_schedule(cls, sched: Schedule, *, folded: bool) -> "StepTables":
+        """Lower a schedule's forward placements to step tables.
+
+        Raises ``ValueError`` on any shape the synchronous scan cannot
+        realize (malformed placements, double-booked channels, a consumer
+        scheduled before its input can arrive) — the planner/executor
+        mismatches the closed forms used to hide surface here.
+        """
+        S, M, D = sched.S, sched.M, sched.D
+        expect_S = 2 * D if folded else D
+        if S != expect_S:
+            raise ValueError(
+                f"schedule has S={S} stages but a "
+                f"{'folded' if folded else 'linear'} executor over D={D} "
+                f"devices lowers S={expect_S}")
+        fwd = sorted((p for p in sched.placements if p.virtual < S),
+                     key=lambda p: (p.step, p.device))
+        steps = sorted({p.step for p in fwd})
+        k_of_step = {t: k for k, t in enumerate(steps)}
+        T = len(steps)
+
+        sel = np.zeros((D, T), dtype=np.int32)
+        mb = np.zeros((D, T), dtype=np.int32)
+        down_mb = np.zeros((D, T), dtype=np.int32)
+        down_valid = np.zeros((D, T), dtype=bool)
+        up_mb = np.zeros((D, T), dtype=np.int32)
+        up_valid = np.zeros((D, T), dtype=bool)
+        loss = np.zeros((D, T), dtype=bool)
+
+        def mark_rx(tab, ok, dev, k, m, chan):
+            if k >= T:
+                raise ValueError(
+                    f"message for m={m} sent on the last forward step has "
+                    "no consumer step — run validate_schedule")
+            if ok[dev, k]:
+                raise ValueError(
+                    f"two messages on the {chan} channel of device {dev} "
+                    f"at forward step {k} — run validate_schedule")
+            tab[dev, k] = m
+            ok[dev, k] = True
+
+        k_of_task: dict[tuple[int, int], int] = {}
+        for p in fwd:
+            v, m, dev = p.virtual, p.microbatch, p.device
+            err = placement_bounds_error(p, S, M, D)
+            if err is not None:
+                raise ValueError(
+                    f"placement v={v} m={m}: {err}; run validate_schedule")
+            # The executors' stage stacks pin enc stage v to device v and
+            # dec stage v to device S-1-v (linear: stage v to device v);
+            # routing below assumes it.  A schedule with a permuted device
+            # mapping (e.g. an ILP free-mapping solve) is *valid* but not
+            # realizable on this layout — reject it here rather than run
+            # the wrong stage's parameters silently.
+            canon = min(v, S - 1 - v) if folded else v
+            if dev != canon:
+                raise ValueError(
+                    f"placement v={v} m={m} on device {dev}, but this "
+                    f"executor's stage layout pins stage {v} to device "
+                    f"{canon} ({'folded' if folded else 'identity'} "
+                    "mapping); re-synthesize the schedule with the "
+                    "partition's device_of_stage")
+            k = k_of_step[p.step]
+            if sel[dev, k] != IDLE:
+                raise ValueError(
+                    f"device {dev} double-booked at step {p.step} — run "
+                    "validate_schedule")
+            k_of_task[(v, m)] = k
+            mb[dev, k] = m
+            if folded:
+                sel[dev, k] = RUN_ENC if v < D else RUN_DEC
+                if v < D - 1:
+                    # enc stage v -> enc stage v+1 on device v+1 (down ring)
+                    mark_rx(down_mb, down_valid, v + 1, k + 1, m, "down")
+                elif D <= v < S - 1:
+                    # dec stage v -> dec stage v+1 on device S-2-v (up ring)
+                    mark_rx(up_mb, up_valid, S - 2 - v, k + 1, m, "up")
+                # v == D-1: turnaround — consumed locally from the turn
+                # buffer by stage D on the same device, no send.
+            else:
+                sel[dev, k] = RUN_ENC
+                if v < S - 1:
+                    mark_rx(down_mb, down_valid, v + 1, k + 1, m, "down")
+            if v == S - 1:
+                loss[dev, k] = True
+
+        # Dataflow feasibility: each forward task's input must have been
+        # produced at an earlier compressed step (so it arrived — one
+        # ppermute hop — at or before the consumer's step).
+        for p in fwd:
+            if p.virtual == 0:
+                continue
+            dep = (p.virtual - 1, p.microbatch)
+            if dep not in k_of_task:
+                raise ValueError(
+                    f"task v={p.virtual} m={p.microbatch} has no scheduled "
+                    "predecessor — run validate_schedule")
+            if k_of_task[(p.virtual, p.microbatch)] < k_of_task[dep] + 1:
+                raise ValueError(
+                    f"task v={p.virtual} m={p.microbatch} runs before its "
+                    "input can arrive (constraint (10)) — run "
+                    "validate_schedule")
+
+        return cls(D=D, M=M, forward_steps=tuple(steps), sel=sel, mb=mb,
+                   down_mb=down_mb, down_valid=down_valid, up_mb=up_mb,
+                   up_valid=up_valid, loss=loss)
+
+
+# ===========================================================================
+# Microbatch-indexed scan buffers
+# ===========================================================================
+
+def _zeros_buffer(proto: Pytree, M: int) -> Pytree:
+    """``[M, ...]`` zero buffer per leaf (proto may be concrete or structs)."""
+    return jax.tree.map(
+        lambda t: jnp.zeros((M,) + tuple(t.shape), t.dtype), proto)
+
+
+def _buf_store(buf: Pytree, m, val: Pytree, pred) -> Pytree:
+    """``buf[m] = val`` where ``pred`` (scalar bool), identity otherwise."""
+    return jax.tree.map(
+        lambda b, v: jnp.where(
+            pred, jax.lax.dynamic_update_index_in_dim(b, v, m, 0), b),
+        buf, val)
+
+
+# ===========================================================================
+# Folded wave executor from tables
+# ===========================================================================
+
+def make_wave_pipeline_from_schedule(
+    cfg: PipelineConfig,
+    sched: Schedule,
+    *,
+    embed_fn: Callable,       # (edge_p, mb, aux) -> tokens
+    enc_stage_fn: Callable,   # (stage_p, x, aux) -> (x_out, skips)
+    dec_stage_fn: Callable,   # (stage_p, x, skips, aux) -> x_out
+    loss_fn: Callable,        # (edge_p, x_final, mb, aux) -> scalar
+) -> Callable:
+    """Lower a folded S=2D schedule to ``fn(enc_stack, dec_stack, edge_p,
+    mbs, aux) -> loss`` (same signature as ``make_wave_pipeline``).
+
+    Each scan step consults the schedule-derived tables: arrivals are
+    stored into microbatch-indexed receive buffers, the selected stage runs
+    on the slot's microbatch, encoder outputs stash their skips (and, on
+    the turnaround device, the activation) under the *microbatch* index, so
+    the decoder reads exactly the skips its collocated encoder produced —
+    correct for any valid schedule, including ``M < D``.
+    """
+    D, M, axis = cfg.num_devices, cfg.num_microbatches, cfg.axis
+    if sched.M != M or sched.D != D:
+        raise ValueError(
+            f"schedule (M={sched.M}, D={sched.D}) does not match the "
+            f"pipeline config (M={M}, D={D})")
+    tables = StepTables.from_schedule(sched, folded=True)
+    T = tables.num_steps
+    down_perm, up_perm = ring_perms(D)
+    enc_stage = _wrap_remat(enc_stage_fn, cfg)
+    dec_stage = _wrap_remat(dec_stage_fn, cfg)
+
+    def fn(enc_stack, dec_stack, edge_p, mbs, aux):
+        d = jax.lax.axis_index(axis)
+        enc_p = tree_local(enc_stack)
+        dec_p = tree_local(dec_stack)
+
+        mb0 = tree_index(mbs, 0)
+        aux0 = tree_index(aux, 0)
+        x_proto = jax.eval_shape(embed_fn, edge_p, mb0, aux0)
+        zero_x = jnp.zeros(x_proto.shape, x_proto.dtype)
+        skips_proto = jax.eval_shape(
+            lambda p, x, a: enc_stage(p, x, a)[1], enc_p, zero_x, aux0)
+        zero_skips = jax.tree.map(
+            lambda t: jnp.zeros(t.shape, t.dtype), skips_proto)
+
+        # This device's rows of every table (host constants -> jnp).
+        sel_t = jnp.asarray(tables.sel)[d]
+        mb_t = jnp.asarray(tables.mb)[d]
+        dmb_t = jnp.asarray(tables.down_mb)[d]
+        dok_t = jnp.asarray(tables.down_valid)[d]
+        umb_t = jnp.asarray(tables.up_mb)[d]
+        uok_t = jnp.asarray(tables.up_valid)[d]
+        loss_t = jnp.asarray(tables.loss)[d]
+
+        init = (
+            zero_x,                         # down-ring register
+            zero_x,                         # up-ring register
+            _zeros_buffer(zero_x, M),       # enc_rx[m]: down arrivals
+            _zeros_buffer(zero_x, M),       # dec_rx[m]: up arrivals
+            _zeros_buffer(zero_x, M),       # turn[m]: own enc output
+            _zeros_buffer(zero_skips, M),   # cache[m]: own stashed skips
+        )
+
+        def step(carry, t):
+            down_in, up_in, enc_rx, dec_rx, turn, cache = carry
+            enc_rx = _buf_store(enc_rx, dmb_t[t], down_in, dok_t[t])
+            dec_rx = _buf_store(dec_rx, umb_t[t], up_in, uok_t[t])
+            sel = sel_t[t]
+            m = mb_t[t]
+            mb_m = tree_index(mbs, m)
+            aux_m = tree_index(aux, m)
+
+            def run_idle(_):
+                return zero_x, zero_skips
+
+            def run_enc(_):
+                x0 = jax.lax.cond(
+                    d == 0, lambda: embed_fn(edge_p, mb_m, aux_m),
+                    lambda: zero_x)
+                x_in = jnp.where(d == 0, x0, tree_index(enc_rx, m))
+                return enc_stage(enc_p, x_in, aux_m)
+
+            def run_dec(_):
+                x_in = jnp.where(d == D - 1, tree_index(turn, m),
+                                 tree_index(dec_rx, m))
+                x_out = dec_stage(dec_p, x_in, tree_index(cache, m), aux_m)
+                return x_out, zero_skips
+
+            x_out, skips = jax.lax.switch(
+                sel, (run_idle, run_enc, run_dec), None)
+            is_enc = sel == RUN_ENC
+            # only the turnaround device ever reads turn[m]; gating the
+            # store saves the [M, ...] buffer write (and its transpose in
+            # the backward pass) on the other D-1 devices
+            turn = _buf_store(turn, m, x_out, is_enc & (d == D - 1))
+            cache = _buf_store(cache, m, skips, is_enc)
+            loss = jax.lax.cond(
+                loss_t[t],
+                lambda: loss_fn(edge_p, x_out, mb_m, aux_m),
+                lambda: jnp.zeros((), jnp.float32))
+            down_next = jax.lax.ppermute(x_out, axis, down_perm)
+            up_next = jax.lax.ppermute(x_out, axis, up_perm)
+            return (down_next, up_next, enc_rx, dec_rx, turn, cache), loss
+
+        _, losses = jax.lax.scan(step, init, jnp.arange(T))
+        total = jnp.sum(losses) / M
+        return jax.lax.psum(total, (axis, *cfg.data_axes)) / cfg.dp_size
+
+    return fn
+
+
+# ===========================================================================
+# Linear executor from tables
+# ===========================================================================
+
+def make_linear_pipeline_from_schedule(
+    cfg: PipelineConfig,
+    sched: Schedule,
+    *,
+    embed_fn: Callable,       # (edge_p, mb) -> x
+    stage_fn: Callable,       # (stage_p, x) -> x
+    loss_fn: Callable,        # (edge_p, x_final, mb) -> scalar
+) -> Callable:
+    """Lower a linear S=D schedule to ``fn(stack, edge_p, mbs) -> loss``
+    (same signature as ``make_linear_pipeline``)."""
+    D, M, axis = cfg.num_devices, cfg.num_microbatches, cfg.axis
+    if sched.M != M or sched.D != D:
+        raise ValueError(
+            f"schedule (M={sched.M}, D={sched.D}) does not match the "
+            f"pipeline config (M={M}, D={D})")
+    tables = StepTables.from_schedule(sched, folded=False)
+    T = tables.num_steps
+    down_perm, _ = ring_perms(D)
+    stage = _wrap_remat(stage_fn, cfg)
+
+    def fn(stack, edge_p, mbs):
+        d = jax.lax.axis_index(axis)
+        my_p = tree_local(stack)
+        mb0 = tree_index(mbs, 0)
+        x_proto = jax.eval_shape(embed_fn, edge_p, mb0)
+        zero_x = jnp.zeros(x_proto.shape, x_proto.dtype)
+
+        sel_t = jnp.asarray(tables.sel)[d]
+        mb_t = jnp.asarray(tables.mb)[d]
+        dmb_t = jnp.asarray(tables.down_mb)[d]
+        dok_t = jnp.asarray(tables.down_valid)[d]
+        loss_t = jnp.asarray(tables.loss)[d]
+
+        init = (zero_x, _zeros_buffer(zero_x, M))
+
+        def step(carry, t):
+            h_in, rx = carry
+            rx = _buf_store(rx, dmb_t[t], h_in, dok_t[t])
+            m = mb_t[t]
+            mb_m = tree_index(mbs, m)
+
+            def run_idle(_):
+                return zero_x
+
+            def run_stage(_):
+                x0 = jax.lax.cond(
+                    d == 0, lambda: embed_fn(edge_p, mb_m), lambda: zero_x)
+                x_in = jnp.where(d == 0, x0, tree_index(rx, m))
+                return stage(my_p, x_in)
+
+            x_out = jax.lax.switch(sel_t[t], (run_idle, run_stage), None)
+            loss = jax.lax.cond(
+                loss_t[t],
+                lambda: loss_fn(edge_p, x_out, mb_m),
+                lambda: jnp.zeros((), jnp.float32))
+            h_next = jax.lax.ppermute(x_out, axis, down_perm)
+            return (h_next, rx), loss
+
+        _, losses = jax.lax.scan(step, init, jnp.arange(T))
+        total = jnp.sum(losses) / M
+        return jax.lax.psum(total, (axis, *cfg.data_axes)) / cfg.dp_size
+
+    return fn

@@ -18,7 +18,6 @@ lowers without allocating anything.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -29,7 +28,6 @@ from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          int8_adamw_init, int8_adamw_update)
 from repro.runtime import sharding as shard_rules
 from repro.runtime.compat import shard_map
-from repro.runtime.pipeline import PipelineConfig
 
 Pytree = Any
 
@@ -211,7 +209,6 @@ def build_pp_train_step(adapter, mesh, batch_struct: Pytree,
     def loss_of(params, batch, rng):
         stacks, edge = params
         args = make_microbatches(batch, rng, edge)
-        mb_like = args[0]
         in_specs = (
             *(jax.tree.map(lambda _: P("model"), s) for s in stacks),
             jax.tree.map(lambda _: P(), edge),

@@ -2,9 +2,16 @@
 
 Differential tests for the compile path (graph -> partition -> schedule ->
 executor): for each config, `auto_pipeline` plans and lowers a pipeline on
-mocked multi-device meshes (forced host devices) and the loss + merged
-gradients must match a plain single-device forward/backward within
-rtol 1e-4.
+mocked multi-device meshes (forced host devices) and
+
+- the table-driven executor's loss + merged gradients must match a plain
+  single-device forward/backward within rtol 1e-4;
+- where the closed-form executors apply (greedy template orders, M >= D),
+  the table-driven executor must also match them differentially
+  (loss + grads) — the closed forms are the hand-written references;
+- the lowered step tables must match ``Schedule.grid()`` exactly
+  (``device_programs`` slot-for-slot; ``StepTables`` on the forward
+  placements), for greedy *and* ILP schedules.
 
 Configs (pass names as argv to run a subset; default: all):
   linear-even    LM, S=D=4, uniform costs -> even 1F1B split
@@ -12,9 +19,14 @@ Configs (pass names as argv to run a subset; default: all):
   wave-even      UViT, S=2D (D=2), uniform costs -> even folded wave
   wave-uneven    UViT, S=2D (D=2), heterogeneous times -> uneven symmetric
                  cuts from the bidirectional DP (Algorithm 1)
+  wave-short     UViT, D=4, M=D-1: the closed-form wave executor must
+                 refuse (stale-row clip), the table executor must match ref
+  wave-ilp       UViT, D=2, ILP-synthesized schedule through the
+                 table-driven lowering
 
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
+import dataclasses
 import os
 import sys
 
@@ -32,6 +44,9 @@ from repro.runtime.adapters import (diffusion_model_fns, lm_model_fns,
                                     make_diffusion_microbatches)
 from repro.runtime.compile import auto_pipeline
 
+from schedule_checks import (assert_programs_match_grid,
+                             assert_step_tables_match_grid)
+
 KEY = jax.random.PRNGKey(0)
 RTOL = 1e-4
 
@@ -47,8 +62,33 @@ def _check_grads(gm, gr, label):
                     f"{jax.tree_util.keystr(path)}")
 
 
+def _check_tables_match_grid(cp, label):
+    """The lowered step programs equal Schedule.grid() slot-for-slot."""
+    assert_programs_match_grid(cp.schedule)
+    tabs = assert_step_tables_match_grid(cp.schedule, cp.folded)
+    n_fwd = int((tabs.sel != 0).sum())
+    print(f"{label}: step tables == grid "
+          f"({n_fwd} forward slots over {tabs.num_steps} steps)")
+
+
+def _diff_executors(cp, mesh, state, batch_args, label):
+    """Table executor vs closed-form executor: loss + grads (rtol 1e-4)."""
+    cf = dataclasses.replace(cp, executor="closed_form")
+    table_loss = cp.bind(mesh)
+    closed_loss = cf.bind(mesh)
+    lt = jax.jit(table_loss)(state, *batch_args)
+    lc = jax.jit(closed_loss)(state, *batch_args)
+    np.testing.assert_allclose(float(lt), float(lc), rtol=RTOL)
+    gt = jax.jit(jax.grad(table_loss))(state, *batch_args)
+    gc = jax.jit(jax.grad(closed_loss))(state, *batch_args)
+    _check_grads(cp.merge_params(gt[0], gt[1]),
+                 cp.merge_params(gc[0], gc[1]), f"{label}[table-vs-closed]")
+    print(f"{label}: table executor == closed-form executor "
+          f"(loss {float(lt):.6f}; grads OK)")
+
+
 def _run_lm(name, fwd_times, expect_uneven, *, force_wave=None,
-            pipeline_devices=4):
+            pipeline_devices=4, compare_closed=True):
     cfg = LMConfig(name="t", vocab=64, d_model=32, n_layers=8,
                    attn=AttnConfig(32, 4, 2, 8), d_ff=64,
                    tied_embeddings=True)
@@ -63,6 +103,7 @@ def _run_lm(name, fwd_times, expect_uneven, *, force_wave=None,
         assert cp.partition.num_stages == pipeline_devices   # S = D
     uneven = len(set(cp.layout.counts)) > 1
     assert uneven == expect_uneven, (name, cp.layout.counts)
+    _check_tables_match_grid(cp, name)
 
     mesh = jax.make_mesh((2, pipeline_devices), ("data", "model"))
     params = cp.model_fns.init_fn(KEY)
@@ -88,23 +129,42 @@ def _run_lm(name, fwd_times, expect_uneven, *, force_wave=None,
                  name)
     print(f"{name}: counts={cp.layout.counts} loss={float(lp):.6f} "
           f"== ref {float(lr):.6f}; grads OK")
+    if compare_closed:
+        batch_args = (mbs, {}) if cp.folded else (mbs,)
+        _diff_executors(cp, mesh, state, batch_args, name)
 
 
-def _run_uvit(name, fwd_times, expect_uneven):
+def _run_uvit(name, fwd_times, expect_uneven, *, pipeline_devices=2,
+              microbatches=4, use_ilp=False, compare_closed=True,
+              expect_closed_rejects=False):
     cfg = UViTConfig("t", img_size=8, in_ch=4, patch=2, d_model=32,
                      n_layers=8, n_heads=4, d_ff=64, n_classes=10)
     graph = uvit_pipeline_graph(cfg, fwd_times=fwd_times)
-    cp = auto_pipeline(graph, diffusion_model_fns(cfg, "uvit"), 2,
-                       pipeline_devices=2, microbatches=4, lam=0.0,
-                       dp_size=2)
-    assert cp.folded and cp.partition.num_stages == 4       # S = 2D
+    cp = auto_pipeline(graph, diffusion_model_fns(cfg, "uvit"),
+                       pipeline_devices, pipeline_devices=pipeline_devices,
+                       microbatches=microbatches, lam=0.0, dp_size=2,
+                       use_ilp=use_ilp)
+    assert cp.folded and cp.partition.num_stages == 2 * pipeline_devices
     uneven = len(set(cp.layout.counts)) > 1
     assert uneven == expect_uneven, (name, cp.layout.counts)
+    _check_tables_match_grid(cp, name)
+    if expect_closed_rejects:
+        # M < D: the closed-form wave executor's clip reads stale rows —
+        # it must refuse, while the table-driven lowering stays correct.
+        try:
+            dataclasses.replace(cp, executor="closed_form").build()
+        except ValueError as e:
+            assert "M >= D" in str(e), e
+            print(f"{name}: closed-form executor rejects M < D as expected")
+        else:
+            raise AssertionError(
+                f"{name}: closed-form executor accepted M < D")
 
-    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    mesh = jax.make_mesh((2, pipeline_devices), ("data", "model"))
     params = cp.model_fns.init_fn(KEY)
     state = cp.split_params(params)
-    B, M = 8, 4
+    M = microbatches
+    B = 2 * M            # per-microbatch batch 2, sharded over data axis 2
     batch = {"latents": jax.random.normal(KEY, (B, 8, 8, 4)),
              "labels": jax.random.randint(KEY, (B,), 0, 10)}
     mb, aux = make_diffusion_microbatches(batch, KEY, M, cfg, "uvit")
@@ -127,6 +187,8 @@ def _run_uvit(name, fwd_times, expect_uneven):
                  name)
     print(f"{name}: counts={cp.layout.counts} loss={float(lp):.6f} "
           f"== ref {float(lr):.6f}; grads OK")
+    if compare_closed:
+        _diff_executors(cp, mesh, state, (mb, aux), name)
 
 
 CONFIGS = {
@@ -141,6 +203,16 @@ CONFIGS = {
     "wave-lm-uneven": lambda: _run_lm(
         "wave-lm-uneven", [4, 1, 1, 1, 1, 1, 1, 4], True,
         force_wave=True, pipeline_devices=2),
+    # M = D - 1: only the table-driven lowering can run this; the
+    # closed-form executor must reject it (stale-row clip)
+    "wave-short": lambda: _run_uvit(
+        "wave-short", None, False, pipeline_devices=4, microbatches=3,
+        compare_closed=False, expect_closed_rejects=True),
+    # exact ILP schedule (Eqs. 6-13) through the table-driven lowering;
+    # the closed-form executor cannot realize a non-template order at all
+    "wave-ilp": lambda: _run_uvit(
+        "wave-ilp", None, False, microbatches=2, use_ilp=True,
+        compare_closed=False),
 }
 
 

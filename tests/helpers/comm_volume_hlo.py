@@ -1,7 +1,8 @@
 """Measure PULSE-vs-baseline collective-permute bytes from compiled HLO."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.runtime.compat import shard_map
 

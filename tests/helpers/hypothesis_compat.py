@@ -76,3 +76,6 @@ except ImportError:
                 setattr(wrapper, attr, getattr(inner, attr))
             return wrapper
         return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

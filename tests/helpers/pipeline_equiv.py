@@ -4,10 +4,12 @@ Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, NamedSharding
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from repro.models.diffusion import UViTConfig, init_uvit, uvit_apply, cosine_alpha_bar
+from repro.models.diffusion import UViTConfig, init_uvit, uvit_apply
 from repro.models.lm import LMConfig, init_lm, lm_loss
 from repro.models.layers import AttnConfig
 from repro.runtime.pipeline import PipelineConfig
@@ -98,7 +100,6 @@ def test_lm_linear_and_wave():
         ad = LMPipelineAdapter(cfg, pcfg, wave=wave)
         stacks, edge = ad.split_params(params)
         fn = ad.build()
-        n_st = len(stacks)
 
         def loss_pipe(stacks, edge, mbs):
             specs = tuple(jax.tree.map(lambda _: P("model"), s) for s in stacks)

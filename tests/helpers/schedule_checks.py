@@ -1,0 +1,48 @@
+"""Shared assertions: lowered step programs/tables vs ``Schedule.grid()``.
+
+One source of truth for the "the lowering matches the schedule
+slot-for-slot" contract, used by the in-process planning tests
+(test_schedule, test_auto_pipeline) and the multi-device subprocess
+equivalence helper (auto_pipeline_equiv).
+"""
+from repro.runtime.schedule_exec import IDLE, RUN_DEC, RUN_ENC, StepTables
+
+
+def assert_programs_match_grid(sched):
+    """``Schedule.device_programs()`` equals ``grid()`` slot-for-slot."""
+    progs = sched.device_programs()
+    grid = sched.grid()
+    assert progs.num_devices == sched.D
+    assert progs.num_steps == sched.makespan
+    for d in range(sched.D):
+        for t in range(sched.makespan):
+            p = grid[d][t]
+            assert bool(progs.valid[d, t]) == (p is not None), (d, t)
+            if p is None:
+                assert progs.virtual[d, t] == -1
+                assert progs.microbatch[d, t] == -1
+            else:
+                assert progs.virtual[d, t] == p.virtual, (d, t)
+                assert progs.microbatch[d, t] == p.microbatch, (d, t)
+    assert int(progs.valid.sum()) == len(sched.placements)
+    return progs
+
+
+def assert_step_tables_match_grid(sched, folded):
+    """The executor-facing ``StepTables`` cover exactly the schedule's
+    forward placements, with the right selector/microbatch per slot."""
+    tabs = StepTables.from_schedule(sched, folded=folded)
+    grid = sched.grid()
+    S = sched.S
+    for k, t in enumerate(tabs.forward_steps):
+        for d in range(sched.D):
+            p = grid[d][t]
+            if p is not None and p.virtual < S:
+                want = RUN_DEC if folded and p.virtual >= sched.D else RUN_ENC
+                assert tabs.sel[d, k] == want, (d, k)
+                assert tabs.mb[d, k] == p.microbatch, (d, k)
+            else:
+                assert tabs.sel[d, k] == IDLE, (d, k)
+    n_fwd = sum(1 for p in sched.placements if p.virtual < S)
+    assert int((tabs.sel != IDLE).sum()) == n_fwd
+    return tabs

@@ -1,12 +1,15 @@
 """Auto-pipeline compile path: planning invariants + differential tests.
 
 Planning-layer tests run in-process on one device.  Numerical equivalence
-against the single-device reference runs in a subprocess with 8 forced host
-devices (tests/helpers/auto_pipeline_equiv.py): the uneven-partition
-configs — the capability the hand-written executors lacked — run in tier-1;
-the even S=D / S=2D configs are `slow` (they overlap the classic executors
-already covered by test_pipeline_multidevice).
+against the single-device reference (and, differentially, against the
+closed-form executors) runs in a subprocess with 8 forced host devices
+(tests/helpers/auto_pipeline_equiv.py): the uneven-partition configs — the
+capability the hand-written executors lacked — and the M < D config only
+the table-driven lowering can run are tier-1; the even S=D / S=2D configs
+and the ILP schedule are `slow`.
 """
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -21,6 +24,10 @@ from repro.models.layers import AttnConfig
 from repro.models.lm import LMConfig, lm_pipeline_graph
 from repro.runtime.adapters import diffusion_model_fns, lm_model_fns
 from repro.runtime.compile import StageLayout, auto_pipeline
+from repro.runtime.schedule_exec import StepTables
+
+from helpers.schedule_checks import (assert_programs_match_grid,
+                                     assert_step_tables_match_grid)
 
 def _run_equiv(*configs):
     out = run_helper("auto_pipeline_equiv.py", *configs)
@@ -117,6 +124,89 @@ def test_tuner_driven_auto_pipeline():
                                  collocated=cp.partition.collocated_pairs())
 
 
+def test_tuner_driven_executes_scored_microbatch_count():
+    """The tuner records the M its iteration-time score assumed
+    (TunerChoice.M) and auto_pipeline executes exactly that M — previously
+    the tuner scored M = P while the executor silently ran M = 2D."""
+    g = uvit_pipeline_graph(_uvit_cfg())
+    choices = tune(g, 4)
+    for c in choices:
+        assert c.M == max(c.P, 1)          # Eq. (15)'s closed-form setting
+    cp = auto_pipeline(g, diffusion_model_fns(_uvit_cfg(), "uvit"), 4)
+    assert cp.choice is not None
+    assert cp.pcfg.num_microbatches == cp.choice.M
+    assert cp.schedule.M == cp.choice.M
+
+
+def test_device_programs_match_grid():
+    """Schedule.device_programs() agrees with grid() slot-for-slot, and the
+    executor-facing StepTables cover exactly the forward placements."""
+    for cp in (
+        auto_pipeline(lm_pipeline_graph(_lm_cfg()), lm_model_fns(_lm_cfg()),
+                      4, pipeline_devices=4, microbatches=4),
+        auto_pipeline(uvit_pipeline_graph(_uvit_cfg()),
+                      diffusion_model_fns(_uvit_cfg(), "uvit"),
+                      2, pipeline_devices=2, microbatches=4),
+    ):
+        assert_programs_match_grid(cp.schedule)
+        tabs = assert_step_tables_match_grid(cp.schedule, cp.folded)
+        assert all(p.step in tabs.forward_steps
+                   for p in cp.schedule.placements
+                   if p.virtual < cp.schedule.S)
+
+
+def test_step_tables_reject_infeasible_schedule():
+    """A schedule whose consumer runs before its input can arrive (or whose
+    shape does not fit the executor) raises at lowering, not mid-scan."""
+    from repro.core.schedule import Schedule, template_1f1b
+
+    good = template_1f1b(2, 2)
+    with pytest.raises(ValueError, match="folded|linear"):
+        StepTables.from_schedule(good, folded=True)   # S=D, not S=2D
+
+    # shift microbatch 0's stage-1 F to step 0: before its input exists
+    bad_places = tuple(
+        dataclasses.replace(p, step=0)
+        if (p.virtual, p.microbatch) == (1, 0) else p
+        for p in good.placements)
+    bad = Schedule(good.S, good.M, good.D, bad_places)
+    with pytest.raises(ValueError):
+        StepTables.from_schedule(bad, folded=False)
+
+    out_of_range = Schedule(good.S, good.M, good.D, tuple(
+        dataclasses.replace(p, device=7)
+        if (p.virtual, p.microbatch) == (0, 0) else p
+        for p in good.placements))
+    with pytest.raises(ValueError, match="validate_schedule"):
+        StepTables.from_schedule(out_of_range, folded=False)
+    assert any("out of range" in e for e in validate_schedule(out_of_range))
+
+    # a *valid* schedule with a permuted stage->device mapping (what an ILP
+    # free-mapping solve can legally return) is not realizable on the
+    # executors' canonical stage layout — must raise, not run the wrong
+    # stage's parameters silently
+    from repro.core.schedule import greedy_schedule
+    swapped = greedy_schedule(2, 2, lambda s: 1 - s, 2)
+    assert not validate_schedule(swapped, lambda s: 1 - s)
+    with pytest.raises(ValueError, match="stage layout"):
+        StepTables.from_schedule(swapped, folded=False)
+
+
+def test_closed_form_wave_rejects_short_iterations():
+    """M < D folded plans lower through the table executor; the closed-form
+    wave executor must refuse them with an actionable error."""
+    cfg = _uvit_cfg()
+    cp = auto_pipeline(uvit_pipeline_graph(cfg),
+                       diffusion_model_fns(cfg, "uvit"), 4,
+                       pipeline_devices=4, microbatches=3)
+    assert cp.pcfg.num_microbatches == 3 < cp.pcfg.num_devices
+    cp.build()                                        # table path: fine
+    with pytest.raises(ValueError, match="M >= D"):
+        dataclasses.replace(cp, executor="closed_form").build()
+    with pytest.raises(ValueError, match="executor"):
+        dataclasses.replace(cp, executor="wat").build()
+
+
 def test_layout_rejects_asymmetric_fold():
     part = partition(lm_pipeline_graph(_lm_cfg()), 4)  # linear (no skips)
     assert StageLayout.from_partition(part).counts  # linear fine
@@ -137,11 +227,15 @@ def test_schedule_for_partition_greedy_matches_templates():
 # differential executor tests (subprocess, mocked multi-device mesh)
 # ---------------------------------------------------------------------------
 
-def test_auto_pipeline_equivalence_uneven():
-    """Uneven DP partitions (linear + folded wave) match the single-device
-    reference — the configs the hand-written S=D / S=2D executors could
-    not run at all."""
-    _run_equiv("linear-uneven", "wave-uneven")
+def test_auto_pipeline_equivalence_uneven_and_short():
+    """Uneven DP partitions (linear + folded wave) lowered through the
+    table-driven executor match the single-device reference AND the
+    closed-form executors (loss + grads, rtol 1e-4) — the configs the
+    hand-written S=D / S=2D executors could not run at all.  Plus the
+    M = D - 1 wave: only the table-driven lowering can realize it (pinned
+    behavior: the closed-form executor raises), and it matches the
+    reference.  One subprocess to amortize the multi-device jax startup."""
+    _run_equiv("linear-uneven", "wave-uneven", "wave-short")
 
 
 @pytest.mark.slow
@@ -149,3 +243,11 @@ def test_auto_pipeline_equivalence_even_and_forced_wave():
     """Even S=D / S=2D plans and the skip-free forced-wave (symmetric-fold
     partitioner + empty-skip executor) through the same compile path."""
     _run_equiv("linear-even", "wave-even", "wave-lm-uneven")
+
+
+@pytest.mark.slow
+def test_auto_pipeline_equivalence_ilp():
+    """auto_pipeline(use_ilp=True) on a tiny graph: the exact ILP schedule
+    validates, lowers via the table-driven executor (step tables == grid),
+    and matches the single-device reference."""
+    _run_equiv("wave-ilp")

@@ -2,7 +2,6 @@
 import jax
 import pytest
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.diffusion import (UViTConfig, init_uvit, uvit_loss,
                                     uvit_apply, uvit_block_graph,

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 from helpers.hypothesis_compat import given, settings, st
 
-from repro.models.xlstm import (XLSTMConfig, init_xlstm, xlstm_loss,
+from repro.models.xlstm import (XLSTMConfig, init_xlstm,
                                 init_states, decode_step, forward, unembed,
                                 mlstm_parallel, mlstm_recurrent,
                                 init_mlstm_state)

@@ -4,7 +4,7 @@ import random
 import pytest
 from helpers.hypothesis_compat import given, settings, st
 
-from repro.core.graph import Block, BlockGraph, SkipEdge, make_unet_like
+from repro.core.graph import Block, BlockGraph, make_unet_like
 from repro.core.partition import (partition, partition_bidirectional,
                                   partition_reference, linear_partition,
                                   blockwise_partition)

@@ -1,12 +1,10 @@
 """End-to-end PULSE planning: graph -> partition -> schedule -> tuner."""
-import jax.numpy as jnp
 
-from repro.core.graph import make_unet_like
 from repro.core.partition import partition
 from repro.core.schedule import template_wave, validate_schedule, simulate
 from repro.core.tuner import tune, profile_partition
 from repro.core.comm_model import partition_comm_volume
-from repro.core.hw import TPU_V5E, ASCEND_910A_CLUSTER
+from repro.core.hw import ASCEND_910A_CLUSTER
 from repro.models.diffusion import UViTConfig, uvit_block_graph
 
 

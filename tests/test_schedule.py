@@ -1,13 +1,15 @@
 """ILP scheduler + templates (paper Figs. 8/9, Eqs. 6-13) + property
 tests: randomized (S, M, D, collocation) sweeps of the greedy synthesizer.
 """
+import dataclasses
 import random
 
 import pytest
 
 from helpers.hypothesis_compat import given, settings, st
-from repro.core.schedule import (template_1f1b, template_wave, ilp_schedule,
-                                 greedy_schedule, validate_schedule, simulate,
+from repro.core.schedule import (Placement, Schedule, template_1f1b,
+                                 template_wave, ilp_schedule, greedy_schedule,
+                                 validate_schedule, simulate,
                                  schedule_for_partition)
 
 
@@ -49,6 +51,46 @@ def test_ilp_free_mapping_collocates():
     dev = ilp.device_of_stage_map()
     assert dev[0] == dev[3] and dev[1] == dev[2]
     assert dev[0] == 0    # anchored
+
+
+def test_validate_rejects_out_of_bounds_placements():
+    """Family (7) must flag out-of-range devices and negative steps — an
+    unchecked placement used to sail through validation and crash later in
+    grid()/lowering with an opaque IndexError."""
+    good = template_1f1b(2, 2)
+
+    def mutate(**kw):
+        return Schedule(good.S, good.M, good.D, tuple(
+            dataclasses.replace(p, **kw) if i == 0 else p
+            for i, p in enumerate(good.placements)))
+
+    errs = validate_schedule(mutate(device=5))
+    assert any("out of range" in e and e.startswith("(7)") for e in errs)
+    errs = validate_schedule(mutate(device=-1))
+    assert any("out of range" in e for e in errs)
+    errs = validate_schedule(mutate(step=-3))
+    assert any("negative step" in e for e in errs)
+    errs = validate_schedule(mutate(virtual=99))
+    assert any("virtual stage 99 out of range" in e for e in errs)
+    # a phantom EXTRA task referencing a nonexistent microbatch: family (6)
+    # only checks required tasks exist, so the bounds check must catch it —
+    # executors index [M]-sized buffers with clamped indices and would
+    # otherwise silently corrupt microbatch M-1
+    extra = Schedule(good.S, good.M, good.D,
+                     good.placements + (Placement(0, 7, 0, good.makespan),))
+    errs = validate_schedule(extra)
+    assert any("microbatch 7 out of range" in e for e in errs)
+    # device_programs refuses the same malformation with a clear message
+    with pytest.raises(ValueError, match="validate_schedule"):
+        mutate(device=5).device_programs()
+
+
+def test_device_programs_match_grid_templates():
+    """Dense per-device step programs agree with grid() slot-for-slot on
+    both classic templates."""
+    from helpers.schedule_checks import assert_programs_match_grid
+    for sched in (template_1f1b(4, 6), template_wave(3, 4)):
+        assert_programs_match_grid(sched)
 
 
 def test_simulation_durations():

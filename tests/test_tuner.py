@@ -48,6 +48,27 @@ def test_tuner_prefers_pp_when_comm_bound():
     assert best.P > 1
 
 
+def test_tuner_choice_records_scored_microbatches():
+    """Every choice carries the M its t_sched score assumed (default: the
+    M = P setting Eq. 15's closed form prices), so the compile path can
+    execute the same iteration shape it ranked."""
+    g = _graph()
+    for c in tune(g, 16, hw=V100_CLUSTER):
+        assert c.M == max(c.P, 1)
+        # Eq. (17): t_sample is the scored iteration over b*M*G samples
+        assert abs(c.t_sample * (c.b * c.M * c.G) - c.t_sched) < 1e-9
+    override = tune(g, 16, hw=V100_CLUSTER,
+                    microbatches_per_iter=lambda P: 2 * P)
+    assert all(c.M == 2 * c.P for c in override)
+    # the paper cost model prices the overridden M (a 2P iteration costs
+    # more than the default P iteration for the same P, G, b)
+    base = {(c.P, c.G, c.b): c for c in tune(g, 16, hw=V100_CLUSTER)}
+    priced = [c for c in override if c.P > 1 and (c.P, c.G, c.b) in base]
+    assert priced
+    for c in priced:
+        assert c.t_sched > base[(c.P, c.G, c.b)].t_sched
+
+
 def test_simulation_mode_agrees_on_ranking():
     g = _graph()
     a = tune(g, 16, hw=V100_CLUSTER)[0]
