@@ -66,6 +66,30 @@ def make_microbatches(batch, rng, edge):
     return (mb, aux)
 
 
+def pipeline_graph(batch: int = 1, fwd_times=None):
+    """Runtime-aligned block graph for the auto-pipeline compile path
+    (one block per enc/dec row, fully-paired skips)."""
+    return dm.hunyuan_pipeline_graph(CFG, batch, fwd_times=fwd_times)
+
+
+def pipeline_model_fns():
+    """Block-level compile-path callables for this config's model."""
+    from repro.runtime.adapters import diffusion_model_fns
+    return diffusion_model_fns(CFG, "hunyuan")
+
+
+def auto_plan(N: int, **kwargs):
+    """Plan + lower this config through the full compile path
+    (graph -> skip-aware partition -> validated schedule -> executor).
+
+    ``N`` is the total device budget; keyword arguments forward to
+    :func:`repro.runtime.compile.auto_pipeline` (e.g. ``pipeline_devices``
+    to pin the pipeline degree, ``microbatches``, ``use_ilp``).
+    """
+    from repro.runtime.compile import auto_pipeline
+    return auto_pipeline(pipeline_graph(), pipeline_model_fns(), N, **kwargs)
+
+
 def get_bundle():
     return ArchBundle(
         name="hunyuan-dit", family="diffusion", cfg=CFG,

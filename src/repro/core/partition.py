@@ -11,16 +11,26 @@ Five partitioners:
                                  costs); the skip-free dispatch target of
                                  ``partition_bidirectional``.
 - ``partition_bidirectional``  — Algorithm 1: bidirectional DP over
-                                 prefix/suffix states with symmetric
-                                 collocation constraints for nested skips.
-- ``partition_reference``      — exact O(p·n^4) reference with the paper's
-                                 full constraint predicate c(i',i,j,j'); any
-                                 skip structure; used for validation.
+                                 prefix/suffix states.  The per-state
+                                 feasibility predicate handles *any* skip
+                                 structure (nested, sparse, partially
+                                 skipped, crossing), so it returns its
+                                 asymmetric optimum directly instead of
+                                 detouring through the exponential
+                                 reference.
+- ``partition_reference``      — exact brute-force reference with the
+                                 paper's full constraint predicate
+                                 c(i',i,j,j'); any skip structure;
+                                 exponential — used for validation only.
 
 All partitioners return a :class:`Partition` whose ``cuts`` are ``p+1``
 monotone boundaries over block indices; stage ``s`` covers
-``[cuts[s], cuts[s+1])`` and executes s-th in pipeline order.  For wave
-(folded) partitions stage ``s`` is placed on device ``min(s, p-1-s)``.
+``[cuts[s], cuts[s+1])`` and executes s-th in pipeline order.  Stage
+placement is carried *explicitly* in ``Partition.devices`` (one device id
+per stage); the partitioners here emit the folded mirror placement
+``min(s, p-1-s)`` for waves and the identity for linear pipelines, but the
+rest of the stack (layout, schedule, executors) reads ``devices``, not the
+closed form — folded cuts need not be mirror-symmetric.
 """
 from __future__ import annotations
 
@@ -39,9 +49,21 @@ INF = float("inf")
 @dataclasses.dataclass(frozen=True)
 class Partition:
     cuts: tuple[int, ...]            # p+1 boundaries, cuts[0]=0, cuts[p]=n
-    folded: bool                     # True => stage s on device min(s, p-1-s)
+    folded: bool                     # True => wave (two stages per device)
     objective: float                 # max over stages of Eq. (1) cost
     stage_costs: tuple[float, ...]   # per-stage Eq. (1) cost
+    devices: tuple[int, ...] = ()    # per-stage device id; () derives the
+    #   canonical placement (mirror fold min(s, p-1-s), identity linear)
+
+    def __post_init__(self):
+        p = len(self.cuts) - 1
+        if not self.devices:
+            object.__setattr__(self, "devices", tuple(
+                min(s, p - 1 - s) if self.folded else s for s in range(p)))
+        elif len(self.devices) != p:
+            raise ValueError(
+                f"devices maps {len(self.devices)} stages but cuts describe "
+                f"{p}")
 
     @property
     def num_stages(self) -> int:
@@ -49,21 +71,16 @@ class Partition:
 
     @property
     def num_devices(self) -> int:
-        p = self.num_stages
-        return p // 2 if self.folded else p
+        return max(self.devices) + 1
 
     def stage_range(self, s: int) -> tuple[int, int]:
         return self.cuts[s], self.cuts[s + 1]
 
     def device_of_stage(self, s: int) -> int:
-        p = self.num_stages
-        return min(s, p - 1 - s) if self.folded else s
+        return self.devices[s]
 
     def stages_of_device(self, d: int) -> tuple[int, ...]:
-        p = self.num_stages
-        if self.folded:
-            return (d, p - 1 - d)
-        return (d,)
+        return tuple(s for s, dev in enumerate(self.devices) if dev == d)
 
     def stage_of_block(self, b: int) -> int:
         for s in range(self.num_stages):
@@ -76,15 +93,19 @@ class Partition:
                      for s in range(self.num_stages))
 
     def collocated_pairs(self) -> tuple[tuple[int, int], ...]:
-        """Stage pairs pinned to one device by the fold (schedule Eq. (9))."""
-        if not self.folded:
-            return ()
-        S = self.num_stages
-        return tuple((s, S - 1 - s) for s in range(S // 2))
+        """Stage pairs pinned to one device (schedule Eq. (9)), read off the
+        explicit device mapping."""
+        by_dev: dict[int, list[int]] = {}
+        for s, d in enumerate(self.devices):
+            by_dev.setdefault(d, []).append(s)
+        return tuple((ss[0], ss[1])
+                     for _, ss in sorted(by_dev.items()) if len(ss) == 2)
 
     def mirror_symmetric(self) -> bool:
         """True iff stage s and stage S-1-s have equal block counts — the
-        shape the folded executor (and fully-paired skip graphs) require."""
+        shape fully-paired skip graphs force.  Informational only: the
+        layout/lowering stack no longer requires it (asymmetric folds from
+        partially-skipped graphs lower through the same executors)."""
         if not self.folded:
             return False
         S, n = self.num_stages, self.cuts[-1]
@@ -199,59 +220,77 @@ def partition_symmetric_fold(
     whereas the true up-stream transfer leaves from the stage's first
     pair's mirror and each boundary is two physical hops.  Exact for
     uniform act_bytes; a heuristic otherwise (compute balance dominates).
+
+    Odd block counts leave one unpaired middle block; it always executes on
+    the innermost device (the mirrored cuts pin it there), so its cost is
+    charged to the innermost pair and the resulting fold is *asymmetric by
+    one block* (the middle block rides the first suffix stage) — a legal
+    shape for the generalized layout.
     """
     n = graph.n
     if p % 2 != 0:
         raise ValueError("symmetric fold needs an even stage count")
-    if n % 2 != 0:
-        raise ValueError(
-            f"symmetric fold needs an even block count, got {n}")
-    D = p // 2
+    if p > n:
+        raise ValueError(f"cannot split {n} blocks into {p} stages")
+    D, h = p // 2, n // 2
+    mid_t = graph.blocks[h].fwd_time if n % 2 else 0.0
     pairs = tuple(
         Block(f"pair{i}",
-              graph.blocks[i].fwd_time + graph.blocks[n - 1 - i].fwd_time,
+              (graph.blocks[i].fwd_time + graph.blocks[n - 1 - i].fwd_time
+               + (mid_t if i == h - 1 else 0.0)),
               act_bytes=(graph.blocks[i].act_bytes
                          + graph.blocks[n - 1 - i].act_bytes))
-        for i in range(n // 2))
+        for i in range(h))
     half = linear_partition(BlockGraph(pairs), D, hw=hw, lam=lam)
     cuts = list(half.cuts) + [n - c for c in reversed(half.cuts[:-1])]
     return _mk_partition(graph, cuts, True, hw, lam)
 
 
 # --------------------------------------------------------------------------
-# Algorithm 1: bidirectional skip-aware DP (nested skips)
+# Algorithm 1: bidirectional skip-aware DP (any skip structure)
 # --------------------------------------------------------------------------
 
 def _feasible_j_interval(graph: BlockGraph, i: int) -> tuple[int, int]:
-    """Feasible suffix start j for prefix end i (nested skips).
+    """Feasible suffix starts j for prefix end i — any skip structure.
 
-    State (i, j): prefix covers [0, i), suffix covers [j, n).  All skip
-    sources < i must have their destination >= j; all sources >= i must
-    have destination < j.  With nested skips, sorted sources s_0<s_1<...
-    pair with descending destinations d_0>d_1>..., so the constraint pins
-    j into the half-open interval (d_m, d_{m-1}] where m = #{src < i}.
+    State (i, j): prefix covers [0, i), suffix covers [j, n).  The state is
+    consistent iff every skip pairs prefix with suffix at this boundary:
+    ``(src < i) <=> (dst >= j)``.  That pins j into the inclusive interval
+    ``(max dst over skips with src >= i, min dst over skips with src < i]``
+    — for nested skips this collapses to the paper's (d_m, d_{m-1}]
+    interval, but no nestedness is required: sparse, partially-skipped and
+    crossing topologies all reduce to the same interval form.  A chain of
+    states each consistent at its boundary realizes exactly the paper's
+    c(i',i,j,j') stage-symmetry predicate (skip src in stage q <=> dst in
+    stage p-1-q), which is what :func:`partition_reference` enumerates.
     Returns an inclusive interval (j_lo, j_hi); empty if j_lo > j_hi.
     """
     n = graph.n
-    skips = graph.sorted_skips()
-    m = sum(1 for e in skips if e.src < i)
-    j_hi = skips[m - 1].dst if m > 0 else n
-    j_lo = skips[m].dst + 1 if m < len(skips) else i
-    return max(j_lo, i), j_hi
+    lo, hi = i, n
+    for e in graph.skips:
+        if e.src < i:
+            hi = min(hi, e.dst)
+        else:
+            lo = max(lo, e.dst + 1)
+    return max(lo, i), hi
 
 
 def partition_bidirectional(
     graph: BlockGraph, p: int, *,
     hw: Hardware = TPU_V5E, lam: float = 1.0,
 ) -> Partition:
-    """Skip-aware bidirectional DP (Algorithm 1) for nested skip graphs.
+    """Skip-aware bidirectional DP (Algorithm 1) for skip graphs.
 
     Builds p stages (p even) pairwise from both sequence ends; stage q is
     collocated with stage p-1-q on device q.  DP state dp[(i, j)] after k
     stage-pairs = minimal max-cost covering prefix [0,i) and suffix [j,n).
-    Using the nested-skip feasibility interval the state space collapses to
-    feasible (i, j) pairs only, giving the paper's O(p n^3) bound (and far
-    less when most blocks carry skips).
+    The per-state feasibility interval handles *any* skip structure —
+    nested, sparse, mid-block bottlenecks, crossing — so partially-skipped
+    graphs get their (generally mirror-asymmetric) DP optimum directly; the
+    exponential :func:`partition_reference` is a test oracle, not a
+    fallback.  For nested skips the interval collapses to the paper's
+    state space, giving the O(p n^3) bound (and far less when most blocks
+    carry skips).
     """
     n = graph.n
     if p % 2 != 0:
@@ -260,8 +299,6 @@ def partition_bidirectional(
         raise ValueError(f"cannot split {n} blocks into {p} stages")
     if not graph.skips:
         return partition_symmetric_fold(graph, p, hw=hw, lam=lam)
-    if not graph.is_nested():
-        return partition_reference(graph, p, hw=hw, lam=lam)
 
     # Pre-compute prefix sums of fwd time; stage costs on demand.
     pref = np.concatenate([[0.0], np.cumsum([b.fwd_time for b in graph.blocks])])

@@ -139,6 +139,7 @@ def tune(
     lam: float = 1.0,
     use_simulation: bool = False,
     microbatches_per_iter: Callable[[int], int] | None = None,
+    drops: list[str] | None = None,
 ) -> list[TunerChoice]:
     """Enumerate (P, G, b) and return all feasible choices, best first.
 
@@ -148,6 +149,12 @@ def tune(
     Eq. (17)'s denominator b*M*G the per-iteration sample count.  The M
     each choice was scored with is recorded on ``TunerChoice.M``;
     ``auto_pipeline`` executes that M.
+
+    ``drops`` (optional out-param) collects one human-readable reason per
+    pipeline degree that yielded NO choice — recorded here, at the point
+    each filter fires, so error reports read facts rather than
+    re-simulating the filter (``auto_pipeline`` surfaces them when nothing
+    survives).
     """
     if microbatches_per_iter is None:
         microbatches_per_iter = lambda P: max(P, 1)
@@ -160,6 +167,9 @@ def tune(
         else:
             S = P
         if S > graph.n or S < 1:
+            if drops is not None:
+                drops.append(f"P={P}: needs S={S} stages but the graph "
+                             f"has only {graph.n} blocks")
             continue
         try:
             if P == 1:
@@ -167,13 +177,20 @@ def tune(
             else:
                 part = part_mod.partition(graph, P, hw=hw, lam=lam,
                                           force_wave=wave)
-        except ValueError:
+        except ValueError as e:
+            if drops is not None:
+                drops.append(f"P={P}: partitioner infeasible: {e}")
             continue
         prof = profile_partition(graph, part)
         b = 1
         while b <= max_microbatch:
             mem = peak_memory(prof, max(P, 1), b, wave=wave and P > 1)
             if mem >= hw.mem_limit:
+                if b == 1 and drops is not None:
+                    drops.append(
+                        f"P={P}: smallest microbatch already exceeds the "
+                        f"memory budget (peak {mem / 1e9:.2f} GB >= "
+                        f"{hw.mem_limit / 1e9:.2f} GB)")
                 break
             M = microbatches_per_iter(P)
             if use_simulation and P > 1:

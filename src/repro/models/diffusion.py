@@ -671,7 +671,6 @@ def uvit_pipeline_graph(cfg: UViTConfig, batch: int = 1,
     attn_fl = 2 * batch * (4 * n * d * d + 2 * n * n * d)
     mlp_fl = 2 * batch * (2 * n * d * ff)
     per_param = (4 * d * d + 2 * d * ff) * 2
-    from repro.core.profiler import analytic_block_costs
     blocks = []
     for i in range(cfg.half):
         blocks.append(Block(f"enc{i}", 0.0, per_param, act, act,
@@ -679,12 +678,175 @@ def uvit_pipeline_graph(cfg: UViTConfig, batch: int = 1,
     for i in range(cfg.half):
         blocks.append(Block(f"dec{i}", 0.0, per_param + 2 * d * d * 2, act, 0,
                             attn_fl + mlp_fl + 2 * batch * n * 2 * d * d))
-    blocks = list(analytic_block_costs(blocks, hw))
+    return _runtime_graph(blocks,
+                          _paired_skips(2 * cfg.half, cfg.half, act),
+                          fwd_times, hw)
+
+
+def _runtime_graph(blocks, skip_edges, fwd_times, hw) -> BlockGraph:
+    """Shared tail of the ``*_pipeline_graph`` builders: analytic block
+    costs, optional profiled fwd-time injection, skip-edge attachment."""
+    from repro.core.profiler import analytic_block_costs
+    blocks = list(analytic_block_costs(tuple(blocks), hw))
     if fwd_times is not None:
-        if len(fwd_times) != 2 * cfg.half:
+        if len(fwd_times) != len(blocks):
             raise ValueError("fwd_times must have one entry per block")
         blocks = [dataclasses.replace(b, fwd_time=float(t))
                   for b, t in zip(blocks, fwd_times)]
-    total = 2 * cfg.half
-    skips = tuple(SkipEdge(i, total - 1 - i, act) for i in range(cfg.half))
-    return BlockGraph(tuple(blocks), skips)
+    return BlockGraph(tuple(blocks), tuple(skip_edges))
+
+
+def _paired_skips(n_total: int, n_pairs: int, act: int
+                  ) -> tuple[SkipEdge, ...]:
+    """Fully-paired UNet edges: block i -> its mirror ``n_total-1-i``."""
+    return tuple(SkipEdge(i, n_total - 1 - i, act) for i in range(n_pairs))
+
+
+def hunyuan_pipeline_graph(cfg: HunyuanDiTConfig, batch: int = 1,
+                           fwd_times=None,
+                           hw: Hardware = TPU_V5E) -> BlockGraph:
+    """Runtime-aligned Hunyuan-DiT graph for the auto-pipeline compile path.
+
+    Like :func:`uvit_pipeline_graph`: exactly one block per
+    ``enc_blocks``/``dec_blocks`` row (embed/out live in edge params), with
+    the fully-paired skip edges enc i -> dec mirror.  ``fwd_times``
+    (length 2*half) injects profiled per-block times.
+    """
+    d, n, ff, lt = cfg.d_model, cfg.n_tokens, cfg.d_ff, cfg.ctx_len
+    act = batch * n * d * 2
+    blk_fl = 2 * batch * (4 * n * d * d + 2 * n * n * d + 2 * n * d * ff
+                          + 2 * n * d * d + cfg.ctx_dim * 2 * d * lt
+                          + 2 * n * lt * d)
+    per_param = (4 * d * d + 2 * d * ff + 2 * d * d + cfg.ctx_dim * 2 * d
+                 + 6 * d * d) * 2
+    blocks = []
+    for i in range(cfg.half):
+        blocks.append(Block(f"enc{i}", 0.0, per_param, act, act, blk_fl))
+    for i in range(cfg.half):
+        blocks.append(Block(f"dec{i}", 0.0, per_param + 2 * d * d * 2, act,
+                            0, blk_fl + 2 * batch * n * 2 * d * d))
+    return _runtime_graph(blocks,
+                          _paired_skips(2 * cfg.half, cfg.half, act),
+                          fwd_times, hw)
+
+
+# --------------------------------------------------------------------------
+# SkipViT: homogeneous ViT stack with an arbitrary (possibly sparse) skip
+# topology — the asymmetric-fold workload (mid-block bottlenecks, sparse
+# skips, odd block counts) the generalized layout/lowering stack runs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SkipViTConfig:
+    """UNet-shaped ViT over ONE homogeneous block stack.
+
+    ``n_enc`` skip-emitting blocks, ``n_mid`` bottleneck blocks (no skip
+    endpoints), ``n_dec`` blocks that may consume a skip.  ``skip_pairs``
+    (block-index ``(src, dst)`` tuples) defaults to full pairing
+    ``(i, n-1-i)``; pass a subset for sparse-skip variants.  Every block
+    carries a ``skip_in`` projection and consumes *additively*
+    (``x + skip @ skip_in``), so blocks without an incoming skip see zeros
+    and reduce to a plain ViT block — one scan body covers emitters,
+    bottlenecks and consumers, which is what lets the fold's turnaround cut
+    land anywhere the partitioner puts it.
+    """
+
+    name: str
+    img_size: int = 8
+    in_ch: int = 4
+    patch: int = 2
+    d_model: int = 32
+    n_heads: int = 4
+    d_ff: int = 64
+    n_classes: int = 10
+    n_enc: int = 3
+    n_mid: int = 2
+    n_dec: int = 3
+    skip_pairs: tuple[tuple[int, int], ...] | None = None
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_enc + self.n_mid + self.n_dec
+
+    @property
+    def n_tokens(self) -> int:
+        return (self.img_size // self.patch) ** 2 + 2  # + time/class tokens
+
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(self.d_model, self.n_heads, self.n_heads,
+                          self.d_model // self.n_heads, rope_theta=0.0,
+                          causal=False)
+
+    def skip_edges(self) -> tuple[tuple[int, int], ...]:
+        if self.skip_pairs is not None:
+            return self.skip_pairs
+        k = min(self.n_enc, self.n_dec)
+        return tuple((i, self.n_blocks - 1 - i) for i in range(k))
+
+
+def init_skipvit(key, cfg: SkipViTConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d, pd = cfg.d_model, cfg.param_dtype
+    pp = cfg.patch ** 2 * cfg.in_ch
+    bk = jax.random.split(ks[0], cfg.n_blocks)
+
+    def mk(k):
+        k1, k2 = jax.random.split(k)
+        p = _init_vit_block(k1, cfg, cfg.d_ff, False)
+        p["skip_in"] = L.dense_init(k2, d, d, pd)
+        return p
+
+    return {
+        "patch_embed": L.dense_init(ks[2], pp, d, pd),
+        "pos_embed": (jax.random.normal(ks[3], (cfg.n_tokens, d)) * 0.02
+                      ).astype(pd),
+        "time_mlp": L.init_gelu_mlp(ks[4], d, 4 * d, pd),
+        "class_embed": L.dense_init(ks[5], cfg.n_classes, d, pd),
+        "blocks": jax.vmap(mk)(bk),
+        "out_norm": jnp.ones((d,), pd),
+        "out_proj": L.dense_init(ks[6], d, pp, pd),
+    }
+
+
+def skipvit_apply(params: Params, xt: Array, t: Array, batch: dict,
+                  cfg: SkipViTConfig) -> Array:
+    """Single-device reference; the pipeline executors must match it for
+    every legal partition, mirror-symmetric or not."""
+    x = uvit_embed(params, xt, t, batch, cfg)
+    consumes = {dst: src for src, dst in cfg.skip_edges()}
+    stash: dict[int, Array] = {}
+    for b in range(cfg.n_blocks):
+        bp = jax.tree.map(lambda a: a[b], params["blocks"])
+        if b in consumes:
+            x = x + stash[consumes[b]] @ bp["skip_in"].astype(x.dtype)
+        x = _apply_vit_block(bp, x, cfg)
+        stash[b] = x
+    return uvit_output(params, x, cfg)
+
+
+def skipvit_loss(params: Params, batch: dict, rng: Array,
+                 cfg: SkipViTConfig) -> Array:
+    return ddpm_loss(lambda p, xt, t, b: skipvit_apply(p, xt, t, b, cfg),
+                     params, batch, rng)
+
+
+def skipvit_pipeline_graph(cfg: SkipViTConfig, batch: int = 1,
+                           fwd_times=None,
+                           hw: Hardware = TPU_V5E) -> BlockGraph:
+    """Runtime-aligned SkipViT graph: one block per ``params['blocks']``
+    row with the config's (possibly sparse / mid-block) skip edges."""
+    d, n, ff = cfg.d_model, cfg.n_tokens, cfg.d_ff
+    act = batch * n * d * 2
+    blk_fl = 2 * batch * (4 * n * d * d + 2 * n * n * d + 2 * n * d * ff)
+    per_param = (4 * d * d + 2 * d * ff + d * d) * 2
+    edges = cfg.skip_edges()
+    srcs = {s for s, _ in edges}
+    blocks = [Block(f"blk{i}", 0.0, per_param, act,
+                    act if i in srcs else 0, blk_fl)
+              for i in range(cfg.n_blocks)]
+    return _runtime_graph(blocks,
+                          (SkipEdge(s, t, act) for s, t in edges),
+                          fwd_times, hw)

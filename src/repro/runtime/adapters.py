@@ -352,3 +352,49 @@ def diffusion_model_fns(cfg: Any, kind: str = "uvit"):
         enc_block_fn=enc_block_fn, dec_block_fn=dec_block_fn,
         split_blocks=split_blocks, merge_blocks=merge_blocks,
         num_param_stacks=2)
+
+
+def skipvit_model_fns(cfg):
+    """SkipViT (homogeneous stack, arbitrary skip topology) as compile-path
+    callables.
+
+    Pairs with :func:`repro.models.diffusion.skipvit_pipeline_graph`.  One
+    parameter stack covers emitters, bottleneck blocks and consumers: every
+    encoder-half block emits its output to the stash, every decoder-half
+    block consumes additively (``x + skip @ skip_in``) — rows the layout's
+    skip pairing marks skip-less receive zeros and reduce to plain blocks.
+    This is the model family whose partitions exercise asymmetric folds
+    (the fold's turnaround cut may land anywhere, including inside the
+    bottleneck run).
+    """
+    from repro.runtime.compile import PipelineModelFns
+
+    def embed_fn(edge_p, mb, aux):
+        return diff_mod.uvit_embed(edge_p, mb["xt"], aux["t"], mb, cfg)
+
+    def enc_block_fn(bp, x, aux):
+        y = diff_mod._apply_vit_block(bp, x, cfg)
+        return y, y
+
+    def dec_block_fn(bp, x, skip, aux):
+        x = x + skip @ bp["skip_in"].astype(x.dtype)
+        return diff_mod._apply_vit_block(bp, x, cfg)
+
+    def loss_fn(edge_p, x, mb, aux):
+        pred = diff_mod.uvit_output(edge_p, x, cfg)
+        return jnp.mean(jnp.square(pred.astype(jnp.float32)
+                                   - mb["noise"].astype(jnp.float32)))
+
+    def split_blocks(params):
+        edge = {k: v for k, v in params.items() if k != "blocks"}
+        return (params["blocks"],), edge
+
+    def merge_blocks(stacks, edge):
+        return {**edge, "blocks": stacks[0]}
+
+    return PipelineModelFns(
+        init_fn=lambda key: diff_mod.init_skipvit(key, cfg),
+        embed_fn=embed_fn, loss_fn=loss_fn,
+        enc_block_fn=enc_block_fn, dec_block_fn=dec_block_fn,
+        split_blocks=split_blocks, merge_blocks=merge_blocks,
+        num_param_stacks=1)

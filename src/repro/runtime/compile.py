@@ -12,8 +12,11 @@ description (:class:`PipelineModelFns`) and a device budget, then
    family before anything executes;
 3. **lowers**: builds a shard_map executor for the partition.  Unlike the
    hand-written executors' hard-wired S=D / S=2D even splits, stages here
-   carry *padded block stacks* plus true per-device block counts, so the
-   uneven stage boundaries the DP partitioner actually emits run unchanged
+   carry *padded block stacks* plus true per-device block counts — with
+   independent encoder-/decoder-half counts and a skip-stash pairing
+   derived from the graph's actual skip edges, so the uneven and
+   mirror-asymmetric stage boundaries the DP partitioner emits for
+   partially-skipped graphs run unchanged
    (masked block scans; see runtime.pipeline).  The execution *order* is
    lowered from the validated schedule itself: per-device step tables
    extracted by ``runtime.schedule_exec`` drive the scan body, so a
@@ -89,49 +92,134 @@ class PipelineModelFns:
 @dataclasses.dataclass(frozen=True)
 class StageLayout:
     """Mapping between a model's flat block stack and per-device stage
-    stacks for a (possibly uneven) partition.
+    stacks for a (possibly uneven, possibly mirror-asymmetric) partition.
 
-    ``counts[d]`` is device d's true block count per half (folded) or per
-    stage (linear); every stage stack is padded to ``pad`` rows so one SPMD
-    program covers all devices.
+    For a folded partition, device ``d`` runs one encoder-half (prefix)
+    stage of ``enc_counts[d]`` blocks and one decoder-half (suffix) stage
+    of ``dec_counts[d]`` blocks — the two counts are independent, so the
+    mirror-asymmetric folds the skip-aware DP emits for partially-skipped
+    graphs (mid-block bottlenecks, sparse skips, odd block counts) lay out
+    exactly like symmetric ones.  Encoder stacks pad to ``enc_pad`` rows
+    and decoder stacks to ``dec_pad`` so one SPMD program covers all
+    devices.  ``skip_rows[d][i]`` is the stash row device d's decoder row
+    ``i`` consumes — derived from the partition's *actual* skip edges, not
+    the mirror closed form; ``-1`` marks rows without a skip (they receive
+    zeros).  Linear partitions use only ``enc_counts``/``enc_pad``.
     """
 
     partition: Partition
-    counts: tuple[int, ...]
-    pad: int
+    enc_counts: tuple[int, ...]
+    dec_counts: tuple[int, ...]
+    enc_pad: int
+    dec_pad: int
+    enc_stages: tuple[int, ...] = ()   # device d's prefix stage (folded)
+    dec_stages: tuple[int, ...] = ()   # device d's suffix stage (folded)
+    skip_rows: tuple[tuple[int, ...], ...] = ()
+
+    # ---- legacy aliases (planning tests / describe output) -------------
+    @property
+    def counts(self) -> tuple[int, ...]:
+        return self.enc_counts
+
+    @property
+    def pad(self) -> int:
+        return self.enc_pad
 
     @classmethod
-    def from_partition(cls, part: Partition) -> "StageLayout":
-        cuts, D = part.cuts, part.num_devices
-        if part.folded and not part.mirror_symmetric():
+    def from_partition(cls, part: Partition,
+                       graph: BlockGraph | None = None) -> "StageLayout":
+        """Lay out ``part``; ``graph`` supplies the skip edges that define
+        the stash pairing.  Without a graph, folded layouts fall back to
+        the LIFO mirror pairing (which requires mirror-symmetric cuts —
+        the only pairing derivable without edges); ``auto_pipeline``
+        always passes the graph.
+        """
+        D = part.num_devices
+        if not part.folded:
+            counts = part.stage_sizes()
+            return cls(part, counts, (0,) * D, max(counts), 0)
+        S = part.num_stages
+        if S != 2 * D:
             raise ValueError(
-                "folded executor needs mirror-symmetric cuts "
-                f"(stage s and stage S-1-s of equal size); got {cuts}. "
-                "Partially-skipped graphs (mid blocks, sparse skips) can "
-                "yield legal asymmetric folds the executor cannot lower "
-                "yet — see ROADMAP open items")
-        # with mirror symmetry the first D cuts describe both halves
-        counts = part.stage_sizes()[:D]
-        return cls(part, counts, max(counts))
+                f"folded partition has {S} stages over {D} devices; the "
+                "wave layout folds exactly two stages per device "
+                "(interleaved schedules are a ROADMAP open item)")
+        enc_stages, dec_stages = [-1] * D, [-1] * D
+        for s in range(S):
+            d = part.device_of_stage(s)
+            half = enc_stages if s < S // 2 else dec_stages
+            if half[d] != -1:
+                raise ValueError(
+                    f"device {d} holds two {'prefix' if s < S // 2 else 'suffix'}"
+                    f"-half stages ({half[d]} and {s}); the fold pairs one "
+                    "of each per device")
+            half[d] = s
+        sizes = part.stage_sizes()
+        enc_counts = tuple(sizes[s] for s in enc_stages)
+        dec_counts = tuple(sizes[s] for s in dec_stages)
+        enc_pad, dec_pad = max(enc_counts), max(dec_counts)
+        if graph is not None:
+            skip_rows = cls._pair_skips(part, graph, enc_stages, dec_stages,
+                                        dec_pad)
+        else:
+            if not part.mirror_symmetric():
+                raise ValueError(
+                    "mirror-asymmetric fold needs the block graph to "
+                    "derive its skip pairing; call "
+                    "StageLayout.from_partition(part, graph)")
+            skip_rows = tuple(
+                tuple(enc_counts[d] - 1 - i if i < dec_counts[d] else -1
+                      for i in range(dec_pad))
+                for d in range(D))
+        return cls(part, enc_counts, dec_counts, enc_pad, dec_pad,
+                   tuple(enc_stages), tuple(dec_stages), skip_rows)
+
+    @staticmethod
+    def _pair_skips(part: Partition, graph: BlockGraph,
+                    enc_stages: list[int], dec_stages: list[int],
+                    dec_pad: int) -> tuple[tuple[int, ...], ...]:
+        """Per device: decoder row -> encoder stash row, from skip edges."""
+        D, cuts = part.num_devices, part.cuts
+        rows = [[-1] * dec_pad for _ in range(D)]
+        for e in graph.skips:
+            s_src = part.stage_of_block(e.src)
+            s_dst = part.stage_of_block(e.dst)
+            d = part.device_of_stage(s_src)
+            if part.device_of_stage(s_dst) != d:
+                raise ValueError(
+                    f"skip {e.src}->{e.dst} spans devices "
+                    f"{d} and {part.device_of_stage(s_dst)}: the partition "
+                    "violates collocation (validate_collocation)")
+            if s_src != enc_stages[d] or s_dst != dec_stages[d]:
+                raise ValueError(
+                    f"skip {e.src}->{e.dst} is not encoder-half -> "
+                    f"decoder-half on device {d} (stages {s_src}->{s_dst}): "
+                    "the stash executors cache skips across the fold only")
+            dec_row = e.dst - cuts[s_dst]
+            enc_row = e.src - cuts[s_src]
+            if rows[d][dec_row] != -1:
+                raise ValueError(
+                    f"block {e.dst} consumes two skips; one stash slot per "
+                    "decoder row")
+            rows[d][dec_row] = enc_row
+        return tuple(map(tuple, rows))
 
     # ---- device -> block-row ranges ------------------------------------
     def enc_ranges(self) -> list[tuple[int, int]]:
-        cuts = self.partition.cuts
-        return [(cuts[d], cuts[d + 1])
-                for d in range(self.partition.num_devices)]
+        part, cuts = self.partition, self.partition.cuts
+        if not part.folded:
+            return [(cuts[d], cuts[d + 1]) for d in range(part.num_devices)]
+        return [(cuts[s], cuts[s + 1]) for s in self.enc_stages]
 
     def dec_ranges(self) -> list[tuple[int, int]]:
-        """Rows into the decoder-half stack; index d = stage S-1-d."""
-        cuts = self.partition.cuts
-        mid = cuts[self.partition.num_stages // 2]
-        return [(mid - cuts[d + 1], mid - cuts[d])
-                for d in range(self.partition.num_devices)]
+        """Rows into the decoder-half stack (block index minus mid cut)."""
+        part, cuts = self.partition, self.partition.cuts
+        mid = cuts[part.num_stages // 2]
+        return [(cuts[s] - mid, cuts[s + 1] - mid) for s in self.dec_stages]
 
     # ---- padded stacking (host-level; runs outside jit) ----------------
-    def _stack(self, blocks: Pytree, ranges: Sequence[tuple[int, int]]
-               ) -> Pytree:
-        pad = self.pad
-
+    def _stack(self, blocks: Pytree, ranges: Sequence[tuple[int, int]],
+               pad: int) -> Pytree:
         def f(x):
             rows = []
             for lo, hi in ranges:
@@ -161,15 +249,25 @@ class StageLayout:
         if not part.folded:
             if len(stacks) != 1:
                 raise ValueError("linear pipeline needs one block stack")
-            return (self._stack(stacks[0], self.enc_ranges()),)
+            return (self._stack(stacks[0], self.enc_ranges(), self.enc_pad),)
+        mid = part.cuts[part.num_stages // 2]
         if len(stacks) == 1:
-            mid = part.cuts[part.num_stages // 2]
             enc_b = jax.tree.map(lambda x: x[:mid], stacks[0])
             dec_b = jax.tree.map(lambda x: x[mid:], stacks[0])
         else:
             enc_b, dec_b = stacks
-        return (self._stack(enc_b, self.enc_ranges()),
-                self._stack(dec_b, self.dec_ranges()))
+            enc_rows = jax.tree.leaves(enc_b)[0].shape[0]
+            if enc_rows != mid:
+                # with two param structures the fold's turnaround must sit
+                # exactly on the model's own enc/dec boundary; a fully
+                # paired skip graph forces this, a sparse one may not
+                raise ValueError(
+                    f"partition turnaround cut at block {mid} but the "
+                    f"model's encoder stack has {enc_rows} rows; two-stack "
+                    "models need the mid cut on the stack boundary (add "
+                    "skip edges pinning it, or use a homogeneous stack)")
+        return (self._stack(enc_b, self.enc_ranges(), self.enc_pad),
+                self._stack(dec_b, self.dec_ranges(), self.dec_pad))
 
     def merge(self, stage_stacks: tuple, n_model_stacks: int) -> tuple:
         """Inverse of :meth:`split` (also correct for gradients)."""
@@ -237,11 +335,12 @@ class CompiledPipeline:
             raise ValueError(
                 f"unknown executor {self.executor!r}; expected 'table' or "
                 "'closed_form'")
-        fns, pcfg = self.model_fns, self.pcfg
-        axis, counts = pcfg.axis, self.layout.counts
+        fns, pcfg, layout = self.model_fns, self.pcfg, self.layout
+        axis = pcfg.axis
 
-        def my_count():
-            return jnp.asarray(counts, jnp.int32)[jax.lax.axis_index(axis)]
+        def my(table):
+            # device-local lookup into a per-device host constant table
+            return jnp.asarray(table, jnp.int32)[jax.lax.axis_index(axis)]
 
         if self.folded:
             if fns.block_fn is None and (fns.enc_block_fn is None
@@ -254,18 +353,23 @@ class CompiledPipeline:
             dec_block = fns.dec_block_fn or (
                 lambda bp, x, skip, aux: fns.block_fn(bp, x, aux))
 
+            # the two halves carry independent counts (asymmetric folds)
+            # and the stash pairing comes from the partition's skip edges
             def enc_stage_fn(stage_p, x, aux):
-                return scan_blocks_emit(enc_block, stage_p, x, my_count(), aux)
+                return scan_blocks_emit(enc_block, stage_p, x,
+                                        my(layout.enc_counts), aux)
 
             def dec_stage_fn(stage_p, x, skips, aux):
                 return scan_blocks_consume(
-                    dec_block, stage_p, skips, x, my_count(), aux)
+                    dec_block, stage_p, skips, x, my(layout.dec_counts),
+                    my(layout.skip_rows), aux)
 
             if self.executor == "table":
                 return make_wave_pipeline_from_schedule(
                     pcfg, self.schedule, embed_fn=fns.embed_fn,
                     enc_stage_fn=enc_stage_fn, dec_stage_fn=dec_stage_fn,
-                    loss_fn=fns.loss_fn)
+                    loss_fn=fns.loss_fn,
+                    device_of_stage=self.partition.device_of_stage)
             return make_wave_pipeline(
                 pcfg, embed_fn=fns.embed_fn, enc_stage_fn=enc_stage_fn,
                 dec_stage_fn=dec_stage_fn, loss_fn=fns.loss_fn)
@@ -274,14 +378,16 @@ class CompiledPipeline:
             raise ValueError("linear pipeline needs model_fns.block_fn")
 
         def stage_fn(stage_p, x):
-            return scan_blocks(fns.block_fn, stage_p, x, my_count(), None)
+            return scan_blocks(fns.block_fn, stage_p, x,
+                               my(layout.enc_counts), None)
 
         embed = lambda e, mb: fns.embed_fn(e, mb, None)
         loss = lambda e, x, mb: fns.loss_fn(e, x, mb, None)
         if self.executor == "table":
             return make_linear_pipeline_from_schedule(
                 pcfg, self.schedule, embed_fn=embed, stage_fn=stage_fn,
-                loss_fn=loss)
+                loss_fn=loss,
+                device_of_stage=self.partition.device_of_stage)
         return make_linear_pipeline(
             pcfg, embed_fn=embed, stage_fn=stage_fn, loss_fn=loss)
 
@@ -338,6 +444,11 @@ class CompiledPipeline:
             f"({'folded wave' if part.folded else 'linear 1F1B'}), "
             f"M={self.pcfg.num_microbatches} microbatches",
             f"  cuts={part.cuts} stage sizes={part.stage_sizes()}",
+            (f"  layout: enc counts={self.layout.enc_counts} "
+             f"dec counts={self.layout.dec_counts}"
+             + ("" if part.mirror_symmetric() else " (asymmetric fold)")
+             if part.folded else
+             f"  layout: stage counts={self.layout.enc_counts}"),
             f"  schedule: makespan={sched.makespan} slots, "
             f"bubble={sched.bubble_ratio():.2f}",
             f"  executor: {self.executor}",
@@ -386,19 +497,10 @@ def auto_pipeline(
     ``"closed_form"`` uses the hand-written wave/1F1B executors as
     differential references (these require M >= D for folded plans).
     """
-    def lowerable(p: Partition) -> bool:
-        return not p.folded or p.mirror_symmetric()
-
     choice: TunerChoice | None = None
     if pipeline_devices is not None:
         part = partition_graph(graph, pipeline_devices, hw=hw, lam=lam,
                                force_wave=force_wave)
-        if not lowerable(part):
-            raise ValueError(
-                f"partition {part.cuts} is folded but not mirror-symmetric "
-                "(partially-skipped graph); the executor cannot lower it — "
-                "only fully-paired skip graphs fold today (ROADMAP open "
-                "item)")
         if graph.skips and not part.folded:
             raise ValueError(
                 "graph has skip edges but the plan is linear: the linear "
@@ -409,13 +511,18 @@ def auto_pipeline(
             raise ValueError(
                 "force_wave requires pipeline_devices: the tuner derives "
                 "wave vs linear from graph.skips and would ignore it")
-        choices = tune(graph, N, hw=hw, lam=lam)
-        choices = [c for c in choices if c.partition is not None and c.P > 1
-                   and lowerable(c.partition)]
-        if not choices:
+        drops: list[str] = []
+        choices = tune(graph, N, hw=hw, lam=lam, drops=drops)
+        drops += [f"P={c.P} G={c.G} b={c.b}: pure data parallelism "
+                  "(P=1 plans carry no pipeline to lower)"
+                  for c in choices if c.partition is None or c.P <= 1]
+        keep = [c for c in choices if c.partition is not None and c.P > 1]
+        if not keep:
+            detail = "\n  ".join(drops) or "tuner enumerated no candidates"
             raise ValueError(
-                f"tuner found no feasible, lowerable pipeline plan for N={N}")
-        choice = choices[0]
+                f"tuner found no feasible pipeline plan for N={N}; "
+                f"candidates considered:\n  {detail}")
+        choice = keep[0]
         part = choice.partition
 
     D = part.num_devices
@@ -436,7 +543,7 @@ def auto_pipeline(
     pcfg = PipelineConfig(num_devices=D, num_microbatches=M,
                           data_axes=data_axes, dp_size=dp_size,
                           remat=remat, remat_policy=remat_policy)
-    layout = StageLayout.from_partition(part)
+    layout = StageLayout.from_partition(part, graph)
     return CompiledPipeline(graph=graph, partition=part, schedule=sched,
                             layout=layout, pcfg=pcfg, model_fns=model_fns,
                             choice=choice, executor=executor)

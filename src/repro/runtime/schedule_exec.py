@@ -75,6 +75,9 @@ class StepTables:
       at the *start* of the step (what the upstream device sent last step).
     - ``up_mb`` / ``up_valid``: same for the up-ring channel.
     - ``loss``: slot computes the final-stage output and emits the loss.
+    - ``embed_device`` / ``turn_device``: devices hosting stage 0 (embeds)
+      and the turnaround (last encoder / first decoder stage pair) — read
+      from the stage->device mapping instead of hardcoding 0 / D-1.
     """
 
     D: int
@@ -87,19 +90,26 @@ class StepTables:
     up_mb: np.ndarray
     up_valid: np.ndarray
     loss: np.ndarray
+    embed_device: int = 0
+    turn_device: int = -1
 
     @property
     def num_steps(self) -> int:
         return self.sel.shape[1]
 
     @classmethod
-    def from_schedule(cls, sched: Schedule, *, folded: bool) -> "StepTables":
+    def from_schedule(cls, sched: Schedule, *, folded: bool,
+                      device_of_stage=None) -> "StepTables":
         """Lower a schedule's forward placements to step tables.
 
-        Raises ``ValueError`` on any shape the synchronous scan cannot
-        realize (malformed placements, double-booked channels, a consumer
-        scheduled before its input can arrive) — the planner/executor
-        mismatches the closed forms used to hide surface here.
+        ``device_of_stage`` is the partition's *explicit* stage->device
+        mapping; when omitted the canonical placements (mirror fold /
+        identity) are assumed.  Raises ``ValueError`` on any shape the
+        synchronous scan cannot realize (malformed placements, a stage
+        mapped off the ring neighbourhood its messages need, double-booked
+        channels, a consumer scheduled before its input can arrive) — the
+        planner/executor mismatches the closed forms used to hide surface
+        here.
         """
         S, M, D = sched.S, sched.M, sched.D
         expect_S = 2 * D if folded else D
@@ -108,6 +118,9 @@ class StepTables:
                 f"schedule has S={S} stages but a "
                 f"{'folded' if folded else 'linear'} executor over D={D} "
                 f"devices lowers S={expect_S}")
+        if device_of_stage is None:
+            device_of_stage = (
+                (lambda s: min(s, S - 1 - s)) if folded else (lambda s: s))
         fwd = sorted((p for p in sched.placements if p.virtual < S),
                      key=lambda p: (p.step, p.device))
         steps = sorted({p.step for p in fwd})
@@ -141,19 +154,17 @@ class StepTables:
             if err is not None:
                 raise ValueError(
                     f"placement v={v} m={m}: {err}; run validate_schedule")
-            # The executors' stage stacks pin enc stage v to device v and
-            # dec stage v to device S-1-v (linear: stage v to device v);
-            # routing below assumes it.  A schedule with a permuted device
-            # mapping (e.g. an ILP free-mapping solve) is *valid* but not
-            # realizable on this layout — reject it here rather than run
-            # the wrong stage's parameters silently.
-            canon = min(v, S - 1 - v) if folded else v
+            # The stage layout pins each stage to the partition's device
+            # mapping; routing below assumes it.  A schedule with a
+            # permuted device mapping (e.g. an ILP free-mapping solve) is
+            # *valid* but not realizable on this layout — reject it here
+            # rather than run the wrong stage's parameters silently.
+            canon = device_of_stage(v)
             if dev != canon:
                 raise ValueError(
                     f"placement v={v} m={m} on device {dev}, but this "
                     f"executor's stage layout pins stage {v} to device "
-                    f"{canon} ({'folded' if folded else 'identity'} "
-                    "mapping); re-synthesize the schedule with the "
+                    f"{canon}; re-synthesize the schedule with the "
                     "partition's device_of_stage")
             k = k_of_step[p.step]
             if sel[dev, k] != IDLE:
@@ -164,18 +175,38 @@ class StepTables:
             mb[dev, k] = m
             if folded:
                 sel[dev, k] = RUN_ENC if v < D else RUN_DEC
-                if v < D - 1:
-                    # enc stage v -> enc stage v+1 on device v+1 (down ring)
-                    mark_rx(down_mb, down_valid, v + 1, k + 1, m, "down")
-                elif D <= v < S - 1:
-                    # dec stage v -> dec stage v+1 on device S-2-v (up ring)
-                    mark_rx(up_mb, up_valid, S - 2 - v, k + 1, m, "up")
-                # v == D-1: turnaround — consumed locally from the turn
-                # buffer by stage D on the same device, no send.
+                if v == D - 1:
+                    # turnaround — consumed locally from the turn buffer
+                    # by stage D, which must share the device; no send.
+                    if device_of_stage(D) != dev:
+                        raise ValueError(
+                            f"turnaround stages {D - 1},{D} on devices "
+                            f"{dev},{device_of_stage(D)}: the fold "
+                            "collocates them (constraint (9))")
+                elif v < S - 1:
+                    # enc -> enc rides the down ring, dec -> dec the up
+                    # ring; the consumer must be the matching neighbour.
+                    nd = device_of_stage(v + 1)
+                    want = dev + 1 if v < D else dev - 1
+                    if nd != want:
+                        raise ValueError(
+                            f"stage {v} on device {dev} feeds stage "
+                            f"{v + 1} on device {nd}, but the ring "
+                            f"executors only deliver to device {want}")
+                    if v < D:
+                        mark_rx(down_mb, down_valid, nd, k + 1, m, "down")
+                    else:
+                        mark_rx(up_mb, up_valid, nd, k + 1, m, "up")
             else:
                 sel[dev, k] = RUN_ENC
                 if v < S - 1:
-                    mark_rx(down_mb, down_valid, v + 1, k + 1, m, "down")
+                    nd = device_of_stage(v + 1)
+                    if nd != dev + 1:
+                        raise ValueError(
+                            f"stage {v} on device {dev} feeds stage "
+                            f"{v + 1} on device {nd}, but the linear "
+                            f"executor only delivers to device {dev + 1}")
+                    mark_rx(down_mb, down_valid, nd, k + 1, m, "down")
             if v == S - 1:
                 loss[dev, k] = True
 
@@ -198,7 +229,9 @@ class StepTables:
 
         return cls(D=D, M=M, forward_steps=tuple(steps), sel=sel, mb=mb,
                    down_mb=down_mb, down_valid=down_valid, up_mb=up_mb,
-                   up_valid=up_valid, loss=loss)
+                   up_valid=up_valid, loss=loss,
+                   embed_device=device_of_stage(0),
+                   turn_device=device_of_stage(D - 1) if folded else -1)
 
 
 # ===========================================================================
@@ -231,6 +264,7 @@ def make_wave_pipeline_from_schedule(
     enc_stage_fn: Callable,   # (stage_p, x, aux) -> (x_out, skips)
     dec_stage_fn: Callable,   # (stage_p, x, skips, aux) -> x_out
     loss_fn: Callable,        # (edge_p, x_final, mb, aux) -> scalar
+    device_of_stage=None,     # partition's explicit stage->device mapping
 ) -> Callable:
     """Lower a folded S=2D schedule to ``fn(enc_stack, dec_stack, edge_p,
     mbs, aux) -> loss`` (same signature as ``make_wave_pipeline``).
@@ -247,8 +281,10 @@ def make_wave_pipeline_from_schedule(
         raise ValueError(
             f"schedule (M={sched.M}, D={sched.D}) does not match the "
             f"pipeline config (M={M}, D={D})")
-    tables = StepTables.from_schedule(sched, folded=True)
+    tables = StepTables.from_schedule(sched, folded=True,
+                                      device_of_stage=device_of_stage)
     T = tables.num_steps
+    embed_dev, turn_dev = tables.embed_device, tables.turn_device
     down_perm, up_perm = ring_perms(D)
     enc_stage = _wrap_remat(enc_stage_fn, cfg)
     dec_stage = _wrap_remat(dec_stage_fn, cfg)
@@ -299,13 +335,13 @@ def make_wave_pipeline_from_schedule(
 
             def run_enc(_):
                 x0 = jax.lax.cond(
-                    d == 0, lambda: embed_fn(edge_p, mb_m, aux_m),
+                    d == embed_dev, lambda: embed_fn(edge_p, mb_m, aux_m),
                     lambda: zero_x)
-                x_in = jnp.where(d == 0, x0, tree_index(enc_rx, m))
+                x_in = jnp.where(d == embed_dev, x0, tree_index(enc_rx, m))
                 return enc_stage(enc_p, x_in, aux_m)
 
             def run_dec(_):
-                x_in = jnp.where(d == D - 1, tree_index(turn, m),
+                x_in = jnp.where(d == turn_dev, tree_index(turn, m),
                                  tree_index(dec_rx, m))
                 x_out = dec_stage(dec_p, x_in, tree_index(cache, m), aux_m)
                 return x_out, zero_skips
@@ -316,7 +352,7 @@ def make_wave_pipeline_from_schedule(
             # only the turnaround device ever reads turn[m]; gating the
             # store saves the [M, ...] buffer write (and its transpose in
             # the backward pass) on the other D-1 devices
-            turn = _buf_store(turn, m, x_out, is_enc & (d == D - 1))
+            turn = _buf_store(turn, m, x_out, is_enc & (d == turn_dev))
             cache = _buf_store(cache, m, skips, is_enc)
             loss = jax.lax.cond(
                 loss_t[t],
@@ -344,6 +380,7 @@ def make_linear_pipeline_from_schedule(
     embed_fn: Callable,       # (edge_p, mb) -> x
     stage_fn: Callable,       # (stage_p, x) -> x
     loss_fn: Callable,        # (edge_p, x_final, mb) -> scalar
+    device_of_stage=None,     # partition's explicit stage->device mapping
 ) -> Callable:
     """Lower a linear S=D schedule to ``fn(stack, edge_p, mbs) -> loss``
     (same signature as ``make_linear_pipeline``)."""
@@ -352,8 +389,10 @@ def make_linear_pipeline_from_schedule(
         raise ValueError(
             f"schedule (M={sched.M}, D={sched.D}) does not match the "
             f"pipeline config (M={M}, D={D})")
-    tables = StepTables.from_schedule(sched, folded=False)
+    tables = StepTables.from_schedule(sched, folded=False,
+                                      device_of_stage=device_of_stage)
     T = tables.num_steps
+    embed_dev = tables.embed_device
     down_perm, _ = ring_perms(D)
     stage = _wrap_remat(stage_fn, cfg)
 
@@ -383,8 +422,9 @@ def make_linear_pipeline_from_schedule(
 
             def run_stage(_):
                 x0 = jax.lax.cond(
-                    d == 0, lambda: embed_fn(edge_p, mb_m), lambda: zero_x)
-                x_in = jnp.where(d == 0, x0, tree_index(rx, m))
+                    d == embed_dev, lambda: embed_fn(edge_p, mb_m),
+                    lambda: zero_x)
+                x_in = jnp.where(d == embed_dev, x0, tree_index(rx, m))
                 return stage(my_p, x_in)
 
             x_out = jax.lax.switch(sel_t[t], (run_idle, run_stage), None)

@@ -207,13 +207,103 @@ def test_closed_form_wave_rejects_short_iterations():
         dataclasses.replace(cp, executor="wat").build()
 
 
-def test_layout_rejects_asymmetric_fold():
+def _asym_skipvit():
+    """make_unet_like(3, 2)-shaped model whose costs force a
+    mirror-ASYMMETRIC fold (turnaround cut inside the bottleneck run)."""
+    from repro.models.diffusion import SkipViTConfig, skipvit_pipeline_graph
+    cfg = SkipViTConfig("t", n_enc=3, n_mid=2, n_dec=3)
+    return cfg, skipvit_pipeline_graph(cfg, fwd_times=[1, 1, 4, .5, .5, .5, 1, 1])
+
+
+def test_layout_accepts_asymmetric_fold():
+    """StageLayout.from_partition no longer raises on legal asymmetric
+    folds: independent enc/dec counts and the stash pairing come from the
+    partition's actual skip edges."""
+    from repro.core.graph import make_unet_like
+    cfg, g = _asym_skipvit()
+    part = partition(g, 2, lam=0.0)
+    assert part.folded and not part.mirror_symmetric()
+    assert part.validate_collocation(g)
+    layout = StageLayout.from_partition(part, g)
+    assert layout.enc_counts != layout.dec_counts
+    assert sum(layout.enc_counts) + sum(layout.dec_counts) == g.n
+    # every skip edge resolved to a stash row; skip-less rows are -1
+    n_paired = sum(1 for row in layout.skip_rows for r in row if r >= 0)
+    assert n_paired == len(g.skips)
+    # the synthetic acceptance graph partitions and lays out as well
+    g2 = make_unet_like(3, 2)
+    part2 = partition(g2, 2, lam=0.0)
+    StageLayout.from_partition(part2, g2)
+
+
+def test_asymmetric_fold_compiles_through_auto_pipeline():
+    from repro.runtime.adapters import skipvit_model_fns
+    cfg, g = _asym_skipvit()
+    cp = auto_pipeline(g, skipvit_model_fns(cfg), 2, pipeline_devices=2,
+                       microbatches=4, lam=0.0)
+    assert not cp.partition.mirror_symmetric()
+    assert not validate_schedule(cp.schedule, cp.partition.device_of_stage,
+                                 collocated=cp.partition.collocated_pairs())
+    cp.build()                       # lowers without a mirror gate
+    # split/merge roundtrip on the asymmetric layout (the gradient path)
+    key = jax.random.PRNGKey(0)
+    params = cp.model_fns.init_fn(key)
+    stacks, edge = cp.split_params(params)
+    back = cp.merge_params(stacks, edge)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_layout_rejects_malformed_folds():
+    """Genuinely unliftable shapes still raise: non-paired device mappings
+    and skip edges that do not cross the fold."""
+    import dataclasses as dc
+    from repro.core.graph import BlockGraph, SkipEdge
     part = partition(lm_pipeline_graph(_lm_cfg()), 4)  # linear (no skips)
     assert StageLayout.from_partition(part).counts  # linear fine
-    import dataclasses
-    bad = dataclasses.replace(part, cuts=(0, 1, 2, 5, 8), folded=True)
+    # identity device mapping marked folded: no enc/dec stage pairing
+    bad = dc.replace(part, cuts=(0, 1, 2, 5, 8), folded=True)
     with pytest.raises(ValueError):
         StageLayout.from_partition(bad)
+    # legal asymmetric cuts but a skip whose endpoints sit on one side
+    cfg, g = _asym_skipvit()
+    good = partition(g, 2, lam=0.0)
+    g_bad = BlockGraph(g.blocks, g.skips + (SkipEdge(6, 7, 1),))
+    with pytest.raises(ValueError, match="encoder-half|collocation"):
+        StageLayout.from_partition(good, g_bad)
+    # mirror-asymmetric fold without a graph: no pairing derivable
+    with pytest.raises(ValueError, match="graph"):
+        StageLayout.from_partition(good)
+
+
+def test_hunyuan_config_plans_through_auto_pipeline():
+    """configs/hunyuan_dit wires the paper's own model through the compile
+    path: the full-size config plans, schedules and lays out (planning is
+    host-side; the numerical smoke test runs in the subprocess harness)."""
+    from repro.configs import hunyuan_dit
+    cp = hunyuan_dit.auto_plan(8, pipeline_devices=8, microbatches=8)
+    assert cp.folded and cp.partition.num_stages == 16
+    assert cp.partition.validate_collocation(cp.graph)
+    assert sum(cp.layout.enc_counts) + sum(cp.layout.dec_counts) == 32
+    assert not validate_schedule(cp.schedule, cp.partition.device_of_stage,
+                                 collocated=cp.partition.collocated_pairs())
+
+
+def test_auto_pipeline_reports_dropped_plans():
+    """When no plan survives, the error lists every candidate and why it
+    was dropped (previously a bare 'no feasible, lowerable plan')."""
+    # a 2-block skip graph on N=4: P=1 is pure DP, P=2 needs S=4 > 2
+    # blocks, P=4 needs S=8 — nothing survives
+    from repro.core.graph import Block, BlockGraph, SkipEdge
+    g = BlockGraph((Block("a", 1.0, act_bytes=8), Block("b", 1.0)),
+                   (SkipEdge(0, 1, 8),))
+    cfg = _lm_cfg()
+    with pytest.raises(ValueError) as ei:
+        auto_pipeline(g, lm_model_fns(cfg), 4)
+    msg = str(ei.value)
+    assert "P=1" in msg and "P=2" in msg and "P=4" in msg
+    assert "pure data parallelism" in msg
+    assert "stages" in msg           # S > n explanation present
 
 
 def test_schedule_for_partition_greedy_matches_templates():
@@ -236,6 +326,24 @@ def test_auto_pipeline_equivalence_uneven_and_short():
     behavior: the closed-form executor raises), and it matches the
     reference.  One subprocess to amortize the multi-device jax startup."""
     _run_equiv("linear-uneven", "wave-uneven", "wave-short")
+
+
+def test_auto_pipeline_equivalence_asymmetric_folds():
+    """Mirror-ASYMMETRIC folds (make_unet_like(3, 2) shape + a sparse-skip
+    variant) compile through auto_pipeline and their table executors match
+    the single-device reference (loss + grads, rtol 1e-4); the asymmetric
+    config is additionally checked against the closed-form wave executor.
+    These are exactly the partitions StageLayout.from_partition used to
+    reject."""
+    _run_equiv("wave-asym", "wave-sparse")
+
+
+@pytest.mark.slow
+def test_auto_pipeline_equivalence_hunyuan():
+    """Hunyuan-DiT model_fns coverage (ROADMAP item): a small Hunyuan
+    config through the full compile path matches hunyuan_apply (loss) and
+    the aux-as-data block-loop reference (grads)."""
+    _run_equiv("wave-hunyuan")
 
 
 @pytest.mark.slow

@@ -4,7 +4,7 @@ import random
 import pytest
 from helpers.hypothesis_compat import given, settings, st
 
-from repro.core.graph import Block, BlockGraph, make_unet_like
+from repro.core.graph import Block, BlockGraph, SkipEdge, make_unet_like
 from repro.core.partition import (partition, partition_bidirectional,
                                   partition_reference, linear_partition,
                                   blockwise_partition)
@@ -55,6 +55,92 @@ def test_linear_partition_beats_blockwise(times, p):
     assert lp.objective <= bw.objective + 1e-9
     # lower bound: total/p and max single block
     assert lp.objective >= max(max(times), sum(times) / p) - 1e-9
+
+
+def _random_partial_graph(rnd, n_pairs, mid, keep_prob=0.7, odd=False):
+    """Partially-skipped graph: random pair subset dropped, optional mid
+    blocks, optionally an odd total block count (extra tail block)."""
+    g = make_unet_like(n_pairs, mid + (1 if odd else 0))
+    kept = tuple(e for e in g.skips if rnd.random() < keep_prob)
+    blocks = tuple(
+        Block(b.name, rnd.uniform(0.2, 3.0), b.param_bytes,
+              int(b.act_bytes * rnd.uniform(0.5, 2.0)), b.skip_bytes)
+        for b in g.blocks)
+    return BlockGraph(blocks, kept)
+
+
+@given(st.integers(2, 4), st.integers(0, 2), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_bidirectional_matches_bruteforce_partially_skipped(n_pairs, mid,
+                                                            seed):
+    """The generalized DP returns the brute-force optimum on partially
+    skipped graphs (sparse pairs, mid-block bottlenecks, odd block counts)
+    — the shapes whose optima are mirror-asymmetric folds — and always
+    satisfies collocation."""
+    rnd = random.Random(seed)
+    g = _random_partial_graph(rnd, n_pairs, mid, odd=bool(seed % 2))
+    for p in (2, 4):
+        if p > g.n:
+            continue
+        if not g.skips:
+            got = partition_bidirectional(g, p, lam=0.0)
+            assert got.folded and sum(got.stage_sizes()) == g.n
+            continue
+        got = partition_bidirectional(g, p, lam=0.0)
+        ref = partition_reference(g, p, lam=0.0)
+        assert abs(got.objective - ref.objective) < 1e-9
+        assert got.validate_collocation(g)
+        assert sum(got.stage_sizes()) == g.n
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_bidirectional_handles_crossing_skips(seed):
+    """Non-nested (crossing) skip sets no longer detour through the
+    exponential reference: the DP itself matches its objective."""
+    rnd = random.Random(seed)
+    n = rnd.randint(6, 9)
+    blocks = tuple(Block(f"b{i}", rnd.uniform(0.2, 3.0)) for i in range(n))
+    # two crossing skips within the feasible half-split structure
+    s0, s1 = 0, 1
+    d0 = rnd.randint(n // 2, n - 2)
+    d1 = rnd.randint(d0 + 1, n - 1)          # dst order follows src order
+    g = BlockGraph(blocks, (SkipEdge(s0, d0, 8), SkipEdge(s1, d1, 8)))
+    assert not g.is_nested()
+    try:
+        ref = partition_reference(g, 2, lam=0.0)
+    except ValueError:
+        with pytest.raises(ValueError):
+            partition_bidirectional(g, 2, lam=0.0)
+        return
+    got = partition_bidirectional(g, 2, lam=0.0)
+    assert abs(got.objective - ref.objective) < 1e-9
+    assert got.validate_collocation(g)
+
+
+def test_symmetric_fold_odd_block_count():
+    """Odd n folds: the unpaired middle block rides the innermost device;
+    the result is asymmetric by one block and covers every block."""
+    g = BlockGraph(tuple(Block(f"b{i}", 1.0 + 0.1 * i) for i in range(9)))
+    part = partition_bidirectional(g, 4, lam=0.0)
+    assert part.folded and sum(part.stage_sizes()) == 9
+    assert not part.mirror_symmetric()
+    # middle block (index 4) sits on the innermost device
+    assert part.device_of_stage(part.stage_of_block(4)) == 1
+
+
+def test_partition_devices_explicit():
+    """The stage->device mapping is an explicit field, consistent with the
+    legacy closed forms, and drives collocated_pairs."""
+    g = make_unet_like(4, 1)
+    part = partition_bidirectional(g, 4, lam=0.0)
+    assert part.devices == (0, 1, 1, 0)
+    assert part.collocated_pairs() == ((0, 3), (1, 2))
+    lin = linear_partition(BlockGraph(g.blocks), 3, lam=0.0)
+    assert lin.devices == (0, 1, 2) and lin.collocated_pairs() == ()
+    import dataclasses as dc
+    with pytest.raises(ValueError, match="devices"):
+        dc.replace(part, devices=(0, 1))
 
 
 def test_folded_device_mapping():
