@@ -48,7 +48,12 @@ print(f"auto_pipeline_asym_hlo_cp_bytes,{cpb},"
 """
 
 
-def run():
+def run(json_sink: dict | None = None):
+    """CSV rows; ``json_sink`` (optional dict) additionally collects the
+    machine-readable perf baseline ``benchmarks/run.py`` writes to
+    ``BENCH_auto_pipeline.json`` (bubble fraction, simulated makespan and
+    HLO collective-permute bytes per config) so future PRs can regress
+    against it."""
     from repro.core.graph import Block, BlockGraph, make_unet_like
     from repro.core.partition import blockwise_partition, partition
     from repro.core.schedule import schedule_for_partition, simulate
@@ -60,6 +65,8 @@ def run():
     from repro.runtime.compile import auto_pipeline
 
     rows = []
+    if json_sink is None:
+        json_sink = {}
 
     # ---- compile-path latency (plan + schedule + layout, no lowering) ---
     cases = []
@@ -157,10 +164,81 @@ def run():
              "PYTHONPATH": "src:" + __import__("os").environ.get(
                  "PYTHONPATH", "")})
     if hlo.returncode == 0:
-        rows.append(hlo.stdout.strip().splitlines()[-1])
+        hlo_row = hlo.stdout.strip().splitlines()[-1]
+        rows.append(hlo_row)
+        try:
+            json_sink["hlo_collective_permute_bytes"] = int(
+                hlo_row.split(",")[1])
+        except (IndexError, ValueError):
+            pass
     else:
         rows.append("auto_pipeline_asym_hlo_cp_bytes,0,"
                     f"ERROR={hlo.stderr.strip().splitlines()[-1][:80] if hlo.stderr.strip() else 'unknown'}")
+
+    # ---- interleaved (virtual-stage) schedules: V = 1 / 2 / 4 -----------
+    # Bubble fraction + simulated makespan of the synthesized schedule on
+    # the heterogeneous SDv2-UNet / SkipViT / Hunyuan-DiT graphs: the
+    # interleaved region of the plan space the S == 2D layout gate used to
+    # reject.  V=1 is the 2D fold baseline; the derived field records the
+    # bubble shrink (or the honest granularity loss where S does not
+    # divide the block count, e.g. the 29-block SDv2 graph at V=2).
+    import random as _random
+    from repro.configs import hunyuan_dit, sdv2_unet
+    from repro.core.hw import TPU_V5E
+    from repro.core.tuner import tune
+    from repro.models.diffusion import (SkipViTConfig, skipvit_pipeline_graph,
+                                        unet_block_graph)
+
+    _rnd = _random.Random(0)
+    il_cases = [
+        ("sdv2unet29", unet_block_graph(sdv2_unet.CFG, batch=1), 4),
+        ("skipvit26", skipvit_pipeline_graph(
+            SkipViTConfig("b", n_enc=12, n_mid=2, n_dec=12),
+            fwd_times=[_rnd.uniform(0.5, 3.0) for _ in range(26)]), 4),
+        ("hunyuan32", hunyuan_dit.pipeline_graph(), 4),
+    ]
+    il_json: dict = {}
+    for name, g, D in il_cases:
+        M = 2 * D
+        per_v: dict = {}
+        for Vdeg in (1, 2, 4):
+            if 2 * Vdeg * D > g.n:
+                continue
+            t0 = time.perf_counter()
+            try:
+                part = partition(g, D, lam=0.0, interleave=Vdeg)
+                sched = schedule_for_partition(part, M)
+            except ValueError:
+                continue
+            us = (time.perf_counter() - t0) * 1e6
+            prof = profile_partition(g, part)
+            mk, bub = simulate(sched, prof.fwd_time_per_sample,
+                               bwd_ratio=2.0)
+            per_v[f"v{Vdeg}"] = {"bubble": round(bub, 4),
+                                 "sim_makespan": mk,
+                                 "makespan_slots": sched.makespan}
+            base = per_v.get("v1", {}).get("bubble", bub)
+            rows.append(
+                f"auto_pipeline_interleave_{name}_d{D}_v{Vdeg},{us:.0f},"
+                f"bubble={bub:.3f}_vs_fold={base:.3f}"
+                f"_sim_makespan={mk:.4g}")
+        il_json[name] = per_v
+    json_sink["interleave"] = il_json
+
+    # the hybrid tuner searches V as an axis (simulation scoring, default
+    # TPU v5e memory budget): record the degree it picks for Hunyuan-DiT
+    t0 = time.perf_counter()
+    il_choices = tune(hunyuan_dit.pipeline_graph(), 4, hw=TPU_V5E,
+                      use_simulation=True, interleave_options=(1, 2, 4))
+    us = (time.perf_counter() - t0) * 1e6
+    if il_choices:
+        best = il_choices[0]
+        rows.append(f"auto_pipeline_interleave_tuner_hunyuan32_n4,{us:.0f},"
+                    f"chose_P={best.P}_V={best.V}_b={best.b}"
+                    f"_t_sample={best.t_sample:.3e}")
+        json_sink["tuner"] = {"graph": "hunyuan32", "N": 4, "P": best.P,
+                              "V": best.V, "b": best.b,
+                              "t_sample": best.t_sample}
 
     # ---- plan quality: DP partition vs blockwise on heterogeneous UNet --
     for n_pairs, D in [(8, 4), (24, 8)]:

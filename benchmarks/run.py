@@ -1,20 +1,30 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (stub contract).  Heavy subprocess
-benchmarks (pipeline_cpu) and the dry-run-dependent roofline are included
-when available / unless --fast.
+Prints ``name,us_per_call,derived`` CSV (stub contract) and writes the
+machine-readable ``BENCH_auto_pipeline.json`` perf baseline (bubble
+fraction, simulated makespan and HLO collective-permute bytes per config)
+next to this file's repo root, so future PRs can diff against it.  Heavy
+subprocess benchmarks (pipeline_cpu) and the dry-run-dependent roofline are
+included when available / unless --fast.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_auto_pipeline.json")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess + ILP benchmarks")
+    ap.add_argument("--json-out", default=BENCH_JSON,
+                    help="where to write the auto-pipeline perf baseline")
     args = ap.parse_args()
 
     from benchmarks import (partition_balance, comm_volume, hybrid_ablation,
@@ -34,15 +44,25 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    auto_pipeline_json: dict = {}
     for mod in modules:
         try:
-            for row in mod.run():
+            if mod is auto_pipeline:
+                rows = mod.run(json_sink=auto_pipeline_json)
+            else:
+                rows = mod.run()
+            for row in rows:
                 print(row)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{mod.__name__}.ERROR,0,{type(e).__name__}: {e}",
                   file=sys.stderr)
             traceback.print_exc()
+    if auto_pipeline_json:
+        with open(args.json_out, "w") as f:
+            json.dump(auto_pipeline_json, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json_out}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

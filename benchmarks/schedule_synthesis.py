@@ -7,7 +7,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core.schedule import (template_1f1b, template_wave, ilp_schedule,
+from repro.core.schedule import (template_1f1b, template_wave,
+                                 template_interleaved, ilp_schedule,
                                  validate_schedule, simulate)
 
 
@@ -23,6 +24,27 @@ def run() -> list[str]:
     mk, bub = simulate(w, [1.0] * 8, bwd_ratio=2.0, p2p_time=0.05)
     rows.append(f"schedule.wave_d4_m4.simulated_time,{mk:.2f},"
                 f"bubble={bub:.3f}")
+    iw = template_interleaved(4, 4, 2)
+    mk_i, bub_i = simulate(iw, [0.5] * 16, bwd_ratio=2.0, p2p_time=0.05)
+    rows.append(f"schedule.interleaved_d4_m4_v2.simulated_time,{mk_i:.2f},"
+                f"bubble={bub_i:.3f}_fold={bub:.3f}")
+
+    # schedule -> step-table lowering: cold vs memoized (the tuner's
+    # candidate loop and repeated auto_pipeline calls hit the cache)
+    from repro.core.partition import interleaved_wave_devices
+    from repro.runtime.schedule_exec import StepTables
+    big = template_interleaved(8, 16, 2)
+    devices = interleaved_wave_devices(big.S, 8)
+    t0 = time.perf_counter()
+    StepTables._build(big, True, lambda st: devices[st])
+    cold = (time.perf_counter() - t0) * 1e6
+    StepTables.from_schedule(big, folded=True, devices=devices)  # warm it
+    t0 = time.perf_counter()
+    for _ in range(100):
+        StepTables.from_schedule(big, folded=True, devices=devices)
+    memo = (time.perf_counter() - t0) / 100 * 1e6
+    rows.append(f"schedule.lower_d8_m16_v2.cold_us,{cold:.0f},"
+                f"memoized_us={memo:.2f}")
     t0 = time.perf_counter()
     ilp = ilp_schedule(4, 2, 2, device_of_stage=lambda s: min(s, 3 - s),
                        collocated=[(0, 3), (1, 2)])

@@ -94,12 +94,23 @@ class Partition:
 
     def collocated_pairs(self) -> tuple[tuple[int, int], ...]:
         """Stage pairs pinned to one device (schedule Eq. (9)), read off the
-        explicit device mapping."""
+        explicit device mapping.  A device may hold any number of stage
+        slots (2V for a V-fold interleaved wave); every same-device pair is
+        reported so the schedule validator/ILP see the full collocation
+        set."""
         by_dev: dict[int, list[int]] = {}
         for s, d in enumerate(self.devices):
             by_dev.setdefault(d, []).append(s)
-        return tuple((ss[0], ss[1])
-                     for _, ss in sorted(by_dev.items()) if len(ss) == 2)
+        return tuple((a, b)
+                     for _, ss in sorted(by_dev.items())
+                     for i, a in enumerate(ss) for b in ss[i + 1:])
+
+    @property
+    def interleave(self) -> int:
+        """Stage slot pairs per device: V = S / 2D folded (S / D linear).
+        V == 1 is the classic mirror fold / plain linear pipeline."""
+        S, D = self.num_stages, self.num_devices
+        return S // (2 * D) if self.folded else S // D
 
     def mirror_symmetric(self) -> bool:
         """True iff stage s and stage S-1-s have equal block counts — the
@@ -419,17 +430,51 @@ def partition_reference(
 # Entry point
 # --------------------------------------------------------------------------
 
+def interleaved_wave_devices(S: int, D: int) -> tuple[int, ...]:
+    """Cyclic stage->device mapping for a V-fold interleaved wave (S = 2VD).
+
+    Encoder-half stage s runs on device ``s % D``; decoder-half stage s on
+    ``(S-1-s) % D``, so skip-paired stages (q, S-1-q) stay collocated for
+    every interleave degree.  For V == 1 this is exactly the classic mirror
+    fold ``min(s, S-1-s)``.  The cyclic pattern is not a free choice: the
+    ring executors deliver enc->enc messages to device (d+1) % D and
+    dec->dec to (d-1) % D, which pins the placement up to rotation.
+    """
+    return tuple((s % D) if s < S // 2 else (S - 1 - s) % D
+                 for s in range(S))
+
+
 def partition(
     graph: BlockGraph, num_devices: int, *,
     hw: Hardware = TPU_V5E, lam: float = 1.0, force_wave: bool | None = None,
+    interleave: int = 1,
 ) -> Partition:
     """PULSE partitioning entry point.
 
-    With skip edges (C != empty), uses S = 2D folded stages and the
-    bidirectional DP (paper default, §V-B).  Without skips, uses S = D
+    With skip edges (C != empty), uses S = 2VD folded stages and the
+    bidirectional DP (paper default, §V-B).  Without skips, uses S = VD
     linear partitioning + 1F1B unless ``force_wave`` requests folding.
+    ``interleave`` (V) is the number of stage slots per device and kind:
+    V == 1 keeps the classic fold / linear shapes; V > 1 emits the
+    interleaved (virtual-stage) placement ``interleaved_wave_devices``
+    whose finer stages shrink fill/drain bubbles roughly from
+    ``(D-1)/(M+D-1)`` toward ``(D-1)/(V*M+D-1)`` at the price of V weight
+    shards and more ppermute hops per microbatch.
     """
+    if interleave < 1:
+        raise ValueError(f"interleave degree must be >= 1, got {interleave}")
+    V, D = interleave, num_devices
     wave = force_wave if force_wave is not None else bool(graph.skips)
     if wave:
-        return partition_bidirectional(graph, 2 * num_devices, hw=hw, lam=lam)
+        S = 2 * V * D
+        part = partition_bidirectional(graph, S, hw=hw, lam=lam)
+        if V > 1:
+            part = dataclasses.replace(
+                part, devices=interleaved_wave_devices(S, D))
+        return part
+    if V > 1:
+        S = V * D
+        part = linear_partition(graph, S, hw=hw, lam=lam, folded=False)
+        return dataclasses.replace(
+            part, devices=tuple(s % D for s in range(S)))
     return linear_partition(graph, num_devices, hw=hw, lam=lam, folded=False)

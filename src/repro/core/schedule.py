@@ -25,6 +25,7 @@ Components:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Sequence
 
 import numpy as np
@@ -104,7 +105,15 @@ class Schedule:
         synthesized and validated.  Raises ``ValueError`` (not an opaque
         ``IndexError``) on out-of-range placements — ``validate_schedule``
         reports the same malformations as constraint family (7).
+
+        Memoized per schedule (schedules are frozen/hashable): the tuner's
+        candidate loop and repeated ``auto_pipeline`` calls reuse the
+        O(S*M*steps) lowering instead of recomputing it.  Treat the
+        returned arrays as read-only.
         """
+        return _device_programs_cached(self)
+
+    def _device_programs_uncached(self) -> DevicePrograms:
         T = self.makespan
         for p in self.placements:
             err = placement_bounds_error(p, self.S, self.M, self.D)
@@ -150,6 +159,11 @@ class Schedule:
         return "\n".join(lines)
 
 
+@functools.lru_cache(maxsize=256)
+def _device_programs_cached(sched: Schedule) -> DevicePrograms:
+    return sched._device_programs_uncached()
+
+
 # --------------------------------------------------------------------------
 # Validation (paper constraints (6)-(11))
 # --------------------------------------------------------------------------
@@ -174,14 +188,59 @@ def placement_bounds_error(p: Placement, S: int, M: int, D: int
         return f"negative step {p.step}"
     return None
 
+def _slot_context(S: int, device_of_stage: Callable[[int], int] | None,
+                  folded: bool = False) -> Callable[[int], str]:
+    """Virtual task -> ``[stage s = device d enc slot k/V, wave w]`` label.
+
+    Interleaved schedules place several stage slots per device; constraint
+    errors name the slot and the wave (the w-th forward visit of that
+    device) so an infeasible interleaved plan reads as *which slot of
+    which device* went wrong, not just a bare stage index.  With
+    ``folded`` the slot index counts within the stage's kind (encoder
+    half s < S/2 vs decoder half) — the same numbering ``StageLayout``,
+    ``StepTables`` and the executors use — while the wave counts across
+    both kinds.  Degenerates to the empty label for one-slot devices and
+    when no mapping is supplied.
+    """
+    if device_of_stage is None:
+        return lambda v: ""
+    by_dev: dict[int, list[int]] = {}
+    for s in range(S):
+        by_dev.setdefault(device_of_stage(s), []).append(s)
+    info: dict[int, str] = {}
+    for d, ss in by_dev.items():
+        ss = sorted(ss)
+        if len(ss) <= 1:
+            continue
+        for w, s in enumerate(ss):
+            if folded:
+                same = [t for t in ss if (t < S // 2) == (s < S // 2)]
+                kind = "enc " if s < S // 2 else "dec "
+                k, n = same.index(s), len(same)
+            else:
+                kind, k, n = "", w, len(ss)
+            info[s] = (f" [stage {s} = device {d} {kind}slot {k}/{n}, "
+                       f"wave {w}]")
+
+    def ctx(v: int) -> str:
+        return info.get(stage_of_virtual(v, S), "")
+
+    return ctx
+
+
 def validate_schedule(
     sched: Schedule,
     device_of_stage: Callable[[int], int] | None = None,
     collocated: Sequence[tuple[int, int]] = (),
+    folded: bool = False,
 ) -> list[str]:
-    """Return a list of violated-constraint descriptions (empty == valid)."""
+    """Return a list of violated-constraint descriptions (empty == valid).
+
+    ``folded`` only affects error *labels*: multi-slot devices get their
+    per-kind (enc/dec) slot numbering in slot-context messages."""
     errors: list[str] = []
     S, M, D = sched.S, sched.M, sched.D
+    ctx = _slot_context(S, device_of_stage, folded)
     # Placement bounds first (family (7)): an out-of-range virtual stage,
     # microbatch, device, or negative step would otherwise pass validation
     # and crash later in grid()/device_programs()/lowering with an opaque
@@ -189,7 +248,8 @@ def validate_schedule(
     for p in sched.placements:
         err = placement_bounds_error(p, S, M, D)
         if err is not None:
-            errors.append(f"(7) v={p.virtual} m={p.microbatch}: {err}")
+            where = ctx(p.virtual) if 0 <= p.virtual < num_virtual(S) else ""
+            errors.append(f"(7) v={p.virtual} m={p.microbatch}: {err}{where}")
     seen: dict[tuple[int, int], Placement] = {}
     for p in sched.placements:
         key = (p.virtual, p.microbatch)
@@ -208,7 +268,11 @@ def validate_schedule(
     for p in sched.placements:
         key = (p.device, p.step)
         if key in busy:
-            errors.append(f"(7) device {p.device} double-booked at t={p.step}")
+            q = busy[key]
+            errors.append(
+                f"(7) device {p.device} double-booked at t={p.step}: "
+                f"v={q.virtual}{ctx(q.virtual)} and v={p.virtual}"
+                f"{ctx(p.virtual)}")
         busy[key] = p
 
     # (8) fixed device mapping per stage (and F/B of a stage share a device)
@@ -232,13 +296,14 @@ def validate_schedule(
     for m in range(M):
         for v in range(1, num_virtual(S)):
             if seen[(v, m)].step < seen[(v - 1, m)].step + 1:
-                errors.append(f"(10) v={v} m={m} starts before v-1 finishes")
+                errors.append(f"(10) v={v}{ctx(v)} m={m} starts before "
+                              "v-1 finishes")
 
     # (11) monotonic microbatch ordering per stage
     for v in range(num_virtual(S)):
         for m in range(1, M):
             if seen[(v, m)].step <= seen[(v, m - 1)].step:
-                errors.append(f"(11) v={v}: m={m} not after m={m-1}")
+                errors.append(f"(11) v={v}{ctx(v)}: m={m} not after m={m-1}")
     return errors
 
 
@@ -301,6 +366,106 @@ def greedy_schedule(
     return Schedule(S, M, D, tuple(placed))
 
 
+def greedy_schedule_timed(
+    S: int,
+    M: int,
+    device_of_stage: Callable[[int], int],
+    D: int,
+    times: Sequence[float],
+    *,
+    bwd_ratio: float = 2.0,
+    p2p_time: float = 0.0,
+    priority: str = "backward",
+) -> Schedule:
+    """Duration-aware list scheduling: event-driven over real per-stage
+    durations, then layered back onto unit steps.
+
+    The unit-slot greedy models every task as one slot, which misorders
+    interleaved (V > 1) plans whose fine stages have heterogeneous
+    durations — the drain fills with avoidable stalls.  Here each device
+    picks, at its next free instant, the eligible task with the earliest
+    real start time; ties break by ``priority``:
+
+    - ``"backward"`` — backward tasks first (the unit greedy's 1F1B rule);
+    - ``"forward"`` — forward tasks first (keeps downstream devices fed
+      through the interleave's extra fill phases);
+    - ``"critical_path"`` — longest remaining chain duration first
+      (HEFT-style upward rank; packs the drain the way the ILP does).
+
+    None of the three dominates on interleaved mappings, so
+    :func:`schedule_for_partition` races all of them.  The resulting
+    per-device *order* is layered onto unit steps (longest-path over the
+    chain / monotone / exclusivity constraints), producing a valid
+    :class:`Schedule` whose order ``simulate`` — and the table-driven
+    executors — replay exactly.
+    """
+    if priority not in ("backward", "forward", "critical_path"):
+        raise ValueError(f"unknown priority {priority!r}")
+    V = num_virtual(S)
+    dur_of = [times[stage_of_virtual(v, S)] * (
+        bwd_ratio if is_backward(v, S) else 1.0) for v in range(V)]
+    rem = [0.0] * (V + 1)           # remaining chain duration from v
+    for v in range(V - 1, -1, -1):
+        rem[v] = rem[v + 1] + dur_of[v]
+
+    def tie_key(v: int, m: int):
+        if priority == "critical_path":
+            return (-rem[v], m)
+        bwd_first = priority == "backward"
+        return (0 if (bwd_first == is_backward(v, S)) else 1, m, -v)
+
+    start: dict[tuple[int, int], float] = {}
+    finish: dict[tuple[int, int], float] = {}
+    dev_free = [0.0] * D
+    next_m = [0] * V        # lowest pending microbatch per v (monotone)
+    dev_of_v = [device_of_stage(stage_of_virtual(v, S)) for v in range(V)]
+    n_left = V * M
+    while n_left:
+        best = None
+        for d in range(D):
+            for v in range(V):
+                m = next_m[v]
+                if m >= M or dev_of_v[v] != d:
+                    continue
+                if v > 0 and (v - 1, m) not in finish:
+                    continue
+                ready = 0.0
+                if v > 0:
+                    ready = finish[(v - 1, m)]
+                    if dev_of_v[v - 1] != d:
+                        ready += p2p_time
+                if m > 0:
+                    ready = max(ready, start[(v, m - 1)])
+                est = max(ready, dev_free[d])
+                key = (est,) + tie_key(v, m)
+                if best is None or key < best[0]:
+                    best = (key, d, v, m)
+        if best is None:
+            raise RuntimeError("timed greedy deadlocked")
+        (est, *_), d, v, m = best
+        dur = dur_of[v]
+        start[(v, m)] = est
+        finish[(v, m)] = est + dur
+        dev_free[d] = est + dur
+        next_m[v] += 1
+        n_left -= 1
+    # layer onto unit steps in global start order (device order preserved;
+    # same-device starts are strictly ordered by the event loop)
+    order = sorted(start, key=lambda vm: (start[vm], vm[1], vm[0]))
+    step: dict[tuple[int, int], int] = {}
+    dev_last = [-1] * D
+    for (v, m) in order:
+        t = dev_last[dev_of_v[v]] + 1
+        if v > 0:
+            t = max(t, step[(v - 1, m)] + 1)
+        if m > 0:
+            t = max(t, step[(v, m - 1)] + 1)
+        step[(v, m)] = t
+        dev_last[dev_of_v[v]] = t
+    return Schedule(S, M, D, tuple(
+        Placement(v, m, dev_of_v[v], step[(v, m)]) for (v, m) in order))
+
+
 def template_1f1b(D: int, M: int) -> Schedule:
     """Classic 1F1B: S == D stages, identity mapping (paper Fig. 8)."""
     return greedy_schedule(D, M, lambda s: s, D)
@@ -312,6 +477,15 @@ def template_wave(D: int, M: int) -> Schedule:
     return greedy_schedule(S, M, lambda s: min(s, S - 1 - s), D)
 
 
+def template_interleaved(D: int, M: int, V: int) -> Schedule:
+    """Interleaved wave: S == 2VD folded stages, cyclic slot placement
+    (uniform durations; partition-driven synthesis races duration-aware
+    candidates — see :func:`schedule_for_partition`)."""
+    from repro.core.partition import interleaved_wave_devices
+    devices = interleaved_wave_devices(2 * V * D, D)
+    return greedy_schedule(2 * V * D, M, lambda s: devices[s], D)
+
+
 def schedule_for_partition(part, M: int, *, use_ilp: bool = False,
                            time_limit: float = 120.0) -> Schedule:
     """Synthesize + validate a schedule for a partitioner output.
@@ -320,6 +494,15 @@ def schedule_for_partition(part, M: int, *, use_ilp: bool = False,
     interface (num_stages / num_devices / device_of_stage /
     collocated_pairs).  Greedy template synthesis by default (recovers 1F1B
     and the wave pattern, §V-B); ``use_ilp`` solves Eqs. (6)-(13) exactly.
+
+    Interleaved partitions (more than one stage slot pair per device) race
+    a small candidate portfolio — the unit-slot greedy plus the
+    duration-aware :func:`greedy_schedule_timed` in both priority
+    orientations, scored by event-driven simulation over the partition's
+    own stage costs — because no single list-scheduling priority dominates
+    once a device multiplexes V slots.  V = 1 plans keep the exact paper
+    templates.
+
     Raises ``ValueError`` listing every violated constraint if the
     synthesized schedule is invalid — planning bugs surface here, before an
     executor is built.
@@ -330,9 +513,20 @@ def schedule_for_partition(part, M: int, *, use_ilp: bool = False,
                              collocated=part.collocated_pairs(),
                              time_limit=time_limit)
     else:
-        sched = greedy_schedule(S, M, part.device_of_stage, D)
+        interleaved = S > (2 * D if getattr(part, "folded", False) else D)
+        if interleaved:
+            times = getattr(part, "stage_costs", None) or (1.0,) * S
+            cands = [greedy_schedule(S, M, part.device_of_stage, D)] + [
+                greedy_schedule_timed(S, M, part.device_of_stage, D, times,
+                                      priority=prio)
+                for prio in ("backward", "forward", "critical_path")
+            ]
+            sched = min(cands, key=lambda s: simulate(s, times)[0])
+        else:
+            sched = greedy_schedule(S, M, part.device_of_stage, D)
     errors = validate_schedule(sched, part.device_of_stage,
-                               collocated=part.collocated_pairs())
+                               collocated=part.collocated_pairs(),
+                               folded=getattr(part, "folded", False))
     if errors:
         raise ValueError(
             f"synthesized schedule violates constraints: {errors[:5]}"

@@ -9,12 +9,13 @@ iteration-time model (Eq. 15 + 16) and return the argmin of per-sample time
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 from repro.core.graph import BlockGraph
 from repro.core.hw import Hardware, TPU_V5E
 from repro.core import partition as part_mod
-from repro.core.schedule import simulate, template_1f1b, template_wave
+from repro.core.schedule import (schedule_for_partition, simulate,
+                                 template_1f1b, template_wave)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,21 +52,42 @@ class TunerChoice:
     t_sample: float        # modelled seconds per training sample (Eq. 17)
     t_sched: float         # modelled iteration time (Eq. 15)
     peak_mem: float        # modelled peak bytes (Eq. 14)
-    wave: bool             # folded wave (S=2P) vs plain 1F1B (S=P)
+    wave: bool             # folded wave (S=2VP) vs plain 1F1B (S=VP)
     M: int = 1             # microbatches per iteration the score assumed —
     #   auto_pipeline executes this M so the iteration it runs is the one
     #   the tuner ranked (previously the executor silently ran M = 2D).
+    V: int = 1             # interleave degree: stage slot pairs per device
+    #   (V > 1 = interleaved/virtual-stage schedule; finer stages shrink
+    #   the fill/drain ramp ~1/V at the cost of V padded weight shards and
+    #   more p2p hops per microbatch)
     partition: "part_mod.Partition | None" = None
     # ^ the partition this choice was scored on — the compile path
     #   (runtime.compile.auto_pipeline) lowers it directly.
 
 
 def peak_memory(
-    prof: StageProfile, P: int, b: int, *, wave: bool, param_state_factor: float = 7.0
+    prof: StageProfile, P: int, b: int, *, wave: bool, V: int = 1,
+    param_state_factor: float = 7.0
 ) -> float:
     """Eq. (14).  The busiest devices are the innermost collocated pair
     (stages P-1 and P, 0-indexed) which retain activations for all
-    in-flight microbatches (P of them in the wave steady state)."""
+    in-flight microbatches (P of them in the wave steady state).
+
+    ``V > 1`` prices the interleaved layout instead: each device carries
+    ``2V`` (``V`` linear) stage slots whose parameter/activation stacks
+    are padded to the *largest* slot, plus one extra in-flight boundary
+    activation per additional slot pair (the table executors' per-slot
+    receive state) — the memory side of the bubble-vs-V trade-off the
+    tuner searches over.
+    """
+    if V > 1:
+        slots = 2 * V if wave else V
+        m_theta = slots * max(prof.param_bytes)
+        m_act = slots * max(prof.act_bytes_per_sample)
+        m_out = max(prof.out_bytes_per_sample)
+        return (param_state_factor * m_theta
+                + P * m_act * b
+                + (P + slots - 2) * m_out * b)
     if wave:
         i, j = P - 1, P  # innermost pair on the same device
         m_theta = prof.param_bytes[i] + prof.param_bytes[j]
@@ -92,7 +114,7 @@ def t_allreduce(param_bytes: float, G: int, hw: Hardware) -> float:
 
 def t_sched_paper(
     prof: StageProfile, P: int, b: int, G: int, hw: Hardware,
-    *, M: int | None = None,
+    *, M: int | None = None, V: int = 1,
 ) -> float:
     """Eq. (15): (10P-4) T_f(b) + (10P-12)(t_lat + b M_o / B) + T_AR.
 
@@ -102,7 +124,17 @@ def t_sched_paper(
     different ``M`` prices that iteration shape with the same wave model
     (so custom ``microbatches_per_iter`` overrides in :func:`tune` are
     scored for the M they actually execute); ``tune`` records the scored M
-    on ``TunerChoice.M`` and the executor runs the same iteration shape."""
+    on ``TunerChoice.M`` and the executor runs the same iteration shape.
+
+    ``V`` generalizes the form to the interleaved S = 2VP wave: the
+    steady state becomes 6V unit tasks per microbatch per device and every
+    unit task (compute *and* p2p event) counts one of the finer V-fold
+    stages, so with ``prof`` profiled on the V-fold partition (t_f roughly
+    1/V of the 2P fold's), the compute steady state is unchanged, the
+    fill/drain ramp ``4P * t_f`` shrinks ~1/V, and the p2p event count
+    grows ~V — exactly the bubble-vs-communication trade the interleave
+    axis searches.  V = 1 is Eq. (15) verbatim.
+    """
     if M is None:
         M = P
     t_f = max(prof.fwd_time_per_sample) * b
@@ -110,8 +142,8 @@ def t_sched_paper(
     m_theta = max(prof.param_bytes)
     p2p = hw.t_lat + m_o / hw.inter_bw
     return (
-        (6 * M + 4 * P - 4) * t_f
-        + max(6 * M + 4 * P - 12, 0) * p2p
+        (6 * V * M + 4 * P - 4) * t_f
+        + max(6 * V * M + 4 * P - 12, 0) * p2p
         + t_allreduce(m_theta, G, hw)
     )
 
@@ -119,10 +151,22 @@ def t_sched_paper(
 def t_sched_simulated(
     prof: StageProfile, P: int, b: int, G: int, hw: Hardware,
     *, microbatches: int, wave: bool,
+    part: "part_mod.Partition | None" = None,
+    sched=None,
 ) -> float:
     """Higher-fidelity alternative: event-driven simulation of the actual
-    template schedule with per-stage durations (beyond-paper option)."""
-    sched = template_wave(P, microbatches) if wave else template_1f1b(P, microbatches)
+    schedule with per-stage durations (beyond-paper option).  With a
+    ``part``, the schedule is synthesized for that partition's own
+    stage->device mapping (required to price interleaved V > 1 plans);
+    otherwise the classic V = 1 templates are simulated.  The schedule
+    depends only on (part, microbatches) — callers sweeping b (the
+    tuner's inner loop) should synthesize once and pass ``sched``."""
+    if sched is None:
+        if part is not None:
+            sched = schedule_for_partition(part, microbatches)
+        else:
+            sched = (template_wave(P, microbatches) if wave
+                     else template_1f1b(P, microbatches))
     times = [t * b for t in prof.fwd_time_per_sample]
     m_o = max(prof.out_bytes_per_sample) * b
     mk, _ = simulate(sched, times, bwd_ratio=2.0,
@@ -140,8 +184,10 @@ def tune(
     use_simulation: bool = False,
     microbatches_per_iter: Callable[[int], int] | None = None,
     drops: list[str] | None = None,
+    interleave_options: Sequence[int] | None = None,
 ) -> list[TunerChoice]:
-    """Enumerate (P, G, b) and return all feasible choices, best first.
+    """Enumerate (P, G, b) — and the interleave degree V for wave plans —
+    and return all feasible choices, best first.
 
     ``N`` is the total device count.  ``microbatches_per_iter(P)`` defaults
     to M = P — the iteration shape Eq. (15)'s (10P-4) closed form prices
@@ -150,70 +196,88 @@ def tune(
     each choice was scored with is recorded on ``TunerChoice.M``;
     ``auto_pipeline`` executes that M.
 
+    ``interleave_options`` lists the V values to search (default: (1, 2)
+    for wave graphs, (1,) for skip-free ones).  Each V gets its own V-fold
+    partition, profile, memory check (``peak_memory`` prices the V padded
+    weight shards) and iteration-time score (the V-generalized Eq. (15),
+    or the event-driven simulation of the interleaved schedule under
+    ``use_simulation``) — V is a search axis exactly like (P, G, b), and
+    the winning choice's V rides to the executor through its partition.
+
     ``drops`` (optional out-param) collects one human-readable reason per
-    pipeline degree that yielded NO choice — recorded here, at the point
-    each filter fires, so error reports read facts rather than
-    re-simulating the filter (``auto_pipeline`` surfaces them when nothing
-    survives).
+    (pipeline degree, interleave degree) that yielded NO choice — recorded
+    here, at the point each filter fires, so error reports read facts
+    rather than re-simulating the filter (``auto_pipeline`` surfaces them
+    when nothing survives).
     """
     if microbatches_per_iter is None:
         microbatches_per_iter = lambda P: max(P, 1)
     wave = bool(graph.skips)
+    if interleave_options is None:
+        interleave_options = (1, 2) if wave else (1,)
     choices: list[TunerChoice] = []
     for P in sorted({d for d in range(1, N + 1) if N % d == 0}):
         G = N // P
-        if wave and P >= 1:
-            S = 2 * P
-        else:
-            S = P
-        if S > graph.n or S < 1:
-            if drops is not None:
-                drops.append(f"P={P}: needs S={S} stages but the graph "
-                             f"has only {graph.n} blocks")
-            continue
-        try:
-            if P == 1:
-                part = part_mod.Partition((0, graph.n), False, 0.0, (0.0,))
-            else:
-                part = part_mod.partition(graph, P, hw=hw, lam=lam,
-                                          force_wave=wave)
-        except ValueError as e:
-            if drops is not None:
-                drops.append(f"P={P}: partitioner infeasible: {e}")
-            continue
-        prof = profile_partition(graph, part)
-        b = 1
-        while b <= max_microbatch:
-            mem = peak_memory(prof, max(P, 1), b, wave=wave and P > 1)
-            if mem >= hw.mem_limit:
-                if b == 1 and drops is not None:
-                    drops.append(
-                        f"P={P}: smallest microbatch already exceeds the "
-                        f"memory budget (peak {mem / 1e9:.2f} GB >= "
-                        f"{hw.mem_limit / 1e9:.2f} GB)")
-                break
+        for V in (interleave_options if P > 1 else (1,)):
+            vtag = f"P={P}" if V == 1 else f"P={P} V={V}"
+            S = (2 * V * P if wave else V * P) if P > 1 else 1
+            if S > graph.n or S < 1:
+                if drops is not None:
+                    drops.append(f"{vtag}: needs S={S} stages but the "
+                                 f"graph has only {graph.n} blocks")
+                continue
+            try:
+                if P == 1:
+                    part = part_mod.Partition((0, graph.n), False, 0.0,
+                                              (0.0,))
+                else:
+                    part = part_mod.partition(graph, P, hw=hw, lam=lam,
+                                              force_wave=wave, interleave=V)
+            except ValueError as e:
+                if drops is not None:
+                    drops.append(f"{vtag}: partitioner infeasible: {e}")
+                continue
+            prof = profile_partition(graph, part)
             M = microbatches_per_iter(P)
-            if use_simulation and P > 1:
-                t_iter = t_sched_simulated(prof, P, b, G, hw,
-                                           microbatches=M, wave=wave)
-            elif P > 1:
-                t_iter = t_sched_paper(prof, P, b, G, hw, M=M)
-            else:
-                # pure DP: compute + all-reduce
-                t_f = sum(prof.fwd_time_per_sample) * b
-                t_iter = 3.0 * t_f * M + t_allreduce(
-                    sum(prof.param_bytes), G, hw
-                )
-            samples = b * M * G
-            choices.append(TunerChoice(
-                P=P, G=G, b=b,
-                t_sample=t_iter / samples,
-                t_sched=t_iter,
-                peak_mem=mem,
-                wave=wave and P > 1,
-                M=M,
-                partition=part,
-            ))
-            b *= 2
+            # the synthesized schedule depends on (part, M) only — hoist
+            # it out of the b sweep (the interleaved portfolio race is
+            # the expensive part of simulation scoring)
+            sim_sched = (schedule_for_partition(part, M)
+                         if use_simulation and P > 1 else None)
+            b = 1
+            while b <= max_microbatch:
+                mem = peak_memory(prof, max(P, 1), b,
+                                  wave=wave and P > 1, V=V)
+                if mem >= hw.mem_limit:
+                    if b == 1 and drops is not None:
+                        drops.append(
+                            f"{vtag}: smallest microbatch already exceeds "
+                            f"the memory budget (peak {mem / 1e9:.2f} GB "
+                            f">= {hw.mem_limit / 1e9:.2f} GB)")
+                    break
+                if use_simulation and P > 1:
+                    t_iter = t_sched_simulated(prof, P, b, G, hw,
+                                               microbatches=M, wave=wave,
+                                               part=part, sched=sim_sched)
+                elif P > 1:
+                    t_iter = t_sched_paper(prof, P, b, G, hw, M=M, V=V)
+                else:
+                    # pure DP: compute + all-reduce
+                    t_f = sum(prof.fwd_time_per_sample) * b
+                    t_iter = 3.0 * t_f * M + t_allreduce(
+                        sum(prof.param_bytes), G, hw
+                    )
+                samples = b * M * G
+                choices.append(TunerChoice(
+                    P=P, G=G, b=b,
+                    t_sample=t_iter / samples,
+                    t_sched=t_iter,
+                    peak_mem=mem,
+                    wave=wave and P > 1,
+                    M=M,
+                    V=V if P > 1 else 1,
+                    partition=part,
+                ))
+                b *= 2
     choices.sort(key=lambda c: c.t_sample)
     return choices

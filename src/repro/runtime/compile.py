@@ -91,35 +91,48 @@ class PipelineModelFns:
 
 @dataclasses.dataclass(frozen=True)
 class StageLayout:
-    """Mapping between a model's flat block stack and per-device stage
-    stacks for a (possibly uneven, possibly mirror-asymmetric) partition.
+    """Mapping between a model's flat block stack and per-device stage-slot
+    stacks for a (possibly uneven, mirror-asymmetric, interleaved)
+    partition.
 
-    For a folded partition, device ``d`` runs one encoder-half (prefix)
-    stage of ``enc_counts[d]`` blocks and one decoder-half (suffix) stage
-    of ``dec_counts[d]`` blocks — the two counts are independent, so the
-    mirror-asymmetric folds the skip-aware DP emits for partially-skipped
-    graphs (mid-block bottlenecks, sparse skips, odd block counts) lay out
-    exactly like symmetric ones.  Encoder stacks pad to ``enc_pad`` rows
-    and decoder stacks to ``dec_pad`` so one SPMD program covers all
-    devices.  ``skip_rows[d][i]`` is the stash row device d's decoder row
-    ``i`` consumes — derived from the partition's *actual* skip edges, not
-    the mirror closed form; ``-1`` marks rows without a skip (they receive
-    zeros).  Linear partitions use only ``enc_counts``/``enc_pad``.
+    Device ``d`` runs ``V`` encoder-half (prefix) stage slots and — for
+    folded partitions — ``V`` decoder-half (suffix) slots;
+    ``enc_slots[d][v]`` / ``dec_slots[d][v]`` name the pipeline stages in
+    slot order (ascending stage id == the order the forward chain visits
+    the device) and ``enc_counts[d][v]`` / ``dec_counts[d][v]`` their true
+    block counts.  V == 1 recovers the classic one-(enc, dec)-pair-per-
+    device fold; V > 1 is the interleaved (virtual-stage) layout that
+    shrinks pipeline bubbles at the price of V padded weight shards per
+    device.  All slots pad to ``enc_pad`` / ``dec_pad`` rows so one SPMD
+    program covers every (device, slot).
+
+    ``skip_rows[d][v][i]`` is the *flat* stash row device d's decoder slot
+    v consumes at its row ``i``: ``src_slot * enc_pad + src_row`` into the
+    device's ``[V * enc_pad]`` skip stash — derived from the partition's
+    actual skip edges, not a mirror closed form; ``-1`` marks rows without
+    a skip (they receive zeros).  Linear partitions use only
+    ``enc_slots``/``enc_counts``/``enc_pad``.
     """
 
     partition: Partition
-    enc_counts: tuple[int, ...]
-    dec_counts: tuple[int, ...]
+    enc_slots: tuple[tuple[int, ...], ...]
+    dec_slots: tuple[tuple[int, ...], ...]
+    enc_counts: tuple[tuple[int, ...], ...]
+    dec_counts: tuple[tuple[int, ...], ...]
     enc_pad: int
     dec_pad: int
-    enc_stages: tuple[int, ...] = ()   # device d's prefix stage (folded)
-    dec_stages: tuple[int, ...] = ()   # device d's suffix stage (folded)
-    skip_rows: tuple[tuple[int, ...], ...] = ()
+    skip_rows: tuple[tuple[tuple[int, ...], ...], ...] = ()
 
     # ---- legacy aliases (planning tests / describe output) -------------
     @property
+    def V(self) -> int:
+        """Interleave degree: stage slots per device and kind."""
+        return len(self.enc_slots[0])
+
+    @property
     def counts(self) -> tuple[int, ...]:
-        return self.enc_counts
+        """Per-device encoder-half block totals (legacy flat view)."""
+        return tuple(sum(c) for c in self.enc_counts)
 
     @property
     def pad(self) -> int:
@@ -130,57 +143,74 @@ class StageLayout:
                        graph: BlockGraph | None = None) -> "StageLayout":
         """Lay out ``part``; ``graph`` supplies the skip edges that define
         the stash pairing.  Without a graph, folded layouts fall back to
-        the LIFO mirror pairing (which requires mirror-symmetric cuts —
-        the only pairing derivable without edges); ``auto_pipeline``
+        the LIFO mirror pairing (which requires V = 1 mirror-symmetric
+        cuts — the only pairing derivable without edges); ``auto_pipeline``
         always passes the graph.
         """
         D = part.num_devices
-        if not part.folded:
-            counts = part.stage_sizes()
-            return cls(part, counts, (0,) * D, max(counts), 0)
-        S = part.num_stages
-        if S != 2 * D:
-            raise ValueError(
-                f"folded partition has {S} stages over {D} devices; the "
-                "wave layout folds exactly two stages per device "
-                "(interleaved schedules are a ROADMAP open item)")
-        enc_stages, dec_stages = [-1] * D, [-1] * D
-        for s in range(S):
-            d = part.device_of_stage(s)
-            half = enc_stages if s < S // 2 else dec_stages
-            if half[d] != -1:
-                raise ValueError(
-                    f"device {d} holds two {'prefix' if s < S // 2 else 'suffix'}"
-                    f"-half stages ({half[d]} and {s}); the fold pairs one "
-                    "of each per device")
-            half[d] = s
         sizes = part.stage_sizes()
-        enc_counts = tuple(sizes[s] for s in enc_stages)
-        dec_counts = tuple(sizes[s] for s in dec_stages)
-        enc_pad, dec_pad = max(enc_counts), max(dec_counts)
-        if graph is not None:
-            skip_rows = cls._pair_skips(part, graph, enc_stages, dec_stages,
-                                        dec_pad)
-        else:
-            if not part.mirror_symmetric():
+        if not part.folded:
+            slots: list[list[int]] = [[] for _ in range(D)]
+            for s in range(part.num_stages):
+                slots[part.device_of_stage(s)].append(s)
+            V = len(slots[0])
+            if any(len(ss) != V for ss in slots):
                 raise ValueError(
-                    "mirror-asymmetric fold needs the block graph to "
-                    "derive its skip pairing; call "
+                    "linear partition is not an even interleave: devices "
+                    f"hold {[len(ss) for ss in slots]} stage slots")
+            enc_slots = tuple(map(tuple, slots))
+            enc_counts = tuple(tuple(sizes[s] for s in ss)
+                               for ss in enc_slots)
+            pad = max(c for cs in enc_counts for c in cs)
+            return cls(part, enc_slots, ((),) * D, enc_counts, ((),) * D,
+                       pad, 0)
+        S = part.num_stages
+        half = S // 2
+        enc: list[list[int]] = [[] for _ in range(D)]
+        dec: list[list[int]] = [[] for _ in range(D)]
+        for s in range(S):
+            (enc if s < half else dec)[part.device_of_stage(s)].append(s)
+        V = len(enc[0])
+        if any(len(ss) != V for ss in enc) or any(len(ss) != V
+                                                  for ss in dec) or V == 0:
+            raise ValueError(
+                "folded partition is not an even interleave: devices hold "
+                f"{[(len(e), len(c)) for e, c in zip(enc, dec)]} "
+                "(prefix, suffix)-half stage slots; the wave layout needs "
+                "V of each per device")
+        enc_slots = tuple(map(tuple, enc))
+        dec_slots = tuple(map(tuple, dec))
+        enc_counts = tuple(tuple(sizes[s] for s in ss) for ss in enc_slots)
+        dec_counts = tuple(tuple(sizes[s] for s in ss) for ss in dec_slots)
+        enc_pad = max(c for cs in enc_counts for c in cs)
+        dec_pad = max(c for cs in dec_counts for c in cs)
+        if graph is not None:
+            skip_rows = cls._pair_skips(part, graph, enc_slots, dec_slots,
+                                        enc_pad, dec_pad)
+        else:
+            if V != 1 or not part.mirror_symmetric():
+                raise ValueError(
+                    "mirror-asymmetric or interleaved folds need the block "
+                    "graph to derive their skip pairing; call "
                     "StageLayout.from_partition(part, graph)")
             skip_rows = tuple(
-                tuple(enc_counts[d] - 1 - i if i < dec_counts[d] else -1
-                      for i in range(dec_pad))
+                (tuple(enc_counts[d][0] - 1 - i if i < dec_counts[d][0]
+                       else -1 for i in range(dec_pad)),)
                 for d in range(D))
-        return cls(part, enc_counts, dec_counts, enc_pad, dec_pad,
-                   tuple(enc_stages), tuple(dec_stages), skip_rows)
+        return cls(part, enc_slots, dec_slots, enc_counts, dec_counts,
+                   enc_pad, dec_pad, skip_rows)
 
     @staticmethod
     def _pair_skips(part: Partition, graph: BlockGraph,
-                    enc_stages: list[int], dec_stages: list[int],
-                    dec_pad: int) -> tuple[tuple[int, ...], ...]:
-        """Per device: decoder row -> encoder stash row, from skip edges."""
+                    enc_slots: tuple[tuple[int, ...], ...],
+                    dec_slots: tuple[tuple[int, ...], ...],
+                    enc_pad: int, dec_pad: int
+                    ) -> tuple[tuple[tuple[int, ...], ...], ...]:
+        """Per (device, dec slot): decoder row -> flat encoder stash row
+        (``src_slot * enc_pad + src_row``), from the graph's skip edges."""
         D, cuts = part.num_devices, part.cuts
-        rows = [[-1] * dec_pad for _ in range(D)]
+        V = len(enc_slots[0])
+        rows = [[[-1] * dec_pad for _ in range(V)] for _ in range(D)]
         for e in graph.skips:
             s_src = part.stage_of_block(e.src)
             s_dst = part.stage_of_block(e.dst)
@@ -190,61 +220,72 @@ class StageLayout:
                     f"skip {e.src}->{e.dst} spans devices "
                     f"{d} and {part.device_of_stage(s_dst)}: the partition "
                     "violates collocation (validate_collocation)")
-            if s_src != enc_stages[d] or s_dst != dec_stages[d]:
+            if s_src not in enc_slots[d] or s_dst not in dec_slots[d]:
                 raise ValueError(
                     f"skip {e.src}->{e.dst} is not encoder-half -> "
                     f"decoder-half on device {d} (stages {s_src}->{s_dst}): "
                     "the stash executors cache skips across the fold only")
+            src_slot = enc_slots[d].index(s_src)
+            dst_slot = dec_slots[d].index(s_dst)
             dec_row = e.dst - cuts[s_dst]
             enc_row = e.src - cuts[s_src]
-            if rows[d][dec_row] != -1:
+            if rows[d][dst_slot][dec_row] != -1:
                 raise ValueError(
                     f"block {e.dst} consumes two skips; one stash slot per "
                     "decoder row")
-            rows[d][dec_row] = enc_row
-        return tuple(map(tuple, rows))
+            rows[d][dst_slot][dec_row] = src_slot * enc_pad + enc_row
+        return tuple(tuple(map(tuple, dev_rows)) for dev_rows in rows)
 
-    # ---- device -> block-row ranges ------------------------------------
-    def enc_ranges(self) -> list[tuple[int, int]]:
-        part, cuts = self.partition, self.partition.cuts
-        if not part.folded:
-            return [(cuts[d], cuts[d + 1]) for d in range(part.num_devices)]
-        return [(cuts[s], cuts[s + 1]) for s in self.enc_stages]
+    # ---- (device, slot) -> block-row ranges ----------------------------
+    def enc_ranges(self) -> list[list[tuple[int, int]]]:
+        cuts = self.partition.cuts
+        return [[(cuts[s], cuts[s + 1]) for s in ss]
+                for ss in self.enc_slots]
 
-    def dec_ranges(self) -> list[tuple[int, int]]:
+    def dec_ranges(self) -> list[list[tuple[int, int]]]:
         """Rows into the decoder-half stack (block index minus mid cut)."""
         part, cuts = self.partition, self.partition.cuts
         mid = cuts[part.num_stages // 2]
-        return [(cuts[s] - mid, cuts[s + 1] - mid) for s in self.dec_stages]
+        return [[(cuts[s] - mid, cuts[s + 1] - mid) for s in ss]
+                for ss in self.dec_slots]
 
     # ---- padded stacking (host-level; runs outside jit) ----------------
-    def _stack(self, blocks: Pytree, ranges: Sequence[tuple[int, int]],
+    def _stack(self, blocks: Pytree,
+               ranges: Sequence[Sequence[tuple[int, int]]],
                pad: int) -> Pytree:
         def f(x):
-            rows = []
-            for lo, hi in ranges:
-                r = x[lo:hi]
-                if hi - lo < pad:
-                    z = jnp.zeros((pad - (hi - lo),) + r.shape[1:], r.dtype)
-                    r = jnp.concatenate([r, z], 0)
-                rows.append(r)
-            return jnp.stack(rows)
+            devs = []
+            for dev_ranges in ranges:
+                rows = []
+                for lo, hi in dev_ranges:
+                    r = x[lo:hi]
+                    if hi - lo < pad:
+                        z = jnp.zeros((pad - (hi - lo),) + r.shape[1:],
+                                      r.dtype)
+                        r = jnp.concatenate([r, z], 0)
+                    rows.append(r)
+                devs.append(jnp.stack(rows))
+            return jnp.stack(devs)          # [D, V, pad, ...]
 
         return jax.tree.map(f, blocks)
 
-    def _unstack(self, stacked: Pytree, ranges: Sequence[tuple[int, int]]
-                 ) -> Pytree:
+    def _unstack(self, stacked: Pytree,
+                 ranges: Sequence[Sequence[tuple[int, int]]]) -> Pytree:
         stacked = tree_to_host(stacked)   # legacy-JAX shard reassembly fix
-        order = sorted(range(len(ranges)), key=lambda d: ranges[d][0])
+        order = sorted(
+            ((d, v) for d in range(len(ranges))
+             for v in range(len(ranges[d]))),
+            key=lambda dv: ranges[dv[0]][dv[1]][0])
 
         def f(x):
-            parts = [x[d, : ranges[d][1] - ranges[d][0]] for d in order]
+            parts = [x[d, v, : ranges[d][v][1] - ranges[d][v][0]]
+                     for d, v in order]
             return jnp.concatenate(parts, 0)
 
         return jax.tree.map(f, stacked)
 
     def split(self, stacks: tuple) -> tuple:
-        """Model block stacks -> per-device padded stage stacks."""
+        """Model block stacks -> per-(device, slot) padded stage stacks."""
         part = self.partition
         if not part.folded:
             if len(stacks) != 1:
@@ -337,10 +378,19 @@ class CompiledPipeline:
                 "'closed_form'")
         fns, pcfg, layout = self.model_fns, self.pcfg, self.layout
         axis = pcfg.axis
+        if self.executor == "closed_form" and layout.V > 1:
+            raise ValueError(
+                f"closed-form executors realize one (enc, dec) stage slot "
+                f"pair per device; this plan interleaves V={layout.V} "
+                "slots — lower through executor='table'")
 
         def my(table):
             # device-local lookup into a per-device host constant table
             return jnp.asarray(table, jnp.int32)[jax.lax.axis_index(axis)]
+
+        def squeeze_slot(stage_p):
+            # closed-form executors predate the slot axis: drop the V=1 dim
+            return jax.tree.map(lambda t: t[0], stage_p)
 
         if self.folded:
             if fns.block_fn is None and (fns.enc_block_fn is None
@@ -353,43 +403,66 @@ class CompiledPipeline:
             dec_block = fns.dec_block_fn or (
                 lambda bp, x, skip, aux: fns.block_fn(bp, x, aux))
 
-            # the two halves carry independent counts (asymmetric folds)
-            # and the stash pairing comes from the partition's skip edges
-            def enc_stage_fn(stage_p, x, aux):
-                return scan_blocks_emit(enc_block, stage_p, x,
-                                        my(layout.enc_counts), aux)
-
-            def dec_stage_fn(stage_p, x, skips, aux):
-                return scan_blocks_consume(
-                    dec_block, stage_p, skips, x, my(layout.dec_counts),
-                    my(layout.skip_rows), aux)
-
             if self.executor == "table":
+                # every slot carries its own count (asymmetric and
+                # interleaved folds) and the stash pairing comes from the
+                # partition's skip edges, resolved per (device, slot)
+                def enc_stage_fn(stage_p, x, aux, slot):
+                    return scan_blocks_emit(enc_block, stage_p, x,
+                                            my(layout.enc_counts)[slot],
+                                            aux)
+
+                def dec_stage_fn(stage_p, x, skips, aux, slot):
+                    return scan_blocks_consume(
+                        dec_block, stage_p, skips, x,
+                        my(layout.dec_counts)[slot],
+                        my(layout.skip_rows)[slot], aux)
+
                 return make_wave_pipeline_from_schedule(
                     pcfg, self.schedule, embed_fn=fns.embed_fn,
                     enc_stage_fn=enc_stage_fn, dec_stage_fn=dec_stage_fn,
                     loss_fn=fns.loss_fn,
-                    device_of_stage=self.partition.device_of_stage)
+                    devices=self.partition.devices)
+
+            flat_enc = tuple(c[0] for c in layout.enc_counts)
+            flat_dec = tuple(c[0] for c in layout.dec_counts)
+            flat_rows = tuple(r[0] for r in layout.skip_rows)
+
+            def enc_stage_cf(stage_p, x, aux):
+                return scan_blocks_emit(enc_block, squeeze_slot(stage_p), x,
+                                        my(flat_enc), aux)
+
+            def dec_stage_cf(stage_p, x, skips, aux):
+                return scan_blocks_consume(
+                    dec_block, squeeze_slot(stage_p), skips, x,
+                    my(flat_dec), my(flat_rows), aux)
+
             return make_wave_pipeline(
-                pcfg, embed_fn=fns.embed_fn, enc_stage_fn=enc_stage_fn,
-                dec_stage_fn=dec_stage_fn, loss_fn=fns.loss_fn)
+                pcfg, embed_fn=fns.embed_fn, enc_stage_fn=enc_stage_cf,
+                dec_stage_fn=dec_stage_cf, loss_fn=fns.loss_fn)
 
         if fns.block_fn is None:
             raise ValueError("linear pipeline needs model_fns.block_fn")
 
-        def stage_fn(stage_p, x):
-            return scan_blocks(fns.block_fn, stage_p, x,
-                               my(layout.enc_counts), None)
-
         embed = lambda e, mb: fns.embed_fn(e, mb, None)
         loss = lambda e, x, mb: fns.loss_fn(e, x, mb, None)
         if self.executor == "table":
+            def stage_fn(stage_p, x, slot):
+                return scan_blocks(fns.block_fn, stage_p, x,
+                                   my(layout.enc_counts)[slot], None)
+
             return make_linear_pipeline_from_schedule(
                 pcfg, self.schedule, embed_fn=embed, stage_fn=stage_fn,
                 loss_fn=loss,
-                device_of_stage=self.partition.device_of_stage)
+                devices=self.partition.devices)
+
+        def stage_cf(stage_p, x):
+            return scan_blocks(fns.block_fn, squeeze_slot(stage_p), x,
+                               my(tuple(c[0] for c in layout.enc_counts)),
+                               None)
+
         return make_linear_pipeline(
-            pcfg, embed_fn=embed, stage_fn=stage_fn, loss_fn=loss)
+            pcfg, embed_fn=embed, stage_fn=stage_cf, loss_fn=loss)
 
     def bind(self, mesh) -> Callable:
         """``loss(params, mbs[, aux])`` with params = (stage_stacks, edge),
@@ -438,10 +511,13 @@ class CompiledPipeline:
 
     def describe(self) -> str:
         part, sched = self.partition, self.schedule
+        V = self.layout.V
+        kind = "folded wave" if part.folded else "linear 1F1B"
+        if V > 1:
+            kind += f", interleaved V={V}"
         lines = [
             f"auto_pipeline: S={part.num_stages} stages over "
-            f"D={part.num_devices} devices "
-            f"({'folded wave' if part.folded else 'linear 1F1B'}), "
+            f"D={part.num_devices} devices ({kind}), "
             f"M={self.pcfg.num_microbatches} microbatches",
             f"  cuts={part.cuts} stage sizes={part.stage_sizes()}",
             (f"  layout: enc counts={self.layout.enc_counts} "
@@ -474,6 +550,7 @@ def auto_pipeline(
     lam: float = 1.0,
     force_wave: bool | None = None,
     pipeline_devices: int | None = None,
+    interleave: int | None = None,
     data_axes: tuple[str, ...] = ("data",),
     dp_size: int | None = None,
     remat: bool = True,
@@ -483,24 +560,30 @@ def auto_pipeline(
 ) -> CompiledPipeline:
     """Plan, schedule, and lower a pipeline for ``graph`` on ``N`` devices.
 
-    By default the hybrid tuner (§VI) picks (P, G, b) and supplies its
-    partition; ``microbatches`` then defaults to the M the tuner's
-    iteration-time score assumed (``TunerChoice.M``), and ``dp_size`` to
-    the chosen G — the executed iteration matches the scored one.  Pass
+    By default the hybrid tuner (§VI) picks (P, G, b) — and, for wave
+    plans, the interleave degree V — and supplies its partition;
+    ``microbatches`` then defaults to the M the tuner's iteration-time
+    score assumed (``TunerChoice.M``), and ``dp_size`` to the chosen G —
+    the executed iteration matches the scored one.  Pass
     ``pipeline_devices`` to pin the pipeline degree and call the
     partitioner directly (deterministic; used by tests and the training
     driver, which already knows its mesh shape — ``dp_size`` defaults to 1
     there, ``microbatches`` to 2D folded / max(D, 2) linear).
+    ``interleave`` pins V the same way (V stage slot pairs per device,
+    S = 2VD folded / VD linear); with the tuner driving, pinning
+    ``interleave`` restricts its search to that V.
 
     ``executor`` selects the lowering: ``"table"`` (default) executes the
     validated schedule via per-device step tables (runtime.schedule_exec);
     ``"closed_form"`` uses the hand-written wave/1F1B executors as
-    differential references (these require M >= D for folded plans).
+    differential references (these require M >= D and V = 1 for folded
+    plans).
     """
     choice: TunerChoice | None = None
     if pipeline_devices is not None:
         part = partition_graph(graph, pipeline_devices, hw=hw, lam=lam,
-                               force_wave=force_wave)
+                               force_wave=force_wave,
+                               interleave=interleave or 1)
         if graph.skips and not part.folded:
             raise ValueError(
                 "graph has skip edges but the plan is linear: the linear "
@@ -512,7 +595,10 @@ def auto_pipeline(
                 "force_wave requires pipeline_devices: the tuner derives "
                 "wave vs linear from graph.skips and would ignore it")
         drops: list[str] = []
-        choices = tune(graph, N, hw=hw, lam=lam, drops=drops)
+        choices = tune(graph, N, hw=hw, lam=lam, drops=drops,
+                       interleave_options=(
+                           (interleave,) if interleave is not None
+                           else None))
         drops += [f"P={c.P} G={c.G} b={c.b}: pure data parallelism "
                   "(P=1 plans carry no pipeline to lower)"
                   for c in choices if c.partition is None or c.P <= 1]

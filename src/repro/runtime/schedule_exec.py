@@ -8,22 +8,28 @@ changed what actually ran, and planner/executor disagreements stayed
 invisible.  This module makes the Schedule the single source of truth:
 
 1. :class:`StepTables` extracts, per device, a dense *forward step program*
-   from the schedule's F placements: which task (encoder/decoder selector)
-   runs at each step, on which microbatch, which receive slot the incoming
-   boundary activation lands in, and when to emit the loss.  Every
-   cross-device dependency is checked against the synchronous-scan dataflow
-   at lowering time — a schedule the executor could not realize raises
-   ``ValueError`` here instead of silently computing garbage.
+   from the schedule's F placements: which task (encoder/decoder selector
+   and *stage slot* — a device runs V slots per kind under an interleaved
+   S = 2VD plan) runs at each step, on which microbatch, which receive
+   slot the incoming boundary activation lands in, whether the slot
+   embeds / reads / writes the turnaround buffer, and when to emit the
+   loss.  Every cross-device dependency is checked against the
+   synchronous-scan dataflow at lowering time — a schedule the executor
+   could not realize raises ``ValueError`` here instead of silently
+   computing garbage.  Pass the stage->device mapping as a ``devices``
+   tuple to memoize the lowering per (schedule, partition).
 
 2. :func:`make_wave_pipeline_from_schedule` /
    :func:`make_linear_pipeline_from_schedule` lower those tables into
-   shard_map executors.  The scan body reads its (selector, microbatch,
-   receive slot, loss mask) from the precomputed per-device arrays; incoming
-   activations and each device's skip stash live in microbatch-indexed
-   buffers carried through the scan, so the skip cache pairing comes from
-   the schedule's actual F placement, not a closed form.  Any *valid*
-   schedule — including ILP schedules whose step timing differs from the
-   greedy templates — executes exactly as synthesized.
+   shard_map executors.  The scan body reads its (selector, slot,
+   microbatch, receive slot, loss mask) from the precomputed per-device
+   arrays; parameters carry a leading ``[V, pad, ...]`` slot axis indexed
+   per step, incoming activations live in microbatch-indexed buffers and
+   each device's skip stash in a (microbatch, slot)-indexed buffer, and
+   the rings wrap so interleaved slot boundaries cross device D-1 -> 0.
+   Any *valid* schedule — including ILP schedules whose step timing
+   differs from the greedy templates, and interleaved V > 1 plans —
+   executes exactly as synthesized.
 
 Backward placements (virtual stage >= S) are realized by JAX autodiff as
 the transposed scan, mirroring the forward order — the same convention as
@@ -38,6 +44,7 @@ references via ``auto_pipeline(..., executor="closed_form")``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
@@ -51,6 +58,48 @@ from repro.runtime.pipeline import (PipelineConfig, _wrap_remat, ring_perms,
 Pytree = Any
 
 IDLE, RUN_ENC, RUN_DEC = 0, 1, 2
+
+
+def _slot_maps(S: int, D: int, folded: bool,
+               device_of_stage: Callable[[int], int]
+               ) -> tuple[int, dict[int, int], dict[int, int]]:
+    """(V, enc_slot_of_stage, dec_slot_of_stage) for a stage->device map.
+
+    A device's stages of one kind (encoder-half s < S/2, decoder-half
+    otherwise; everything is 'encoder' for linear pipelines), sorted by
+    stage id, occupy slots 0..V-1.  Every device must hold the same slot
+    count per kind — the SPMD executors run one program with [V, pad, ...]
+    parameter stacks, so a ragged slot layout is unliftable and raises
+    here with per-device context.
+    """
+    half = S // 2 if folded else S
+    enc_by_dev: dict[int, list[int]] = {}
+    dec_by_dev: dict[int, list[int]] = {}
+    for s in range(S):
+        (enc_by_dev if s < half else dec_by_dev).setdefault(
+            device_of_stage(s), []).append(s)
+    counts = {d: (len(enc_by_dev.get(d, ())), len(dec_by_dev.get(d, ())))
+              for d in range(D)}
+    kinds = set(counts.values())
+    ok = len(kinds) == 1
+    if ok:
+        e, c = next(iter(kinds))
+        ok = e > 0 and ((e == c) if folded else (c == 0))
+    if not ok:
+        detail = ", ".join(
+            f"device {d}: {e} prefix-half + {c} suffix-half slots"
+            if folded else f"device {d}: {e} stage slots"
+            for d, (e, c) in sorted(counts.items()))
+        raise ValueError(
+            f"stage->device mapping is not an even interleave over D={D} "
+            f"devices ({detail}); the table executors need V equal slots "
+            "per device and kind")
+    V = next(iter(kinds))[0]
+    enc_slot = {s: k for ss in enc_by_dev.values()
+                for k, s in enumerate(sorted(ss))}
+    dec_slot = {s: k for ss in dec_by_dev.values()
+                for k, s in enumerate(sorted(ss))}
+    return V, enc_slot, dec_slot
 
 
 # ===========================================================================
@@ -70,26 +119,37 @@ class StepTables:
 
     - ``sel``: ``IDLE`` / ``RUN_ENC`` / ``RUN_DEC`` (linear pipelines only
       use ``IDLE`` / ``RUN_ENC``).
+    - ``slot``: which of the device's V same-kind stage slots the task
+      runs (0 for classic V=1 plans; interleaved plans index the [V, pad]
+      parameter stacks and per-slot count/pairing tables with it).
     - ``mb``: microbatch of the slot (0 when idle — never read).
     - ``down_mb`` / ``down_valid``: receive slot for the down-ring channel
       at the *start* of the step (what the upstream device sent last step).
     - ``up_mb`` / ``up_valid``: same for the up-ring channel.
     - ``loss``: slot computes the final-stage output and emits the loss.
-    - ``embed_device`` / ``turn_device``: devices hosting stage 0 (embeds)
-      and the turnaround (last encoder / first decoder stage pair) — read
-      from the stage->device mapping instead of hardcoding 0 / D-1.
+    - ``embed`` / ``turn_rd`` / ``turn_wr``: the slot runs stage 0 (embeds
+      its input), the first decoder-half stage (reads the local turn
+      buffer) or the last encoder-half stage (writes it).  With V > 1 a
+      device runs several enc/dec slots, so these are per-(device, step)
+      facts, not per-device ones — ``embed_device`` / ``turn_device`` stay
+      as informational summaries.
     """
 
     D: int
     M: int
+    V: int
     forward_steps: tuple[int, ...]
     sel: np.ndarray
+    slot: np.ndarray
     mb: np.ndarray
     down_mb: np.ndarray
     down_valid: np.ndarray
     up_mb: np.ndarray
     up_valid: np.ndarray
     loss: np.ndarray
+    embed: np.ndarray
+    turn_rd: np.ndarray
+    turn_wr: np.ndarray
     embed_device: int = 0
     turn_device: int = -1
 
@@ -99,28 +159,47 @@ class StepTables:
 
     @classmethod
     def from_schedule(cls, sched: Schedule, *, folded: bool,
-                      device_of_stage=None) -> "StepTables":
+                      device_of_stage=None,
+                      devices: tuple[int, ...] | None = None) -> "StepTables":
         """Lower a schedule's forward placements to step tables.
 
         ``device_of_stage`` is the partition's *explicit* stage->device
         mapping; when omitted the canonical placements (mirror fold /
-        identity) are assumed.  Raises ``ValueError`` on any shape the
+        identity, or their V-fold interleaved generalization) are assumed.
+        Pass the mapping as a ``devices`` *tuple* instead to memoize the
+        lowering per (schedule, folded, devices) — the tuner's candidate
+        loop and repeated ``auto_pipeline`` calls then reuse the
+        O(S*M*steps) extraction.  Raises ``ValueError`` on any shape the
         synchronous scan cannot realize (malformed placements, a stage
         mapped off the ring neighbourhood its messages need, double-booked
         channels, a consumer scheduled before its input can arrive) — the
         planner/executor mismatches the closed forms used to hide surface
         here.
         """
+        if devices is not None:
+            if device_of_stage is not None:
+                raise ValueError("pass device_of_stage or devices, not both")
+            return _tables_cached(sched, folded, tuple(devices))
+        return cls._build(sched, folded, device_of_stage)
+
+    @classmethod
+    def _build(cls, sched: Schedule, folded: bool,
+               device_of_stage) -> "StepTables":
         S, M, D = sched.S, sched.M, sched.D
-        expect_S = 2 * D if folded else D
-        if S != expect_S:
+        if (S % (2 * D) if folded else S % D) != 0:
             raise ValueError(
                 f"schedule has S={S} stages but a "
                 f"{'folded' if folded else 'linear'} executor over D={D} "
-                f"devices lowers S={expect_S}")
+                f"devices lowers S = {'2*V*D' if folded else 'V*D'} "
+                "(an integer number of stage slots per device)")
+        half = S // 2 if folded else S
         if device_of_stage is None:
-            device_of_stage = (
-                (lambda s: min(s, S - 1 - s)) if folded else (lambda s: s))
+            if folded:
+                device_of_stage = (
+                    lambda s: (s % D) if s < half else (S - 1 - s) % D)
+            else:
+                device_of_stage = lambda s: s % D
+        V, enc_slot, dec_slot = _slot_maps(S, D, folded, device_of_stage)
         fwd = sorted((p for p in sched.placements if p.virtual < S),
                      key=lambda p: (p.step, p.device))
         steps = sorted({p.step for p in fwd})
@@ -128,12 +207,16 @@ class StepTables:
         T = len(steps)
 
         sel = np.zeros((D, T), dtype=np.int32)
+        slot = np.zeros((D, T), dtype=np.int32)
         mb = np.zeros((D, T), dtype=np.int32)
         down_mb = np.zeros((D, T), dtype=np.int32)
         down_valid = np.zeros((D, T), dtype=bool)
         up_mb = np.zeros((D, T), dtype=np.int32)
         up_valid = np.zeros((D, T), dtype=bool)
         loss = np.zeros((D, T), dtype=bool)
+        embed = np.zeros((D, T), dtype=bool)
+        turn_rd = np.zeros((D, T), dtype=bool)
+        turn_wr = np.zeros((D, T), dtype=bool)
 
         def mark_rx(tab, ok, dev, k, m, chan):
             if k >= T:
@@ -164,8 +247,9 @@ class StepTables:
                 raise ValueError(
                     f"placement v={v} m={m} on device {dev}, but this "
                     f"executor's stage layout pins stage {v} to device "
-                    f"{canon}; re-synthesize the schedule with the "
-                    "partition's device_of_stage")
+                    f"{canon} (slot "
+                    f"{enc_slot.get(v, dec_slot.get(v))}); re-synthesize "
+                    "the schedule with the partition's device_of_stage")
             k = k_of_step[p.step]
             if sel[dev, k] != IDLE:
                 raise ValueError(
@@ -173,40 +257,38 @@ class StepTables:
                     "validate_schedule")
             k_of_task[(v, m)] = k
             mb[dev, k] = m
-            if folded:
-                sel[dev, k] = RUN_ENC if v < D else RUN_DEC
-                if v == D - 1:
-                    # turnaround — consumed locally from the turn buffer
-                    # by stage D, which must share the device; no send.
-                    if device_of_stage(D) != dev:
-                        raise ValueError(
-                            f"turnaround stages {D - 1},{D} on devices "
-                            f"{dev},{device_of_stage(D)}: the fold "
-                            "collocates them (constraint (9))")
-                elif v < S - 1:
-                    # enc -> enc rides the down ring, dec -> dec the up
-                    # ring; the consumer must be the matching neighbour.
-                    nd = device_of_stage(v + 1)
-                    want = dev + 1 if v < D else dev - 1
-                    if nd != want:
-                        raise ValueError(
-                            f"stage {v} on device {dev} feeds stage "
-                            f"{v + 1} on device {nd}, but the ring "
-                            f"executors only deliver to device {want}")
-                    if v < D:
-                        mark_rx(down_mb, down_valid, nd, k + 1, m, "down")
-                    else:
-                        mark_rx(up_mb, up_valid, nd, k + 1, m, "up")
-            else:
-                sel[dev, k] = RUN_ENC
-                if v < S - 1:
-                    nd = device_of_stage(v + 1)
-                    if nd != dev + 1:
-                        raise ValueError(
-                            f"stage {v} on device {dev} feeds stage "
-                            f"{v + 1} on device {nd}, but the linear "
-                            f"executor only delivers to device {dev + 1}")
+            is_enc = v < half
+            sel[dev, k] = RUN_ENC if is_enc else RUN_DEC
+            slot[dev, k] = enc_slot[v] if is_enc else dec_slot[v]
+            if v == 0:
+                embed[dev, k] = True
+            if folded and v == half:
+                turn_rd[dev, k] = True
+            if folded and v == half - 1:
+                # turnaround — consumed locally from the turn buffer by
+                # stage S/2, which must share the device; no send.
+                turn_wr[dev, k] = True
+                if device_of_stage(half) != dev:
+                    raise ValueError(
+                        f"turnaround stages {half - 1},{half} on devices "
+                        f"{dev},{device_of_stage(half)}: the fold "
+                        "collocates them (constraint (9))")
+            elif v < S - 1:
+                # enc -> enc rides the down ring, dec -> dec the up ring
+                # (both wrap: interleaved slot boundaries cross D-1 -> 0);
+                # the consumer must be the matching ring neighbour.
+                nd = device_of_stage(v + 1)
+                want = (dev + 1) % D if is_enc else (dev - 1) % D
+                if nd != want:
+                    raise ValueError(
+                        f"stage {v} on device {dev} (slot "
+                        f"{slot[dev, k]}) feeds stage {v + 1} on device "
+                        f"{nd}, but the ring executors only deliver to "
+                        f"device {want}")
+                if is_enc:
                     mark_rx(down_mb, down_valid, nd, k + 1, m, "down")
+                else:
+                    mark_rx(up_mb, up_valid, nd, k + 1, m, "up")
             if v == S - 1:
                 loss[dev, k] = True
 
@@ -227,11 +309,19 @@ class StepTables:
                     "input can arrive (constraint (10)) — run "
                     "validate_schedule")
 
-        return cls(D=D, M=M, forward_steps=tuple(steps), sel=sel, mb=mb,
+        return cls(D=D, M=M, V=V, forward_steps=tuple(steps), sel=sel,
+                   slot=slot, mb=mb,
                    down_mb=down_mb, down_valid=down_valid, up_mb=up_mb,
-                   up_valid=up_valid, loss=loss,
+                   up_valid=up_valid, loss=loss, embed=embed,
+                   turn_rd=turn_rd, turn_wr=turn_wr,
                    embed_device=device_of_stage(0),
-                   turn_device=device_of_stage(D - 1) if folded else -1)
+                   turn_device=device_of_stage(half - 1) if folded else -1)
+
+
+@functools.lru_cache(maxsize=256)
+def _tables_cached(sched: Schedule, folded: bool,
+                   devices: tuple[int, ...]) -> StepTables:
+    return StepTables._build(sched, folded, lambda s: devices[s])
 
 
 # ===========================================================================
@@ -252,6 +342,17 @@ def _buf_store(buf: Pytree, m, val: Pytree, pred) -> Pytree:
         buf, val)
 
 
+def _buf_store2(buf: Pytree, m, v_idx, val: Pytree, pred) -> Pytree:
+    """``buf[m, v_idx] = val`` where ``pred`` — the (microbatch, slot)
+    indexed store interleaved plans use for their per-slot skip stash."""
+    def upd(b, x):
+        idx = (m, v_idx) + (0,) * (b.ndim - 2)
+        return jnp.where(
+            pred, jax.lax.dynamic_update_slice(b, x[None, None], idx), b)
+
+    return jax.tree.map(upd, buf, val)
+
+
 # ===========================================================================
 # Folded wave executor from tables
 # ===========================================================================
@@ -261,20 +362,29 @@ def make_wave_pipeline_from_schedule(
     sched: Schedule,
     *,
     embed_fn: Callable,       # (edge_p, mb, aux) -> tokens
-    enc_stage_fn: Callable,   # (stage_p, x, aux) -> (x_out, skips)
-    dec_stage_fn: Callable,   # (stage_p, x, skips, aux) -> x_out
+    enc_stage_fn: Callable,   # (stage_p, x, aux, slot) -> (x_out, skips)
+    dec_stage_fn: Callable,   # (stage_p, x, skips, aux, slot) -> x_out
     loss_fn: Callable,        # (edge_p, x_final, mb, aux) -> scalar
     device_of_stage=None,     # partition's explicit stage->device mapping
+    devices=None,             # ...same, as a tuple (memoized lowering)
 ) -> Callable:
-    """Lower a folded S=2D schedule to ``fn(enc_stack, dec_stack, edge_p,
-    mbs, aux) -> loss`` (same signature as ``make_wave_pipeline``).
+    """Lower a folded S=2VD schedule to ``fn(enc_stack, dec_stack, edge_p,
+    mbs, aux) -> loss`` (same call signature as ``make_wave_pipeline``, but
+    the stage stacks carry a leading slot axis: ``[D, V, pad, ...]``).
 
     Each scan step consults the schedule-derived tables: arrivals are
-    stored into microbatch-indexed receive buffers, the selected stage runs
-    on the slot's microbatch, encoder outputs stash their skips (and, on
-    the turnaround device, the activation) under the *microbatch* index, so
-    the decoder reads exactly the skips its collocated encoder produced —
-    correct for any valid schedule, including ``M < D``.
+    stored into microbatch-indexed receive buffers, the selected stage slot
+    runs on the slot's microbatch with its own parameter rows
+    (``stack[d, slot]``), encoder slots stash their skips under the
+    (microbatch, slot) index — and the turnaround slot the activation under
+    the microbatch — so each decoder slot reads exactly the skips its
+    collocated encoder slot produced.  Correct for any valid schedule,
+    including ``M < D`` and interleaved V > 1 plans; the rings wrap
+    (interleaved slot boundaries cross device D-1 -> 0).
+
+    ``enc_stage_fn`` / ``dec_stage_fn`` receive the *slot index* as their
+    last argument so callers can select per-slot block counts and skip
+    pairings (see ``runtime.compile``).
     """
     D, M, axis = cfg.num_devices, cfg.num_microbatches, cfg.axis
     if sched.M != M or sched.D != D:
@@ -282,43 +392,53 @@ def make_wave_pipeline_from_schedule(
             f"schedule (M={sched.M}, D={sched.D}) does not match the "
             f"pipeline config (M={M}, D={D})")
     tables = StepTables.from_schedule(sched, folded=True,
-                                      device_of_stage=device_of_stage)
-    T = tables.num_steps
-    embed_dev, turn_dev = tables.embed_device, tables.turn_device
-    down_perm, up_perm = ring_perms(D)
+                                      device_of_stage=device_of_stage,
+                                      devices=devices)
+    T, V = tables.num_steps, tables.V
+    down_perm, up_perm = ring_perms(D, wrap=True)
     enc_stage = _wrap_remat(enc_stage_fn, cfg)
     dec_stage = _wrap_remat(dec_stage_fn, cfg)
 
     def fn(enc_stack, dec_stack, edge_p, mbs, aux):
         d = jax.lax.axis_index(axis)
-        enc_p = tree_local(enc_stack)
-        dec_p = tree_local(dec_stack)
+        enc_p = tree_local(enc_stack)       # [V, enc_pad, ...]
+        dec_p = tree_local(dec_stack)       # [V, dec_pad, ...]
 
         mb0 = tree_index(mbs, 0)
         aux0 = tree_index(aux, 0)
         x_proto = jax.eval_shape(embed_fn, edge_p, mb0, aux0)
         zero_x = jnp.zeros(x_proto.shape, x_proto.dtype)
         skips_proto = jax.eval_shape(
-            lambda p, x, a: enc_stage(p, x, a)[1], enc_p, zero_x, aux0)
+            lambda p, x, a: enc_stage(p, x, a, 0)[1],
+            tree_index(enc_p, 0), zero_x, aux0)
         zero_skips = jax.tree.map(
             lambda t: jnp.zeros(t.shape, t.dtype), skips_proto)
 
         # This device's rows of every table (host constants -> jnp).
         sel_t = jnp.asarray(tables.sel)[d]
+        slot_t = jnp.asarray(tables.slot)[d]
         mb_t = jnp.asarray(tables.mb)[d]
         dmb_t = jnp.asarray(tables.down_mb)[d]
         dok_t = jnp.asarray(tables.down_valid)[d]
         umb_t = jnp.asarray(tables.up_mb)[d]
         uok_t = jnp.asarray(tables.up_valid)[d]
         loss_t = jnp.asarray(tables.loss)[d]
+        emb_t = jnp.asarray(tables.embed)[d]
+        trd_t = jnp.asarray(tables.turn_rd)[d]
+        twr_t = jnp.asarray(tables.turn_wr)[d]
+
+        def cache_zeros(proto):
+            # [M, V, enc_pad, ...]: per-(microbatch, slot) skip stash
+            return jax.tree.map(
+                lambda t: jnp.zeros((M, V) + tuple(t.shape), t.dtype), proto)
 
         init = (
             zero_x,                         # down-ring register
             zero_x,                         # up-ring register
             _zeros_buffer(zero_x, M),       # enc_rx[m]: down arrivals
             _zeros_buffer(zero_x, M),       # dec_rx[m]: up arrivals
-            _zeros_buffer(zero_x, M),       # turn[m]: own enc output
-            _zeros_buffer(zero_skips, M),   # cache[m]: own stashed skips
+            _zeros_buffer(zero_x, M),       # turn[m]: own turn-slot output
+            cache_zeros(zero_skips),        # cache[m, v]: stashed skips
         )
 
         def step(carry, t):
@@ -326,6 +446,7 @@ def make_wave_pipeline_from_schedule(
             enc_rx = _buf_store(enc_rx, dmb_t[t], down_in, dok_t[t])
             dec_rx = _buf_store(dec_rx, umb_t[t], up_in, uok_t[t])
             sel = sel_t[t]
+            vslot = slot_t[t]
             m = mb_t[t]
             mb_m = tree_index(mbs, m)
             aux_m = tree_index(aux, m)
@@ -335,25 +456,34 @@ def make_wave_pipeline_from_schedule(
 
             def run_enc(_):
                 x0 = jax.lax.cond(
-                    d == embed_dev, lambda: embed_fn(edge_p, mb_m, aux_m),
+                    emb_t[t], lambda: embed_fn(edge_p, mb_m, aux_m),
                     lambda: zero_x)
-                x_in = jnp.where(d == embed_dev, x0, tree_index(enc_rx, m))
-                return enc_stage(enc_p, x_in, aux_m)
+                x_in = jnp.where(emb_t[t], x0, tree_index(enc_rx, m))
+                return enc_stage(tree_index(enc_p, vslot), x_in, aux_m,
+                                 vslot)
 
             def run_dec(_):
-                x_in = jnp.where(d == turn_dev, tree_index(turn, m),
+                x_in = jnp.where(trd_t[t], tree_index(turn, m),
                                  tree_index(dec_rx, m))
-                x_out = dec_stage(dec_p, x_in, tree_index(cache, m), aux_m)
+                # flatten the slot axis: consumers address the stash by
+                # flat row slot*enc_pad + row (StageLayout.skip_rows)
+                skips_m = jax.tree.map(
+                    lambda s: s.reshape((s.shape[0] * s.shape[1],)
+                                        + s.shape[2:]),
+                    tree_index(cache, m))
+                x_out = dec_stage(tree_index(dec_p, vslot), x_in, skips_m,
+                                  aux_m, vslot)
                 return x_out, zero_skips
 
             x_out, skips = jax.lax.switch(
                 sel, (run_idle, run_enc, run_dec), None)
             is_enc = sel == RUN_ENC
-            # only the turnaround device ever reads turn[m]; gating the
-            # store saves the [M, ...] buffer write (and its transpose in
-            # the backward pass) on the other D-1 devices
-            turn = _buf_store(turn, m, x_out, is_enc & (d == turn_dev))
-            cache = _buf_store(cache, m, skips, is_enc)
+            # only the turnaround slot's output is ever read back from
+            # turn[m]; gating the store on the table flag saves the
+            # [M, ...] buffer write (and its transpose in the backward
+            # pass) everywhere else
+            turn = _buf_store(turn, m, x_out, twr_t[t])
+            cache = _buf_store2(cache, m, vslot, skips, is_enc)
             loss = jax.lax.cond(
                 loss_t[t],
                 lambda: loss_fn(edge_p, x_out, mb_m, aux_m),
@@ -378,36 +508,42 @@ def make_linear_pipeline_from_schedule(
     sched: Schedule,
     *,
     embed_fn: Callable,       # (edge_p, mb) -> x
-    stage_fn: Callable,       # (stage_p, x) -> x
+    stage_fn: Callable,       # (stage_p, x, slot) -> x
     loss_fn: Callable,        # (edge_p, x_final, mb) -> scalar
     device_of_stage=None,     # partition's explicit stage->device mapping
+    devices=None,             # ...same, as a tuple (memoized lowering)
 ) -> Callable:
-    """Lower a linear S=D schedule to ``fn(stack, edge_p, mbs) -> loss``
-    (same signature as ``make_linear_pipeline``)."""
+    """Lower a linear S=VD schedule to ``fn(stack, edge_p, mbs) -> loss``
+    (same call signature as ``make_linear_pipeline``; the stack carries a
+    leading slot axis ``[D, V, pad, ...]`` and ``stage_fn`` receives the
+    slot index).  The down ring wraps so interleaved (V > 1) plans cross
+    the D-1 -> 0 slot boundary."""
     D, M, axis = cfg.num_devices, cfg.num_microbatches, cfg.axis
     if sched.M != M or sched.D != D:
         raise ValueError(
             f"schedule (M={sched.M}, D={sched.D}) does not match the "
             f"pipeline config (M={M}, D={D})")
     tables = StepTables.from_schedule(sched, folded=False,
-                                      device_of_stage=device_of_stage)
+                                      device_of_stage=device_of_stage,
+                                      devices=devices)
     T = tables.num_steps
-    embed_dev = tables.embed_device
-    down_perm, _ = ring_perms(D)
+    down_perm, _ = ring_perms(D, wrap=True)
     stage = _wrap_remat(stage_fn, cfg)
 
     def fn(stack, edge_p, mbs):
         d = jax.lax.axis_index(axis)
-        my_p = tree_local(stack)
+        my_p = tree_local(stack)            # [V, pad, ...]
         mb0 = tree_index(mbs, 0)
         x_proto = jax.eval_shape(embed_fn, edge_p, mb0)
         zero_x = jnp.zeros(x_proto.shape, x_proto.dtype)
 
         sel_t = jnp.asarray(tables.sel)[d]
+        slot_t = jnp.asarray(tables.slot)[d]
         mb_t = jnp.asarray(tables.mb)[d]
         dmb_t = jnp.asarray(tables.down_mb)[d]
         dok_t = jnp.asarray(tables.down_valid)[d]
         loss_t = jnp.asarray(tables.loss)[d]
+        emb_t = jnp.asarray(tables.embed)[d]
 
         init = (zero_x, _zeros_buffer(zero_x, M))
 
@@ -415,6 +551,7 @@ def make_linear_pipeline_from_schedule(
             h_in, rx = carry
             rx = _buf_store(rx, dmb_t[t], h_in, dok_t[t])
             m = mb_t[t]
+            vslot = slot_t[t]
             mb_m = tree_index(mbs, m)
 
             def run_idle(_):
@@ -422,10 +559,10 @@ def make_linear_pipeline_from_schedule(
 
             def run_stage(_):
                 x0 = jax.lax.cond(
-                    d == embed_dev, lambda: embed_fn(edge_p, mb_m),
+                    emb_t[t], lambda: embed_fn(edge_p, mb_m),
                     lambda: zero_x)
-                x_in = jnp.where(d == embed_dev, x0, tree_index(rx, m))
-                return stage(my_p, x_in)
+                x_in = jnp.where(emb_t[t], x0, tree_index(rx, m))
+                return stage(tree_index(my_p, vslot), x_in, vslot)
 
             x_out = jax.lax.switch(sel_t[t], (run_idle, run_stage), None)
             loss = jax.lax.cond(

@@ -88,11 +88,9 @@ def _diff_executors(cp, mesh, state, batch_args, label):
     cf = dataclasses.replace(cp, executor="closed_form")
     table_loss = cp.bind(mesh)
     closed_loss = cf.bind(mesh)
-    lt = jax.jit(table_loss)(state, *batch_args)
-    lc = jax.jit(closed_loss)(state, *batch_args)
+    lt, gt = jax.jit(jax.value_and_grad(table_loss))(state, *batch_args)
+    lc, gc = jax.jit(jax.value_and_grad(closed_loss))(state, *batch_args)
     np.testing.assert_allclose(float(lt), float(lc), rtol=RTOL)
-    gt = jax.jit(jax.grad(table_loss))(state, *batch_args)
-    gc = jax.jit(jax.grad(closed_loss))(state, *batch_args)
     _check_grads(cp.merge_params(gt[0], gt[1]),
                  cp.merge_params(gc[0], gc[1]), f"{label}[table-vs-closed]")
     print(f"{label}: table executor == closed-form executor "
@@ -100,19 +98,23 @@ def _diff_executors(cp, mesh, state, batch_args, label):
 
 
 def _run_lm(name, fwd_times, expect_uneven, *, force_wave=None,
-            pipeline_devices=4, compare_closed=True):
+            pipeline_devices=4, compare_closed=True, interleave=None):
     cfg = LMConfig(name="t", vocab=64, d_model=32, n_layers=8,
                    attn=AttnConfig(32, 4, 2, 8), d_ff=64,
                    tied_embeddings=True)
     graph = lm_pipeline_graph(cfg, fwd_times=fwd_times)
     cp = auto_pipeline(graph, lm_model_fns(cfg), pipeline_devices,
                        pipeline_devices=pipeline_devices, microbatches=4,
-                       lam=0.0, dp_size=2, force_wave=force_wave)
+                       lam=0.0, dp_size=2, force_wave=force_wave,
+                       interleave=interleave)
+    V = interleave or 1
     if force_wave:
-        assert cp.folded and cp.partition.num_stages == 2 * pipeline_devices
+        assert cp.folded
+        assert cp.partition.num_stages == 2 * V * pipeline_devices
     else:
         assert not cp.folded
-        assert cp.partition.num_stages == pipeline_devices   # S = D
+        assert cp.partition.num_stages == V * pipeline_devices   # S = VD
+    assert cp.layout.V == V
     uneven = len(set(cp.layout.counts)) > 1
     assert uneven == expect_uneven, (name, cp.layout.counts)
     _check_tables_match_grid(cp, name)
@@ -127,18 +129,16 @@ def _run_lm(name, fwd_times, expect_uneven, *, force_wave=None,
     bound = cp.bind(mesh)
     # folded executors take (params, mbs, aux); LM carries no aux
     loss = (lambda st, mb: bound(st, mb, {})) if cp.folded else bound
-    lp = jax.jit(loss)(state, mbs)
+    lp, gp = jax.jit(jax.value_and_grad(loss))(state, mbs)
 
     def ref(params):
         return jnp.mean(jnp.asarray(
             [lm_loss(params, {"tokens": mbs["tokens"][m]}, cfg)
              for m in range(M)]))
 
-    lr = jax.jit(ref)(params)
+    lr, gr = jax.jit(jax.value_and_grad(ref))(params)
     np.testing.assert_allclose(float(lp), float(lr), rtol=RTOL)
-    gp = jax.jit(jax.grad(loss))(state, mbs)
-    _check_grads(cp.merge_params(gp[0], gp[1]), jax.jit(jax.grad(ref))(params),
-                 name)
+    _check_grads(cp.merge_params(gp[0], gp[1]), gr, name)
     print(f"{name}: counts={cp.layout.counts} loss={float(lp):.6f} "
           f"== ref {float(lr):.6f}; grads OK")
     if compare_closed:
@@ -182,7 +182,7 @@ def _run_uvit(name, fwd_times, expect_uneven, *, pipeline_devices=2,
     mb, aux = make_diffusion_microbatches(batch, KEY, M, cfg, "uvit")
 
     loss = cp.bind(mesh)
-    lp = jax.jit(loss)(state, mb, aux)
+    lp, gp = jax.jit(jax.value_and_grad(loss))(state, mb, aux)
 
     def ref(params):
         losses = []
@@ -192,11 +192,9 @@ def _run_uvit(name, fwd_times, expect_uneven, *, pipeline_devices=2,
             losses.append(jnp.mean(jnp.square(pred - mb["noise"][m])))
         return jnp.mean(jnp.asarray(losses))
 
-    lr = jax.jit(ref)(params)
+    lr, gr = jax.jit(jax.value_and_grad(ref))(params)
     np.testing.assert_allclose(float(lp), float(lr), rtol=RTOL)
-    gp = jax.jit(jax.grad(loss))(state, mb, aux)
-    _check_grads(cp.merge_params(gp[0], gp[1]), jax.jit(jax.grad(ref))(params),
-                 name)
+    _check_grads(cp.merge_params(gp[0], gp[1]), gr, name)
     print(f"{name}: counts={cp.layout.counts} loss={float(lp):.6f} "
           f"== ref {float(lr):.6f}; grads OK")
     if compare_closed:
@@ -204,18 +202,36 @@ def _run_uvit(name, fwd_times, expect_uneven, *, pipeline_devices=2,
 
 
 def _run_skipvit(name, cfg, fwd_times, *, pipeline_devices=2,
-                 microbatches=4, compare_closed=True):
+                 microbatches=4, compare_closed=True, interleave=None,
+                 use_ilp=False, expect_asym=True, remat=True):
     """SkipViT (homogeneous stack, sparse/mid-block skips): the partitions
     are mirror-ASYMMETRIC folds — the configs StageLayout used to reject.
     Table executor vs single-device reference; closed-form wave (which now
-    also reads the generalized counts/pairing) differentially when M>=D."""
+    also reads the generalized counts/pairing) differentially when M>=D.
+    ``interleave=V`` pins a V-fold interleaved plan (S = 2VD stage slots;
+    the closed-form executors cannot realize those at all)."""
     graph = skipvit_pipeline_graph(cfg, fwd_times=fwd_times)
     cp = auto_pipeline(graph, skipvit_model_fns(cfg), pipeline_devices,
                        pipeline_devices=pipeline_devices,
-                       microbatches=microbatches, lam=0.0, dp_size=2)
-    assert cp.folded and not cp.partition.mirror_symmetric(), (
-        name, cp.partition.cuts)
-    assert cp.layout.enc_counts != cp.layout.dec_counts
+                       microbatches=microbatches, lam=0.0, dp_size=2,
+                       interleave=interleave, use_ilp=use_ilp,
+                       remat=remat)
+    if interleave is not None and interleave > 1:
+        assert cp.layout.V == interleave, (name, cp.layout.V)
+        assert cp.partition.num_stages == 2 * interleave * pipeline_devices
+        try:
+            dataclasses.replace(cp, executor="closed_form").build()
+        except ValueError as e:
+            assert "closed-form" in str(e), e
+            print(f"{name}: closed-form executor rejects V={interleave} "
+                  "as expected")
+        else:
+            raise AssertionError(
+                f"{name}: closed-form executor accepted V={interleave}")
+    if expect_asym:
+        assert cp.folded and not cp.partition.mirror_symmetric(), (
+            name, cp.partition.cuts)
+        assert cp.layout.enc_counts != cp.layout.dec_counts
     _check_tables_match_grid(cp, name)
 
     mesh = jax.make_mesh((2, pipeline_devices), ("data", "model"))
@@ -228,7 +244,7 @@ def _run_skipvit(name, cfg, fwd_times, *, pipeline_devices=2,
     mb, aux = make_diffusion_microbatches(batch, KEY, M, cfg, "uvit")
 
     loss = cp.bind(mesh)
-    lp = jax.jit(loss)(state, mb, aux)
+    lp, gp = jax.jit(jax.value_and_grad(loss))(state, mb, aux)
 
     def ref(params):
         losses = []
@@ -238,11 +254,9 @@ def _run_skipvit(name, cfg, fwd_times, *, pipeline_devices=2,
             losses.append(jnp.mean(jnp.square(pred - mb["noise"][m])))
         return jnp.mean(jnp.asarray(losses))
 
-    lr = jax.jit(ref)(params)
+    lr, gr = jax.jit(jax.value_and_grad(ref))(params)
     np.testing.assert_allclose(float(lp), float(lr), rtol=RTOL)
-    gp = jax.jit(jax.grad(loss))(state, mb, aux)
-    _check_grads(cp.merge_params(gp[0], gp[1]),
-                 jax.jit(jax.grad(ref))(params), name)
+    _check_grads(cp.merge_params(gp[0], gp[1]), gr, name)
     print(f"{name}: cuts={cp.partition.cuts} enc={cp.layout.enc_counts} "
           f"dec={cp.layout.dec_counts} loss={float(lp):.6f} "
           f"== ref {float(lr):.6f}; grads OK")
@@ -370,6 +384,28 @@ CONFIGS = {
     # Hunyuan-DiT model_fns coverage (ROADMAP item): adaLN + cross-attn
     # blocks through the full compile path vs the single-device reference
     "wave-hunyuan": lambda: _run_hunyuan("wave-hunyuan"),
+    # V=2 interleaved 1F1B (linear S = VD, cyclic slot placement, the
+    # wraparound down ring): the skip-free side of the interleave axis
+    "linear-interleaved": lambda: _run_lm(
+        "linear-interleaved", [4, 1, 1, 1, 1, 1, 1, 4], True,
+        pipeline_devices=2, interleave=2, compare_closed=False),
+    # V=2 interleaved wave (S = 4D stage slots, two (enc, dec) slot pairs
+    # per device, wraparound rings, slot-resolved skip pairing): the plans
+    # the S == 2D layout gate used to reject outright
+    "wave-interleaved": lambda: _run_skipvit(
+        "wave-interleaved",
+        SkipViTConfig("t", n_enc=4, n_mid=2, n_dec=4),
+        [1, 1, 2, 4, 0.5, 0.5, 0.5, 1, 1, 2],
+        interleave=2, compare_closed=False, expect_asym=False,
+        remat=False),
+    # ILP-synthesized (Eqs. 6-13) V=2 interleaved schedule through the
+    # same table-driven lowering — exact orders, not just greedy ones
+    "wave-interleaved-ilp": lambda: _run_skipvit(
+        "wave-interleaved-ilp",
+        SkipViTConfig("t", n_enc=3, n_mid=2, n_dec=3),
+        [1, 1, 4, 0.5, 0.5, 0.5, 1, 1],
+        interleave=2, microbatches=2, use_ilp=True,
+        compare_closed=False, expect_asym=False),
 }
 
 

@@ -28,19 +28,23 @@ def assert_programs_match_grid(sched):
     return progs
 
 
-def assert_step_tables_match_grid(sched, folded):
+def assert_step_tables_match_grid(sched, folded, device_of_stage=None):
     """The executor-facing ``StepTables`` cover exactly the schedule's
-    forward placements, with the right selector/microbatch per slot."""
-    tabs = StepTables.from_schedule(sched, folded=folded)
+    forward placements, with the right selector/microbatch/slot per step
+    (the enc/dec boundary is S/2 — a device may hold V slots per kind)."""
+    tabs = StepTables.from_schedule(sched, folded=folded,
+                                    device_of_stage=device_of_stage)
     grid = sched.grid()
     S = sched.S
+    half = S // 2 if folded else S
     for k, t in enumerate(tabs.forward_steps):
         for d in range(sched.D):
             p = grid[d][t]
             if p is not None and p.virtual < S:
-                want = RUN_DEC if folded and p.virtual >= sched.D else RUN_ENC
+                want = RUN_DEC if folded and p.virtual >= half else RUN_ENC
                 assert tabs.sel[d, k] == want, (d, k)
                 assert tabs.mb[d, k] == p.microbatch, (d, k)
+                assert 0 <= tabs.slot[d, k] < tabs.V, (d, k)
             else:
                 assert tabs.sel[d, k] == IDLE, (d, k)
     n_fwd = sum(1 for p in sched.placements if p.virtual < S)

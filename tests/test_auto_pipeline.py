@@ -225,10 +225,13 @@ def test_layout_accepts_asymmetric_fold():
     assert part.folded and not part.mirror_symmetric()
     assert part.validate_collocation(g)
     layout = StageLayout.from_partition(part, g)
+    assert layout.V == 1
     assert layout.enc_counts != layout.dec_counts
-    assert sum(layout.enc_counts) + sum(layout.dec_counts) == g.n
+    assert (sum(c for cs in layout.enc_counts for c in cs)
+            + sum(c for cs in layout.dec_counts for c in cs) == g.n)
     # every skip edge resolved to a stash row; skip-less rows are -1
-    n_paired = sum(1 for row in layout.skip_rows for r in row if r >= 0)
+    n_paired = sum(1 for dev in layout.skip_rows for row in dev
+                   for r in row if r >= 0)
     assert n_paired == len(g.skips)
     # the synthetic acceptance graph partitions and lays out as well
     g2 = make_unet_like(3, 2)
@@ -284,7 +287,8 @@ def test_hunyuan_config_plans_through_auto_pipeline():
     cp = hunyuan_dit.auto_plan(8, pipeline_devices=8, microbatches=8)
     assert cp.folded and cp.partition.num_stages == 16
     assert cp.partition.validate_collocation(cp.graph)
-    assert sum(cp.layout.enc_counts) + sum(cp.layout.dec_counts) == 32
+    assert (sum(c for cs in cp.layout.enc_counts for c in cs)
+            + sum(c for cs in cp.layout.dec_counts for c in cs) == 32)
     assert not validate_schedule(cp.schedule, cp.partition.device_of_stage,
                                  collocated=cp.partition.collocated_pairs())
 
@@ -314,28 +318,158 @@ def test_schedule_for_partition_greedy_matches_templates():
 
 
 # ---------------------------------------------------------------------------
+# interleaved (virtual-stage) plans: V > 1 stage slot pairs per device
+# ---------------------------------------------------------------------------
+
+def _interleaved_skipvit(V=2, D=2):
+    from repro.models.diffusion import SkipViTConfig, skipvit_pipeline_graph
+    cfg = SkipViTConfig("t", n_enc=4, n_mid=2, n_dec=4)
+    g = skipvit_pipeline_graph(
+        cfg, fwd_times=[1, 1, 2, 4, 0.5, 0.5, 0.5, 1, 1, 2])
+    return cfg, g
+
+
+def test_interleaved_partition_layout_and_schedule():
+    """partition(interleave=V) emits S = 2VD stages on the cyclic slot
+    placement, keeps skip collocation, and StageLayout carries per-device
+    slot lists — the S == 2D gate is gone."""
+    cfg, g = _interleaved_skipvit()
+    part = partition(g, 2, lam=0.0, interleave=2)
+    assert part.folded and part.num_stages == 8 and part.num_devices == 2
+    assert part.interleave == 2
+    assert part.devices == (0, 1, 0, 1, 1, 0, 1, 0)
+    assert part.validate_collocation(g)
+    layout = StageLayout.from_partition(part, g)
+    assert layout.V == 2
+    assert all(len(ss) == 2 for ss in layout.enc_slots)
+    assert all(len(ss) == 2 for ss in layout.dec_slots)
+    assert (sum(c for cs in layout.enc_counts for c in cs)
+            + sum(c for cs in layout.dec_counts for c in cs) == g.n)
+    # every skip edge resolves to a flat (slot, row) stash index
+    n_paired = sum(1 for dev in layout.skip_rows for row in dev
+                   for r in row if r >= 0)
+    assert n_paired == len(g.skips)
+    assert all(0 <= r < layout.V * layout.enc_pad
+               for dev in layout.skip_rows for row in dev for r in row
+               if r >= 0)
+    sched = schedule_for_partition(part, 4)
+    assert not validate_schedule(sched, part.device_of_stage,
+                                 collocated=part.collocated_pairs())
+
+
+def test_interleaved_split_merge_roundtrip():
+    """split_params -> merge_params stays the identity on V=2 interleaved
+    layouts (the gradient path through [D, V, pad, ...] stacks)."""
+    from repro.runtime.adapters import skipvit_model_fns
+    cfg, g = _interleaved_skipvit()
+    cp = auto_pipeline(g, skipvit_model_fns(cfg), 2, pipeline_devices=2,
+                       microbatches=4, lam=0.0, interleave=2)
+    assert cp.layout.V == 2
+    params = cp.model_fns.init_fn(jax.random.PRNGKey(0))
+    stacks, edge = cp.split_params(params)
+    assert jax.tree.leaves(stacks[0])[0].shape[:2] == (2, 2)  # [D, V, ...]
+    back = cp.merge_params(stacks, edge)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # closed-form executors cannot realize V > 1 slots
+    with pytest.raises(ValueError, match="closed-form"):
+        dataclasses.replace(cp, executor="closed_form").build()
+
+
+def test_tuner_scores_interleave_axis():
+    """V is a tuner search axis: V > 1 candidates carry their own V-fold
+    partition, and drop reasons name the candidate's interleave degree."""
+    cfg, g = _interleaved_skipvit()
+    choices = tune(g, 4, lam=0.0, interleave_options=(1, 2))
+    vs = {c.V for c in choices if c.P > 1}
+    assert 1 in vs and 2 in vs
+    for c in choices:
+        if c.P > 1 and c.V > 1:
+            assert c.partition.num_stages == 2 * c.V * c.P
+            assert c.partition.interleave == c.V
+    # a V too deep for the graph is dropped with its V recorded
+    drops: list[str] = []
+    tune(g, 4, lam=0.0, interleave_options=(4,), drops=drops)
+    assert any("V=4" in d and "stages" in d for d in drops)
+
+
+def test_step_tables_memoized_lowering():
+    """Passing the mapping as a devices tuple memoizes the O(S*M*steps)
+    lowering (same schedule + partition -> the identical StepTables
+    object), and matches the callable-mapping build."""
+    cfg, g = _interleaved_skipvit()
+    part = partition(g, 2, lam=0.0, interleave=2)
+    sched = schedule_for_partition(part, 4)
+    t1 = StepTables.from_schedule(sched, folded=True, devices=part.devices)
+    t2 = StepTables.from_schedule(sched, folded=True, devices=part.devices)
+    assert t1 is t2
+    t3 = StepTables.from_schedule(sched, folded=True,
+                                  device_of_stage=part.device_of_stage)
+    assert t3 is not t1
+    np.testing.assert_array_equal(t1.sel, t3.sel)
+    np.testing.assert_array_equal(t1.slot, t3.slot)
+    # a schedule's dense programs are memoized per schedule too
+    assert sched.device_programs() is sched.device_programs()
+
+
+# ---------------------------------------------------------------------------
 # differential executor tests (subprocess, mocked multi-device mesh)
 # ---------------------------------------------------------------------------
 
-def test_auto_pipeline_equivalence_uneven_and_short():
+_TIER1_EQUIV = ("linear-uneven", "wave-uneven", "wave-short",
+                "wave-asym", "wave-sparse", "wave-interleaved")
+
+
+@pytest.fixture(scope="session")
+def tier1_equiv_out():
+    """ONE subprocess for every tier-1 differential config: the
+    multi-device jax startup (~8 s) is paid once instead of per test;
+    each test below asserts on its own configs' result lines."""
+    return _run_equiv(*_TIER1_EQUIV)
+
+
+def test_auto_pipeline_equivalence_uneven_and_short(tier1_equiv_out):
     """Uneven DP partitions (linear + folded wave) lowered through the
     table-driven executor match the single-device reference AND the
     closed-form executors (loss + grads, rtol 1e-4) — the configs the
     hand-written S=D / S=2D executors could not run at all.  Plus the
     M = D - 1 wave: only the table-driven lowering can realize it (pinned
     behavior: the closed-form executor raises), and it matches the
-    reference.  One subprocess to amortize the multi-device jax startup."""
-    _run_equiv("linear-uneven", "wave-uneven", "wave-short")
+    reference."""
+    for cfg in ("linear-uneven", "wave-uneven", "wave-short"):
+        assert f"{cfg}: " in tier1_equiv_out and "grads OK" in tier1_equiv_out
+    assert "closed-form executor rejects M < D" in tier1_equiv_out
 
 
-def test_auto_pipeline_equivalence_asymmetric_folds():
+def test_auto_pipeline_equivalence_asymmetric_folds(tier1_equiv_out):
     """Mirror-ASYMMETRIC folds (make_unet_like(3, 2) shape + a sparse-skip
     variant) compile through auto_pipeline and their table executors match
     the single-device reference (loss + grads, rtol 1e-4); the asymmetric
     config is additionally checked against the closed-form wave executor.
     These are exactly the partitions StageLayout.from_partition used to
     reject."""
-    _run_equiv("wave-asym", "wave-sparse")
+    assert "wave-asym: table executor == closed-form" in tier1_equiv_out
+    assert "wave-sparse: cuts=" in tier1_equiv_out
+
+
+def test_auto_pipeline_equivalence_interleaved(tier1_equiv_out):
+    """V=2 interleaved wave on SkipViT (S = 4D stage slots, uneven slots,
+    wraparound rings, slot-resolved skip stash): the table-driven executor
+    matches the single-device reference (loss + grads, rtol 1e-4) — the
+    region of the plan space the S == 2D layout gate made unreachable."""
+    assert "wave-interleaved: closed-form executor rejects V=2" \
+        in tier1_equiv_out
+    assert "wave-interleaved: cuts=" in tier1_equiv_out
+
+
+@pytest.mark.slow
+def test_auto_pipeline_equivalence_interleaved_ilp():
+    """ILP-synthesized (Eqs. 6-13) V=2 interleaved schedule through the
+    table-driven lowering matches the single-device reference — exact
+    interleaved orders execute as synthesized, not just greedy ones.
+    Plus the skip-free side of the axis: a V=2 interleaved linear 1F1B
+    (S = VD, wraparound down ring) against the same reference."""
+    _run_equiv("wave-interleaved-ilp", "linear-interleaved")
 
 
 @pytest.mark.slow

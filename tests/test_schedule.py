@@ -8,7 +8,9 @@ import pytest
 
 from helpers.hypothesis_compat import given, settings, st
 from repro.core.schedule import (Placement, Schedule, template_1f1b,
-                                 template_wave, ilp_schedule, greedy_schedule,
+                                 template_wave, template_interleaved,
+                                 ilp_schedule, greedy_schedule,
+                                 greedy_schedule_timed,
                                  validate_schedule, simulate,
                                  schedule_for_partition)
 
@@ -91,6 +93,106 @@ def test_device_programs_match_grid_templates():
     from helpers.schedule_checks import assert_programs_match_grid
     for sched in (template_1f1b(4, 6), template_wave(3, 4)):
         assert_programs_match_grid(sched)
+
+
+def test_interleaved_template_valid():
+    """The V-fold interleaved wave mapping (cyclic slots) synthesizes a
+    valid schedule for every constraint family, including the all-pairs
+    collocation of multi-slot devices."""
+    from repro.core.partition import interleaved_wave_devices
+    for D, M, V in [(2, 2, 2), (2, 4, 2), (3, 4, 2), (2, 4, 4)]:
+        s = template_interleaved(D, M, V)
+        S = 2 * V * D
+        devices = interleaved_wave_devices(S, D)
+        dev = lambda st: devices[st]
+        by_dev = {}
+        for st_ in range(S):
+            by_dev.setdefault(dev(st_), []).append(st_)
+        colloc = [(a, b) for ss in by_dev.values()
+                  for i, a in enumerate(ss) for b in ss[i + 1:]]
+        assert not validate_schedule(s, dev, collocated=colloc)
+        # work bound: each device owns 2V stages x (F+B) x M unit tasks
+        assert s.makespan >= 4 * V * M
+
+
+def test_validate_schedule_reports_slot_context():
+    """Constraint errors on interleaved schedules name the slot and wave
+    of the offending stage (device, slot k/n, wave), not just a bare
+    stage index — family (7) double-bookings and (10)/(11) order bugs."""
+    from repro.core.partition import interleaved_wave_devices
+    D, M, V = 2, 2, 2
+    s = template_interleaved(D, M, V)
+    S = 2 * V * D
+    devices = interleaved_wave_devices(S, D)
+    dev = lambda st: devices[st]
+    # collide two tasks on one device/step: family (7) with both slots
+    by_key = {(p.virtual, p.microbatch): p for p in s.placements}
+    victim = by_key[(2, 0)]          # stage 2 = device 0 slot 1
+    other = by_key[(0, 1)]           # stage 0 = device 0 slot 0
+    bad = Schedule(s.S, s.M, s.D, tuple(
+        dataclasses.replace(p, step=other.step)
+        if p is victim else p for p in s.placements))
+    errs = validate_schedule(bad, dev, folded=True)
+    assert any("double-booked" in e and "slot" in e and "wave" in e
+               for e in errs), errs
+    # ordering violation (10) names the slot too
+    bad2 = Schedule(s.S, s.M, s.D, tuple(
+        dataclasses.replace(p, step=0)
+        if (p.virtual, p.microbatch) == (2, 0) else p
+        for p in s.placements))
+    errs2 = validate_schedule(bad2, dev, folded=True)
+    assert any(e.startswith("(10)") and "enc slot 1" in e
+               for e in errs2), errs2
+
+
+@given(st.integers(2, 4), st.integers(2, 5), st.integers(1, 2),
+       st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_timed_greedy_always_valid(D, M, V, seed):
+    """The duration-aware list scheduler satisfies every constraint family
+    on interleaved mappings, for all three priorities and random
+    durations."""
+    from repro.core.partition import interleaved_wave_devices
+    rnd = random.Random(seed)
+    S = 2 * V * D
+    devices = interleaved_wave_devices(S, D)
+    dev = lambda st: devices[st]
+    times = [rnd.uniform(0.1, 2.0) for _ in range(S)]
+    for prio in ("backward", "forward", "critical_path"):
+        s = greedy_schedule_timed(S, M, dev, D, times, priority=prio,
+                                  p2p_time=rnd.uniform(0.0, 0.3))
+        assert not validate_schedule(s, dev)
+        mk, bub = simulate(s, times, bwd_ratio=2.0)
+        assert mk > 0 and 0.0 <= bub < 1.0
+
+
+@given(st.integers(2, 4), st.integers(1, 2), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_interleaved_beats_fold_makespan(D, k, seed):
+    """On randomly partially-skipped graphs whose block count admits a
+    balanced V=2 interleave (n = 4Dk), the synthesized interleaved
+    schedule's simulated makespan is <= the 2D fold's: the candidate
+    portfolio (unit greedy + three duration-aware priorities) reliably
+    converts the finer stages into smaller fill/drain bubbles."""
+    from repro.core.graph import Block, BlockGraph, SkipEdge
+    from repro.core.partition import partition
+    from repro.core.tuner import profile_partition
+    rnd = random.Random(seed)
+    n = 4 * D * k
+    pairs = [i for i in range(n // 2) if rnd.random() < 0.6]
+    g = BlockGraph(tuple(Block(f"b{i}", 1.0) for i in range(n)),
+                   tuple(SkipEdge(i, n - 1 - i, 8) for i in pairs))
+    M = rnd.randint(2, 2 * D)
+    try:
+        p1 = partition(g, D, lam=0.0, interleave=1)
+        p2 = partition(g, D, lam=0.0, interleave=2)
+    except ValueError:
+        return                       # no feasible stage-symmetric split
+    mk1, _ = simulate(schedule_for_partition(p1, M),
+                      profile_partition(g, p1).fwd_time_per_sample)
+    mk2, _ = simulate(schedule_for_partition(p2, M),
+                      profile_partition(g, p2).fwd_time_per_sample)
+    assert mk2 <= mk1 + 1e-9, (mk2, mk1)
 
 
 def test_simulation_durations():

@@ -61,12 +61,14 @@ def test_tuner_choice_records_scored_microbatches():
                     microbatches_per_iter=lambda P: 2 * P)
     assert all(c.M == 2 * c.P for c in override)
     # the paper cost model prices the overridden M (a 2P iteration costs
-    # more than the default P iteration for the same P, G, b)
-    base = {(c.P, c.G, c.b): c for c in tune(g, 16, hw=V100_CLUSTER)}
-    priced = [c for c in override if c.P > 1 and (c.P, c.G, c.b) in base]
+    # more than the default P iteration for the same P, G, b, V — the
+    # interleave axis makes V part of a candidate's identity)
+    base = {(c.P, c.G, c.b, c.V): c for c in tune(g, 16, hw=V100_CLUSTER)}
+    priced = [c for c in override
+              if c.P > 1 and (c.P, c.G, c.b, c.V) in base]
     assert priced
     for c in priced:
-        assert c.t_sched > base[(c.P, c.G, c.b)].t_sched
+        assert c.t_sched > base[(c.P, c.G, c.b, c.V)].t_sched
 
 
 def test_simulation_mode_agrees_on_ranking():
