@@ -12,24 +12,29 @@ from __future__ import annotations
 
 import time
 
-# HLO measurement for the asymmetric fold: compile the lowered table
+# HLO measurement for the asymmetric folds: compile the lowered table
 # executor's grad on 4 forced host devices and sum collective-permute
-# bytes (the paper's skip-savings claim, measured on a newly runnable
-# shape).  Analytic expectation: boundary-only traffic, zero skip bytes.
-_ASYM_HLO_SCRIPT = r"""
-import os
+# bytes, per graph and per wire format (bf16 default vs the fp32 escape
+# hatch — the wire halves every boundary hop, fwd and transposed bwd).
+# The spec (config + wire dtype) arrives as a JSON argv.
+_HLO_SCRIPT = r"""
+import json, os, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-import jax, jax.numpy as jnp
+spec = json.loads(sys.argv[1])
+import jax
 from repro.models.diffusion import SkipViTConfig, skipvit_pipeline_graph
 from repro.runtime.adapters import skipvit_model_fns, make_diffusion_microbatches
 from repro.runtime.compile import auto_pipeline
 from repro.runtime.hlo_analysis import collective_bytes
-from repro.core.comm_model import partition_comm_volume
 
-cfg = SkipViTConfig("b", n_enc=3, n_mid=2, n_dec=3)
-g = skipvit_pipeline_graph(cfg, fwd_times=[1, 1, 4, .5, .5, .5, 1, 1])
+cfg = SkipViTConfig("b", n_enc=spec["n_enc"], n_mid=spec["n_mid"],
+                    n_dec=spec["n_dec"],
+                    skip_pairs=(tuple(map(tuple, spec["skip_pairs"]))
+                                if spec["skip_pairs"] else None))
+g = skipvit_pipeline_graph(cfg, fwd_times=spec["fwd_times"])
 cp = auto_pipeline(g, skipvit_model_fns(cfg), 2, pipeline_devices=2,
-                   microbatches=4, lam=0.0, dp_size=2)
+                   microbatches=4, lam=0.0, dp_size=2,
+                   wire_dtype=spec["wire"])
 mesh = jax.make_mesh((2, 2), ("data", "model"))
 key = jax.random.PRNGKey(0)
 params = cp.model_fns.init_fn(key)
@@ -39,13 +44,43 @@ batch = {"latents": jax.random.normal(key, (B, 8, 8, 4)),
          "labels": jax.random.randint(key, (B,), 0, 10)}
 mb, aux = make_diffusion_microbatches(batch, key, M, cfg, "uvit")
 loss = cp.bind(mesh)
-comp = jax.jit(jax.grad(loss)).lower(state, mb, aux).compile()
-st = collective_bytes(comp.as_text())
+# parse the LOWERED module: the CPU backend's float-normalization pass
+# upcasts sub-fp32 collectives (a host-simulation artifact real TPU/GPU
+# collectives do not pay), so compiled.as_text() hides the wire format
+low = jax.jit(jax.grad(loss)).lower(state, mb, aux)
+st = collective_bytes(low.as_text())
 cpb = st.bytes_by_kind.get("collective-permute", 0)
-v_p = partition_comm_volume(g, cp.partition)
-print(f"auto_pipeline_asym_hlo_cp_bytes,{cpb},"
-      f"analytic_boundary_fwd={v_p.boundary_bytes:.0f}_skip=0")
+tabs = cp.step_tables()
+print("RESULT", json.dumps({
+    "collective_permute_bytes": cpb,
+    "W_down": tabs.W_down, "W_up": tabs.W_up,
+    "W_turn": tabs.W_turn, "W_skip": tabs.W_skip,
+    "live_hops": sum(tabs.live_hops), "dense_hops": tabs.dense_hops}))
 """
+
+
+def _measure_hlo(scfg, times, wire):
+    """Run _HLO_SCRIPT in a subprocess (keeps the parent single-device)."""
+    import json as _json
+    import os as _os
+    import subprocess
+    import sys as _sys
+    spec = {"n_enc": scfg.n_enc, "n_mid": scfg.n_mid, "n_dec": scfg.n_dec,
+            "skip_pairs": ([list(p) for p in scfg.skip_pairs]
+                           if scfg.skip_pairs else None),
+            "fwd_times": times, "wire": wire}
+    proc = subprocess.run(
+        [_sys.executable, "-c", _HLO_SCRIPT, _json.dumps(spec)],
+        capture_output=True, text=True, timeout=600,
+        env={**_os.environ,
+             "PYTHONPATH": "src:" + _os.environ.get("PYTHONPATH", "")})
+    if proc.returncode != 0:
+        err = (proc.stderr.strip().splitlines() or ["unknown"])[-1][:100]
+        raise RuntimeError(err)
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return _json.loads(line[len("RESULT "):])
+    raise RuntimeError("no RESULT line in HLO probe output")
 
 
 def run(json_sink: dict | None = None):
@@ -153,27 +188,35 @@ def run(json_sink: dict | None = None):
             f"seq1f1b={v_b.fwd_total:.0f}"
             f"_skip_share={100 * v_b.skip_bytes / max(v_b.fwd_total, 1):.0f}%")
 
-    # HLO-measured cross-check on the first asym case (subprocess keeps the
-    # parent single-device; cf. tests/helpers/comm_volume_hlo.py)
-    import subprocess
-    import sys as _sys
-    hlo = subprocess.run(
-        [_sys.executable, "-c", _ASYM_HLO_SCRIPT],
-        capture_output=True, text=True, timeout=600,
-        env={**__import__("os").environ,
-             "PYTHONPATH": "src:" + __import__("os").environ.get(
-                 "PYTHONPATH", "")})
-    if hlo.returncode == 0:
-        hlo_row = hlo.stdout.strip().splitlines()[-1]
-        rows.append(hlo_row)
-        try:
-            json_sink["hlo_collective_permute_bytes"] = int(
-                hlo_row.split(",")[1])
-        except (IndexError, ValueError):
-            pass
-    else:
-        rows.append("auto_pipeline_asym_hlo_cp_bytes,0,"
-                    f"ERROR={hlo.stderr.strip().splitlines()[-1][:80] if hlo.stderr.strip() else 'unknown'}")
+    # HLO-measured collective-permute bytes per graph + wire format
+    # (subprocess keeps the parent single-device; cf.
+    # tests/helpers/comm_volume_hlo.py).  The first case is additionally
+    # measured at the fp32-wire escape hatch — the committed regression
+    # anchor for the wire-format saving.
+    hlo_json: dict = {}
+    for i, (name, scfg, times, D) in enumerate(asym_cases):
+        wires = ("bfloat16", "float32") if i == 0 else ("bfloat16",)
+        for wire in wires:
+            try:
+                res = _measure_hlo(scfg, times, wire)
+            except Exception as e:  # noqa: BLE001
+                rows.append(f"auto_pipeline_hlo_{name}_{wire},0,"
+                            f"ERROR={str(e)[:80]}")
+                continue
+            cpb = res["collective_permute_bytes"]
+            hlo_json.setdefault(name, {})[wire] = cpb
+            rows.append(
+                f"auto_pipeline_hlo_{name}_{wire},{cpb},"
+                f"live_hops={res['live_hops']}/{res['dense_hops']}"
+                f"_W=({res['W_down']},{res['W_up']},{res['W_turn']},"
+                f"{res['W_skip']})")
+    json_sink["hlo"] = hlo_json
+    anchor = asym_cases[0][0]
+    if anchor in hlo_json and "bfloat16" in hlo_json[anchor]:
+        # legacy top-level key: the tier-1 wave differential config's
+        # measured bytes (seed baseline 9216 at fp32 every-hop wire)
+        json_sink["hlo_collective_permute_bytes"] = \
+            hlo_json[anchor]["bfloat16"]
 
     # ---- interleaved (virtual-stage) schedules: V = 1 / 2 / 4 -----------
     # Bubble fraction + simulated makespan of the synthesized schedule on
@@ -217,11 +260,36 @@ def run(json_sink: dict | None = None):
             per_v[f"v{Vdeg}"] = {"bubble": round(bub, 4),
                                  "sim_makespan": mk,
                                  "makespan_slots": sched.makespan}
-            base = per_v.get("v1", {}).get("bubble", bub)
+            # schedule-proven buffer liveness: rotating rx / skip stashes
+            # sized by the windows instead of [M] / [M, V] dense buffers
+            # (rx entries ride the bf16 wire == the graph's act
+            # denomination; the dense sizing was fp32)
+            from repro.runtime.compile import StageLayout
+            tabs = StepTables.from_schedule(sched, folded=part.folded,
+                                            devices=part.devices)
+            layout = StageLayout.from_partition(part, g)
+            m_o = max(prof.out_bytes_per_sample)
+            rx_entries = tabs.W_down + tabs.W_up
+            per_v[f"v{Vdeg}"].update({
+                "rx_entries": rx_entries,
+                "skip_entries": tabs.W_skip,
+                "rx_buffer_bytes": rx_entries * m_o,
+                "dense_rx_buffer_bytes": 2 * M * m_o * 2,
+                "skip_buffer_bytes": tabs.W_skip * layout.enc_pad * m_o,
+                "dense_skip_buffer_bytes":
+                    M * tabs.V * layout.enc_pad * m_o,
+            })
             rows.append(
                 f"auto_pipeline_interleave_{name}_d{D}_v{Vdeg},{us:.0f},"
-                f"bubble={bub:.3f}_vs_fold={base:.3f}"
+                f"bubble={bub:.3f}_vs_fold="
+                f"{per_v.get('v1', {}).get('bubble', bub):.3f}"
                 f"_sim_makespan={mk:.4g}")
+            rows.append(
+                f"auto_pipeline_buffers_{name}_d{D}_v{Vdeg},"
+                f"{rx_entries * m_o + tabs.W_skip * layout.enc_pad * m_o:.0f},"
+                f"rx_W={rx_entries}_of_{2 * M}"
+                f"_skip_W={tabs.W_skip}_of_{M * tabs.V}"
+                f"_live_hops={sum(tabs.live_hops)}_of_{tabs.dense_hops}")
         il_json[name] = per_v
     json_sink["interleave"] = il_json
 

@@ -18,6 +18,57 @@ import traceback
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_auto_pipeline.json")
 
+# Lower-is-better metrics --compare checks (anything else is
+# informational).  A new value may exceed the baseline by the tolerance
+# before it counts as a regression; metrics absent from the baseline are
+# skipped, so adding new rows never fails an old baseline.
+REGRESSION_KEYS = frozenset({
+    "hlo_collective_permute_bytes", "collective_permute_bytes",
+    "bfloat16", "float32",                      # per-graph HLO bytes
+    "bubble", "rx_buffer_bytes", "skip_buffer_bytes",
+    "rx_entries", "skip_entries",
+})
+REGRESSION_TOL = 0.05
+
+
+def _missing_metrics(old, path) -> list[str]:
+    """Gated metrics present in the baseline but absent from the new run
+    count as regressions — otherwise a probe that starts failing (and so
+    stops emitting e.g. the HLO wire-format bytes) would make the gate
+    pass vacuously."""
+    out: list[str] = []
+    if isinstance(old, dict):
+        for k, v in old.items():
+            out += _missing_metrics(v, f"{path}/{k}" if path else k)
+        return out
+    if path.rsplit("/", 1)[-1] in REGRESSION_KEYS \
+            and isinstance(old, (int, float)):
+        out.append(f"{path}: metric missing from the new run "
+                   f"(baseline {old:.6g})")
+    return out
+
+
+def compare_baseline(old, new, path="") -> list[str]:
+    """Walk two bench JSON trees; report lower-is-better regressions."""
+    regressions: list[str] = []
+    if isinstance(old, dict) and isinstance(new, dict):
+        for k, ov in old.items():
+            sub = f"{path}/{k}" if path else k
+            if k in new:
+                regressions += compare_baseline(ov, new[k], sub)
+            else:
+                regressions += _missing_metrics(ov, sub)
+        return regressions
+    key = path.rsplit("/", 1)[-1]
+    if key in REGRESSION_KEYS and isinstance(old, (int, float)) \
+            and isinstance(new, (int, float)):
+        if new > old * (1.0 + REGRESSION_TOL) + 1e-12:
+            regressions.append(
+                f"{path}: {new:.6g} vs baseline {old:.6g} "
+                f"(+{100 * (new / old - 1):.1f}% > {100 * REGRESSION_TOL:.0f}%"
+                " tolerance)" if old else f"{path}: {new:.6g} vs baseline 0")
+    return regressions
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -25,6 +76,10 @@ def main() -> None:
                     help="skip subprocess + ILP benchmarks")
     ap.add_argument("--json-out", default=BENCH_JSON,
                     help="where to write the auto-pipeline perf baseline")
+    ap.add_argument("--compare", metavar="BASELINE_JSON", default=None,
+                    help="diff the fresh run against a committed baseline "
+                         "and exit nonzero on any lower-is-better metric "
+                         f"regressing more than {100 * REGRESSION_TOL:.0f}%%")
     args = ap.parse_args()
 
     from benchmarks import (partition_balance, comm_volume, hybrid_ablation,
@@ -63,6 +118,16 @@ def main() -> None:
             json.dump(auto_pipeline_json, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.json_out}", file=sys.stderr)
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        regressions = compare_baseline(baseline, auto_pipeline_json)
+        if regressions:
+            print("PERF REGRESSIONS vs " + args.compare, file=sys.stderr)
+            for r in regressions:
+                print(f"  {r}", file=sys.stderr)
+            raise SystemExit(2)
+        print(f"no perf regressions vs {args.compare}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -3,6 +3,15 @@
 All volumes are *bytes per microbatch* unless stated otherwise.  These
 formulas are validated against byte counts parsed from compiled HLO by
 ``benchmarks/comm_volume.py`` (collective-permute operand sums).
+
+Graph ``act_bytes`` are denominated at 2 bytes/element (bf16 activations —
+see the graph builders in ``models.diffusion``).  :func:`wire_factor`
+rescales them to the executor's wire format, and
+:func:`lowered_comm_volume` prices what the table executors *actually*
+lower — live hops only (the schedule's channel-activity masks) at the wire
+dtype — against the dense pre-liveness cost (every step, both rings,
+fp32).  This is the point where the planner's model and the executor's
+measured HLO bytes are held to agree.
 """
 from __future__ import annotations
 
@@ -10,6 +19,16 @@ import dataclasses
 
 from repro.core.graph import BlockGraph
 from repro.core.partition import Partition
+
+# Bytes per element of the wire formats the lowered executors support
+# (runtime.pipeline.WIRE_DTYPES).  Graph act_bytes assume 2 (bf16).
+WIRE_BYTES = {"bfloat16": 2, "float32": 4}
+ACT_DENOM_BYTES = 2
+
+
+def wire_factor(wire_dtype: str = "bfloat16") -> float:
+    """Scale from the graph's act_bytes denomination to wire bytes."""
+    return WIRE_BYTES[wire_dtype] / ACT_DENOM_BYTES
 
 
 def naive_pp_volume(K: int, D: int, a: int) -> float:
@@ -82,3 +101,56 @@ def per_sample_volume(
     """Bytes/sample of P2P traffic for one training iteration (fwd+bwd)."""
     v = partition_comm_volume(graph, part)
     return v.train_total / max(microbatch_size, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredCommVolume:
+    """What the table executors put on the ring for one iteration's
+    forward pass, as lowered from the schedule's channel-activity masks.
+
+    ``live_hops`` counts (device, step, ring) hops that carry a message;
+    ``dense_hops`` is what the pre-liveness lowering paid (every step,
+    both rings); ``payload_bytes`` is the boundary activation size at the
+    graph's 2-byte/element denomination.
+    """
+
+    live_hops: int
+    dense_hops: int
+    payload_bytes: float
+    wire_dtype: str = "bfloat16"
+
+    @property
+    def hop_bytes(self) -> float:
+        return self.payload_bytes * wire_factor(self.wire_dtype)
+
+    @property
+    def fwd_total(self) -> float:
+        return self.live_hops * self.hop_bytes
+
+    @property
+    def train_total(self) -> float:
+        # backward hops mirror the forward ones through the cast/ppermute
+        # transposes, at the same wire dtype
+        return 2.0 * self.fwd_total
+
+    @property
+    def dense_fp32_total(self) -> float:
+        """The pre-liveness executor's cost: every-step/both-rings fp32."""
+        return self.dense_hops * self.payload_bytes * wire_factor("float32")
+
+
+def lowered_comm_volume(tables, payload_bytes: float,
+                        wire_dtype: str = "bfloat16") -> LoweredCommVolume:
+    """Price a lowered schedule's actual ring traffic.
+
+    ``tables`` is duck-typed on the
+    :class:`~repro.runtime.schedule_exec.StepTables` activity analysis
+    (``live_hops`` / ``dense_hops``) so the planning layer never imports
+    the runtime; ``payload_bytes`` is the boundary activation size
+    (``StageProfile.out_bytes_per_sample`` x microbatch size).
+    """
+    down, up = tables.live_hops
+    return LoweredCommVolume(live_hops=down + up,
+                             dense_hops=tables.dense_hops,
+                             payload_bytes=payload_bytes,
+                             wire_dtype=wire_dtype)

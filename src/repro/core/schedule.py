@@ -188,6 +188,48 @@ def placement_bounds_error(p: Placement, S: int, M: int, D: int
         return f"negative step {p.step}"
     return None
 
+def slot_maps(S: int, D: int, folded: bool,
+              device_of_stage: Callable[[int], int]
+              ) -> tuple[int, dict[int, int], dict[int, int]]:
+    """(V, enc_slot_of_stage, dec_slot_of_stage) for a stage->device map.
+
+    A device's stages of one kind (encoder-half s < S/2, decoder-half
+    otherwise; everything is 'encoder' for linear pipelines), sorted by
+    stage id, occupy slots 0..V-1.  Every device must hold the same slot
+    count per kind — the SPMD executors run one program with [V, pad, ...]
+    parameter stacks, so a ragged slot layout is unliftable and raises
+    here with per-device context.
+    """
+    half = S // 2 if folded else S
+    enc_by_dev: dict[int, list[int]] = {}
+    dec_by_dev: dict[int, list[int]] = {}
+    for s in range(S):
+        (enc_by_dev if s < half else dec_by_dev).setdefault(
+            device_of_stage(s), []).append(s)
+    counts = {d: (len(enc_by_dev.get(d, ())), len(dec_by_dev.get(d, ())))
+              for d in range(D)}
+    kinds = set(counts.values())
+    ok = len(kinds) == 1
+    if ok:
+        e, c = next(iter(kinds))
+        ok = e > 0 and ((e == c) if folded else (c == 0))
+    if not ok:
+        detail = ", ".join(
+            f"device {d}: {e} prefix-half + {c} suffix-half slots"
+            if folded else f"device {d}: {e} stage slots"
+            for d, (e, c) in sorted(counts.items()))
+        raise ValueError(
+            f"stage->device mapping is not an even interleave over D={D} "
+            f"devices ({detail}); the table executors need V equal slots "
+            "per device and kind")
+    V = next(iter(kinds))[0]
+    enc_slot = {s: k for ss in enc_by_dev.values()
+                for k, s in enumerate(sorted(ss))}
+    dec_slot = {s: k for ss in dec_by_dev.values()
+                for k, s in enumerate(sorted(ss))}
+    return V, enc_slot, dec_slot
+
+
 def _slot_context(S: int, device_of_stage: Callable[[int], int] | None,
                   folded: bool = False) -> Callable[[int], str]:
     """Virtual task -> ``[stage s = device d enc slot k/V, wave w]`` label.

@@ -11,6 +11,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Sequence
 
+from repro.core.comm_model import WIRE_BYTES, wire_factor
 from repro.core.graph import BlockGraph
 from repro.core.hw import Hardware, TPU_V5E
 from repro.core import partition as part_mod
@@ -67,7 +68,8 @@ class TunerChoice:
 
 def peak_memory(
     prof: StageProfile, P: int, b: int, *, wave: bool, V: int = 1,
-    param_state_factor: float = 7.0
+    param_state_factor: float = 7.0,
+    windows: tuple[int, int] | None = None, wire_bytes: int = 2,
 ) -> float:
     """Eq. (14).  The busiest devices are the innermost collocated pair
     (stages P-1 and P, 0-indexed) which retain activations for all
@@ -75,11 +77,27 @@ def peak_memory(
 
     ``V > 1`` prices the interleaved layout instead: each device carries
     ``2V`` (``V`` linear) stage slots whose parameter/activation stacks
-    are padded to the *largest* slot, plus one extra in-flight boundary
-    activation per additional slot pair (the table executors' per-slot
-    receive state) — the memory side of the bubble-vs-V trade-off the
-    tuner searches over.
+    are padded to the *largest* slot — the memory side of the
+    bubble-vs-V trade-off the tuner searches over.
+
+    ``windows = (W_rx, W_turn)`` replaces the dense in-flight boundary
+    term (``P`` / ``P + 2V - 2`` activations) with the liveness windows
+    the schedule lowering proved: ``W_rx`` receive-buffer entries at
+    ``wire_bytes``/element (the wire format of the hops) plus two ring
+    registers, and ``W_turn`` turnaround entries at fp32.  ``tune``
+    passes the lowered windows, so smaller proven footprints admit larger
+    microbatches on memory-bound candidates.  Without windows the dense
+    pre-liveness sizing is priced (back-compat / no schedule yet).
     """
+    from repro.core.comm_model import ACT_DENOM_BYTES
+
+    def boundary_term(m_out: float, dense_count: float) -> float:
+        if windows is None:
+            return dense_count * m_out * b
+        w_rx, w_turn = windows
+        return m_out * b * ((w_rx + 2) * wire_bytes / ACT_DENOM_BYTES
+                            + w_turn * 4 / ACT_DENOM_BYTES)
+
     if V > 1:
         slots = 2 * V if wave else V
         m_theta = slots * max(prof.param_bytes)
@@ -87,7 +105,7 @@ def peak_memory(
         m_out = max(prof.out_bytes_per_sample)
         return (param_state_factor * m_theta
                 + P * m_act * b
-                + (P + slots - 2) * m_out * b)
+                + boundary_term(m_out, P + slots - 2))
     if wave:
         i, j = P - 1, P  # innermost pair on the same device
         m_theta = prof.param_bytes[i] + prof.param_bytes[j]
@@ -101,7 +119,7 @@ def peak_memory(
     return (
         param_state_factor * m_theta
         + P * m_act * b
-        + P * m_out * b
+        + boundary_term(m_out, P)
     )
 
 
@@ -114,7 +132,7 @@ def t_allreduce(param_bytes: float, G: int, hw: Hardware) -> float:
 
 def t_sched_paper(
     prof: StageProfile, P: int, b: int, G: int, hw: Hardware,
-    *, M: int | None = None, V: int = 1,
+    *, M: int | None = None, V: int = 1, wire_dtype: str = "bfloat16",
 ) -> float:
     """Eq. (15): (10P-4) T_f(b) + (10P-12)(t_lat + b M_o / B) + T_AR.
 
@@ -134,11 +152,18 @@ def t_sched_paper(
     fill/drain ramp ``4P * t_f`` shrinks ~1/V, and the p2p event count
     grows ~V — exactly the bubble-vs-communication trade the interleave
     axis searches.  V = 1 is Eq. (15) verbatim.
+
+    ``wire_dtype`` prices the boundary hops at the executor's wire format
+    (``m_o`` is denominated at 2 bytes/element, so bf16 — the default —
+    is a factor of 1 and fp32-wire doubles the hop bytes).  Until the
+    liveness lowering landed, the table executors paid fp32 on every hop
+    while this model priced bf16 — the executors now pay what Eq. (15)
+    prices.
     """
     if M is None:
         M = P
     t_f = max(prof.fwd_time_per_sample) * b
-    m_o = max(prof.out_bytes_per_sample) * b
+    m_o = max(prof.out_bytes_per_sample) * b * wire_factor(wire_dtype)
     m_theta = max(prof.param_bytes)
     p2p = hw.t_lat + m_o / hw.inter_bw
     return (
@@ -152,7 +177,7 @@ def t_sched_simulated(
     prof: StageProfile, P: int, b: int, G: int, hw: Hardware,
     *, microbatches: int, wave: bool,
     part: "part_mod.Partition | None" = None,
-    sched=None,
+    sched=None, wire_dtype: str = "bfloat16",
 ) -> float:
     """Higher-fidelity alternative: event-driven simulation of the actual
     schedule with per-stage durations (beyond-paper option).  With a
@@ -168,7 +193,7 @@ def t_sched_simulated(
             sched = (template_wave(P, microbatches) if wave
                      else template_1f1b(P, microbatches))
     times = [t * b for t in prof.fwd_time_per_sample]
-    m_o = max(prof.out_bytes_per_sample) * b
+    m_o = max(prof.out_bytes_per_sample) * b * wire_factor(wire_dtype)
     mk, _ = simulate(sched, times, bwd_ratio=2.0,
                      p2p_time=hw.t_lat + m_o / hw.inter_bw)
     return mk + t_allreduce(max(prof.param_bytes), G, hw)
@@ -185,6 +210,7 @@ def tune(
     microbatches_per_iter: Callable[[int], int] | None = None,
     drops: list[str] | None = None,
     interleave_options: Sequence[int] | None = None,
+    wire_dtype: str = "bfloat16",
 ) -> list[TunerChoice]:
     """Enumerate (P, G, b) — and the interleave degree V for wave plans —
     and return all feasible choices, best first.
@@ -209,6 +235,14 @@ def tune(
     here, at the point each filter fires, so error reports read facts
     rather than re-simulating the filter (``auto_pipeline`` surfaces them
     when nothing survives).
+
+    Every P > 1 candidate's schedule is synthesized and lowered to step
+    tables here, so (a) ``peak_memory`` is checked against the
+    schedule-proven liveness windows (rotating rx/turn buffers, not the
+    dense ``O(P)`` in-flight sizing — memory-bound candidates admit
+    larger microbatches) at ``wire_dtype`` hop bytes, and (b) plans whose
+    schedule the executors cannot realize are dropped with a reason
+    instead of failing later in ``auto_pipeline``.
     """
     if microbatches_per_iter is None:
         microbatches_per_iter = lambda P: max(P, 1)
@@ -241,13 +275,35 @@ def tune(
             M = microbatches_per_iter(P)
             # the synthesized schedule depends on (part, M) only — hoist
             # it out of the b sweep (the interleaved portfolio race is
-            # the expensive part of simulation scoring)
-            sim_sched = (schedule_for_partition(part, M)
-                         if use_simulation and P > 1 else None)
+            # the expensive part of simulation scoring), and lower it to
+            # step tables for the liveness windows peak_memory prices
+            sched = None
+            windows = None
+            if P > 1:
+                # Deliberate layering exception: the windows charged here
+                # must be EXACTLY the buffers the executor will allocate,
+                # so the tuner reuses the executors' own (memoized)
+                # lowering instead of re-deriving the liveness analysis
+                # in core and risking divergence.  The import stays lazy
+                # so planning modules don't pull jax in at import time.
+                from repro.runtime.schedule_exec import StepTables
+                try:
+                    sched = schedule_for_partition(part, M)
+                    tabs = StepTables.from_schedule(
+                        sched, folded=bool(getattr(part, "folded", False)),
+                        devices=part.devices)
+                except (ValueError, RuntimeError) as e:
+                    if drops is not None:
+                        drops.append(f"{vtag}: schedule synthesis/lowering "
+                                     f"infeasible: {e}")
+                    continue
+                windows = (tabs.W_down + tabs.W_up, tabs.W_turn)
             b = 1
             while b <= max_microbatch:
                 mem = peak_memory(prof, max(P, 1), b,
-                                  wave=wave and P > 1, V=V)
+                                  wave=wave and P > 1, V=V,
+                                  windows=windows,
+                                  wire_bytes=WIRE_BYTES[wire_dtype])
                 if mem >= hw.mem_limit:
                     if b == 1 and drops is not None:
                         drops.append(
@@ -258,9 +314,11 @@ def tune(
                 if use_simulation and P > 1:
                     t_iter = t_sched_simulated(prof, P, b, G, hw,
                                                microbatches=M, wave=wave,
-                                               part=part, sched=sim_sched)
+                                               part=part, sched=sched,
+                                               wire_dtype=wire_dtype)
                 elif P > 1:
-                    t_iter = t_sched_paper(prof, P, b, G, hw, M=M, V=V)
+                    t_iter = t_sched_paper(prof, P, b, G, hw, M=M, V=V,
+                                           wire_dtype=wire_dtype)
                 else:
                     # pure DP: compute + all-reduce
                     t_f = sum(prof.fwd_time_per_sample) * b

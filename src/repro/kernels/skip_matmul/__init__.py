@@ -1,2 +1,3 @@
-from repro.kernels.skip_matmul.ops import skip_concat_matmul
+from repro.kernels.skip_matmul.ops import (skip_concat_matmul,
+                                           skip_concat_matmul_supported)
 from repro.kernels.skip_matmul.ref import skip_concat_matmul_reference

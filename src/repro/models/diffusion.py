@@ -25,6 +25,8 @@ import jax.numpy as jnp
 
 from repro.core.graph import Block, BlockGraph, SkipEdge
 from repro.core.hw import Hardware, TPU_V5E
+from repro.kernels.skip_matmul import (skip_concat_matmul,
+                                       skip_concat_matmul_supported)
 from repro.models import layers as L
 from repro.models.layers import AttnConfig, Params, Array
 
@@ -78,6 +80,7 @@ class UViTConfig:
     d_ff: int = 2048
     n_classes: int = 1001         # class-conditional (UViT on ImageNet)
     norm_eps: float = 1e-6
+    use_skip_kernel: bool = False  # fused Pallas skip-in (see _skip_project)
     dtype: Any = jnp.float32
     param_dtype: Any = jnp.float32
 
@@ -124,11 +127,29 @@ def _init_vit_block(key, cfg, d_ff: int, with_skip: bool,
     return p
 
 
+def _skip_project(p: Params, x: Array, skip: Array, cfg) -> Array:
+    """Decoder skip-in projection: ``y = [x | skip] @ skip_proj``.
+
+    With ``cfg.use_skip_kernel`` the fused Pallas kernel
+    (``h @ W1 + s @ W2``, f32 accumulation; interpret mode off-TPU)
+    replaces the concat matmul — the concat materialises the ``(.., 2D)``
+    activation in HBM just to read it back once.  Falls back to the
+    reference contraction when the operand shapes do not tile the
+    kernel's 128-square MXU blocks.
+    """
+    w = p["skip_proj"].astype(x.dtype)
+    if getattr(cfg, "use_skip_kernel", False) and \
+            skip_concat_matmul_supported(math.prod(x.shape[:-1]),
+                                         x.shape[-1], w.shape[1]):
+        return skip_concat_matmul(x, skip.astype(x.dtype), w)
+    return jnp.concatenate([x, skip], axis=-1) @ w
+
+
 def _apply_vit_block(p: Params, x: Array, cfg, *, skip: Array | None = None,
                      ctx: Array | None = None, temb: Array | None = None
                      ) -> Array:
     if skip is not None:
-        x = jnp.concatenate([x, skip], axis=-1) @ p["skip_proj"].astype(x.dtype)
+        x = _skip_project(p, x, skip, cfg)
     if temb is not None and "ada" in p:
         mods = (jax.nn.silu(temb) @ p["ada"].astype(temb.dtype))[:, None]
         s1, b1, g1, s2, b2, g2 = jnp.split(mods, 6, axis=-1)
@@ -270,6 +291,7 @@ class HunyuanDiTConfig:
     ctx_dim: int = 1024           # CLIP+T5 text embedding dim (stub input)
     ctx_len: int = 77
     norm_eps: float = 1e-6
+    use_skip_kernel: bool = False  # fused Pallas skip-in (see _skip_project)
     dtype: Any = jnp.float32
     param_dtype: Any = jnp.float32
 

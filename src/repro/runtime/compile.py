@@ -236,6 +236,17 @@ class StageLayout:
             rows[d][dst_slot][dec_row] = src_slot * enc_pad + enc_row
         return tuple(tuple(map(tuple, dev_rows)) for dev_rows in rows)
 
+    def skip_consumers(self) -> tuple[tuple[tuple[int, ...], ...], ...]:
+        """Per (device, dec slot): the encoder slots whose stash entries
+        the decoder slot actually consumes (from ``skip_rows``).  Feeds
+        the lowering's skip-liveness analysis: entries no decoder slot
+        names are dead stores and their stash lifetime ends at the last
+        *naming* decoder task, not the device's last decoder task."""
+        return tuple(
+            tuple(tuple(sorted({r // self.enc_pad for r in rows if r >= 0}))
+                  for rows in dev)
+            for dev in self.skip_rows)
+
     # ---- (device, slot) -> block-row ranges ----------------------------
     def enc_ranges(self) -> list[list[tuple[int, int]]]:
         cuts = self.partition.cuts
@@ -357,6 +368,21 @@ class CompiledPipeline:
     def init_pipeline_params(self, key) -> tuple:
         return self.split_params(self.model_fns.init_fn(key))
 
+    # ---- lowering artefacts --------------------------------------------
+    def step_tables(self):
+        """The lowered :class:`~repro.runtime.schedule_exec.StepTables`
+        (memoized): step programs, channel activity masks and the proven
+        liveness windows (W_down/W_up/W_turn/W_skip) the executors size
+        their rotating buffers by."""
+        from repro.runtime.schedule_exec import StepTables
+        if not self.folded:
+            return StepTables.from_schedule(
+                self.schedule, folded=False,
+                devices=self.partition.devices)
+        return StepTables.from_schedule(
+            self.schedule, folded=True, devices=self.partition.devices,
+            skip_consumers=self.layout.skip_consumers())
+
     # ---- executor ------------------------------------------------------
     def build(self) -> Callable:
         """Lower to an executor.
@@ -422,7 +448,8 @@ class CompiledPipeline:
                     pcfg, self.schedule, embed_fn=fns.embed_fn,
                     enc_stage_fn=enc_stage_fn, dec_stage_fn=dec_stage_fn,
                     loss_fn=fns.loss_fn,
-                    devices=self.partition.devices)
+                    devices=self.partition.devices,
+                    skip_consumers=layout.skip_consumers())
 
             flat_enc = tuple(c[0] for c in layout.enc_counts)
             flat_dec = tuple(c[0] for c in layout.dec_counts)
@@ -529,6 +556,14 @@ class CompiledPipeline:
             f"bubble={sched.bubble_ratio():.2f}",
             f"  executor: {self.executor}",
         ]
+        if self.executor == "table":
+            tabs = self.step_tables()
+            live_d, live_u = tabs.live_hops
+            lines.append(
+                f"  wire: {self.pcfg.wire_dtype}, live hops "
+                f"{live_d}+{live_u}/{tabs.dense_hops} (down+up/dense), "
+                f"windows W_down={tabs.W_down} W_up={tabs.W_up} "
+                f"W_turn={tabs.W_turn} W_skip={tabs.W_skip} (M={sched.M})")
         if self.choice is not None:
             c = self.choice
             lines.append(f"  tuner: P={c.P} G={c.G} b={c.b} M={c.M} "
@@ -557,6 +592,7 @@ def auto_pipeline(
     remat_policy: str | None = None,
     use_ilp: bool = False,
     executor: str = "table",
+    wire_dtype: str = "bfloat16",
 ) -> CompiledPipeline:
     """Plan, schedule, and lower a pipeline for ``graph`` on ``N`` devices.
 
@@ -578,6 +614,12 @@ def auto_pipeline(
     ``"closed_form"`` uses the hand-written wave/1F1B executors as
     differential references (these require M >= D and V = 1 for folded
     plans).
+
+    ``wire_dtype`` sets the boundary-hop dtype of the table executors
+    (default bf16 — cast-on-send, fp32 compute; backward hops ride the
+    same dtype through the cast transposes).  ``"float32"`` is the
+    exact-wire escape hatch the strict differential tests pin; closed-form
+    executors are always fp32-wire references.
     """
     choice: TunerChoice | None = None
     if pipeline_devices is not None:
@@ -628,7 +670,8 @@ def auto_pipeline(
 
     pcfg = PipelineConfig(num_devices=D, num_microbatches=M,
                           data_axes=data_axes, dp_size=dp_size,
-                          remat=remat, remat_policy=remat_policy)
+                          remat=remat, remat_policy=remat_policy,
+                          wire_dtype=wire_dtype)
     layout = StageLayout.from_partition(part, graph)
     return CompiledPipeline(graph=graph, partition=part, schedule=sched,
                             layout=layout, pcfg=pcfg, model_fns=model_fns,

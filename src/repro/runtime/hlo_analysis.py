@@ -1,8 +1,9 @@
 """Compiled-HLO analysis: collective bytes, per-op breakdowns, roofline terms.
 
 ``collective_bytes`` parses an HLO module's text (from ``lowered.as_text()``
-or ``compiled.as_text()``) and sums the output-shape bytes of every
-collective op, grouped by kind.  Notes:
+or ``compiled.as_text()``; both the classic HLO and StableHLO syntaxes are
+recognized) and sums the output-shape bytes of every collective op, grouped
+by kind.  Notes:
 
 - Ops inside ``while`` bodies are counted ONCE (XLA emits the body once);
   callers that know the trip structure (pipeline ticks, layer scans) must
@@ -12,6 +13,11 @@ collective op, grouped by kind.  Notes:
 - For all-reduce, bytes are counted once (output size); ring implementations
   move ~2x(N-1)/N of that per device — the roofline model applies the ring
   factor separately.
+- Wire-format measurements (the bf16 boundary hops of the table executors)
+  must parse the *lowered* module: XLA's CPU float-normalization pass
+  legalizes sub-fp32 collectives by upcasting them, so ``compiled.as_text()``
+  on host-simulated devices reports fp32 shapes that a real TPU/GPU (whose
+  collectives move bf16 natively) never pays.
 """
 from __future__ import annotations
 
@@ -39,6 +45,53 @@ _OP_RE = re.compile(
     r"\(")
 
 _SHAPE_RE = re.compile(r"(?P<dt>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+
+# StableHLO:  %71 = "stablehlo.collective_permute"(%70) <{...}>
+#             : (tensor<1x18x32xbf16>) -> tensor<1x18x32xbf16>
+# Region-bearing collectives (all_reduce, reduce_scatter) carry their
+# reduction computation in a `({ ... })` block, so the op name and the
+# result type sit on DIFFERENT lines — and the region body's own ops have
+# `->` type signatures that must not be mistaken for the collective's.
+# _iter_stablehlo_collectives therefore scans line-wise and, for a
+# region-bearing op, takes the type signature from the region's closing
+# `}) : (...) -> ...` line.
+_STABLEHLO_NAME_RE = re.compile(
+    r"\"stablehlo\.(?P<kind>all_gather|all_reduce|reduce_scatter|"
+    r"all_to_all|collective_permute)\"")
+
+_STABLEHLO_TENSOR_RE = re.compile(
+    r"tensor<(?P<dims>(?:[0-9]+x)*)(?P<dt>[a-z][a-z0-9]*)>")
+
+
+def _iter_stablehlo_collectives(hlo_text: str):
+    """Yield (kind, result-type string) for every StableHLO collective."""
+    lines = hlo_text.splitlines()
+    for i, line in enumerate(lines):
+        m = _STABLEHLO_NAME_RE.search(line)
+        if m is None:
+            continue
+        sig = line if "->" in line else None
+        if sig is None:
+            for j in range(i + 1, len(lines)):
+                if lines[j].lstrip().startswith("})") and "->" in lines[j]:
+                    sig = lines[j]
+                    break
+        if sig is not None:
+            yield m.group("kind"), sig.rsplit("->", 1)[1]
+
+
+def _stablehlo_shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _STABLEHLO_TENSOR_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group("dims").split("x"):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
 
 
 def _shape_bytes(shape_str: str) -> int:
@@ -79,6 +132,9 @@ def collective_bytes(hlo_text: str) -> CollectiveStats:
         b = _shape_bytes(m.group("shape"))
         by_kind[kind] += b
         cnt[kind] += 1
+    for kind, shape in _iter_stablehlo_collectives(hlo_text):
+        by_kind[kind.replace("_", "-")] += _stablehlo_shape_bytes(shape)
+        cnt[kind.replace("_", "-")] += 1
     return CollectiveStats(dict(by_kind), dict(cnt))
 
 

@@ -24,22 +24,44 @@ invisible.  This module makes the Schedule the single source of truth:
    shard_map executors.  The scan body reads its (selector, slot,
    microbatch, receive slot, loss mask) from the precomputed per-device
    arrays; parameters carry a leading ``[V, pad, ...]`` slot axis indexed
-   per step, incoming activations live in microbatch-indexed buffers and
-   each device's skip stash in a (microbatch, slot)-indexed buffer, and
-   the rings wrap so interleaved slot boundaries cross device D-1 -> 0.
-   Any *valid* schedule — including ILP schedules whose step timing
-   differs from the greedy templates, and interleaved V > 1 plans —
-   executes exactly as synthesized.
+   per step and the rings wrap so interleaved slot boundaries cross
+   device D-1 -> 0.  Any *valid* schedule — including ILP schedules whose
+   step timing differs from the greedy templates, and interleaved V > 1
+   plans — executes exactly as synthesized.
 
 Backward placements (virtual stage >= S) are realized by JAX autodiff as
 the transposed scan, mirroring the forward order — the same convention as
 the closed-form executors (paper Figs. 8/9 backward halves).
 
-Cost model vs the closed forms: the table executors ppermute both ring
-directions every step and carry ``O(M)`` activation buffers (the closed
-forms carry one register per direction), trading peak memory for complete
-schedule generality.  The closed forms remain available as differential
-references via ``auto_pipeline(..., executor="closed_form")``.
+Communication & memory lowering: the step tables are the source of truth
+for *what moves and what is resident*, not just execution order.
+``StepTables.from_schedule`` additionally runs a per-step, per-ring
+**channel activity analysis** (``down_send`` / ``up_send``: which
+(device, step) hops actually carry a message) and a **liveness-window
+analysis** (first-fit interval coloring of every message / turnaround /
+skip-stash lifetime).  The executors lower these directly:
+
+- quiescent hops are zero-masked (a dead step's payload — and, via the
+  ``where`` transpose, its backward cotangent — is all-zeros), and a ring
+  no schedule message ever rides is elided from the scan body entirely;
+- receive / turnaround / skip-stash buffers are *rotating* buffers sized
+  by the proven windows ``W_down`` / ``W_up`` / ``W_turn`` / ``W_skip``
+  (the max simultaneously-live entries per channel) instead of
+  microbatch-indexed ``O(M)`` arrays, with store/read slots precomputed
+  per step; skip-stash entries no decoder row ever consumes are dead
+  stores and are never written;
+- boundary activations cross the wire in ``PipelineConfig.wire_dtype``
+  (default bf16; compute stays fp32 — cast-on-send, upcast-on-read).
+  The transposed scan converts cotangents through the same casts, so
+  backward hops ride the wire dtype symmetrically.  ``wire_dtype=
+  "float32"`` is the escape hatch the exact differential tests pin
+  (see README "Wire format & buffer liveness" for tolerance guidance).
+
+The closed-form executors remain fp32-wire, O(1)-register differential
+references via ``auto_pipeline(..., executor="closed_form")``;
+``core.comm_model.lowered_comm_volume`` prices exactly the live hops and
+wire bytes lowered here, and the tuner's ``peak_memory`` consumes the
+same windows.
 """
 from __future__ import annotations
 
@@ -51,55 +73,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.schedule import Schedule, placement_bounds_error
-from repro.runtime.pipeline import (PipelineConfig, _wrap_remat, ring_perms,
-                                    tree_index, tree_local)
+from repro.core.schedule import (Schedule, placement_bounds_error,
+                                 slot_maps)
+from repro.runtime.pipeline import (WIRE_DTYPES, PipelineConfig,
+                                    _wrap_remat, ring_perms, tree_index,
+                                    tree_local)
 
 Pytree = Any
 
 IDLE, RUN_ENC, RUN_DEC = 0, 1, 2
 
 
-def _slot_maps(S: int, D: int, folded: bool,
-               device_of_stage: Callable[[int], int]
-               ) -> tuple[int, dict[int, int], dict[int, int]]:
-    """(V, enc_slot_of_stage, dec_slot_of_stage) for a stage->device map.
+def _color_intervals(ivs) -> tuple[dict[tuple[int, int], int], int]:
+    """First-fit interval coloring by start step.
 
-    A device's stages of one kind (encoder-half s < S/2, decoder-half
-    otherwise; everything is 'encoder' for linear pipelines), sorted by
-    stage id, occupy slots 0..V-1.  Every device must hold the same slot
-    count per kind — the SPMD executors run one program with [V, pad, ...]
-    parameter stacks, so a ragged slot layout is unliftable and raises
-    here with per-device context.
+    ``ivs`` is a list of closed ``(start, end)`` step intervals on ONE
+    device's channel; a slot is reusable only *strictly after* its last
+    read (stores happen before reads within a step, so an entry arriving
+    at the step its slot was last read would clobber it).  First-fit on
+    start-sorted intervals is optimal for interval graphs, so the slot
+    count equals the max number of simultaneously-live entries — the
+    liveness window W the property tests cross-check against an
+    event-driven replay.
     """
-    half = S // 2 if folded else S
-    enc_by_dev: dict[int, list[int]] = {}
-    dec_by_dev: dict[int, list[int]] = {}
-    for s in range(S):
-        (enc_by_dev if s < half else dec_by_dev).setdefault(
-            device_of_stage(s), []).append(s)
-    counts = {d: (len(enc_by_dev.get(d, ())), len(dec_by_dev.get(d, ())))
-              for d in range(D)}
-    kinds = set(counts.values())
-    ok = len(kinds) == 1
-    if ok:
-        e, c = next(iter(kinds))
-        ok = e > 0 and ((e == c) if folded else (c == 0))
-    if not ok:
-        detail = ", ".join(
-            f"device {d}: {e} prefix-half + {c} suffix-half slots"
-            if folded else f"device {d}: {e} stage slots"
-            for d, (e, c) in sorted(counts.items()))
-        raise ValueError(
-            f"stage->device mapping is not an even interleave over D={D} "
-            f"devices ({detail}); the table executors need V equal slots "
-            "per device and kind")
-    V = next(iter(kinds))[0]
-    enc_slot = {s: k for ss in enc_by_dev.values()
-                for k, s in enumerate(sorted(ss))}
-    dec_slot = {s: k for ss in dec_by_dev.values()
-                for k, s in enumerate(sorted(ss))}
-    return V, enc_slot, dec_slot
+    ends: list[int] = []                 # slot -> last occupied step
+    out: dict[tuple[int, int], int] = {}
+    for s, e in sorted(ivs):
+        for i, last in enumerate(ends):
+            if last < s:
+                ends[i] = e
+                out[(s, e)] = i
+                break
+        else:
+            out[(s, e)] = len(ends)
+            ends.append(e)
+    return out, len(ends)
 
 
 # ===========================================================================
@@ -123,21 +131,41 @@ class StepTables:
       runs (0 for classic V=1 plans; interleaved plans index the [V, pad]
       parameter stacks and per-slot count/pairing tables with it).
     - ``mb``: microbatch of the slot (0 when idle — never read).
-    - ``down_mb`` / ``down_valid``: receive slot for the down-ring channel
-      at the *start* of the step (what the upstream device sent last step).
-    - ``up_mb`` / ``up_valid``: same for the up-ring channel.
+    - ``down_mb`` / ``down_valid``: arrival on the down-ring channel at the
+      *start* of the step (what the upstream device sent last step), with
+      the microbatch for introspection; ``up_mb`` / ``up_valid`` the same
+      for the up ring.  ``down_slot`` / ``up_slot`` give the rotating
+      receive-buffer slot the arrival is stored into, and ``rx_slot`` the
+      slot the step's *running* task reads its input from (undefined — 0 —
+      on embed / turnaround-read / idle steps, where the buffers are not
+      consulted).
+    - ``down_send`` / ``up_send``: this device's hop on the ring actually
+      carries a message this step (the channel activity analysis); on
+      quiescent steps the executors send zeros and the transposed scan
+      carries zero cotangents.
     - ``loss``: slot computes the final-stage output and emits the loss.
     - ``embed`` / ``turn_rd`` / ``turn_wr``: the slot runs stage 0 (embeds
       its input), the first decoder-half stage (reads the local turn
       buffer) or the last encoder-half stage (writes it).  With V > 1 a
       device runs several enc/dec slots, so these are per-(device, step)
       facts, not per-device ones — ``embed_device`` / ``turn_device`` stay
-      as informational summaries.
+      as informational summaries.  ``turn_wr_slot`` / ``turn_rd_slot``
+      give the rotating turn-buffer slot written / read.
+    - ``skip_wr`` / ``skip_wr_slot``: the encoder slot's skip stash is
+      live (some decoder row consumes it — dead stores are elided) and
+      where it goes; ``skip_rd_slot[d, t, v]`` is the stash slot holding
+      encoder-slot ``v``'s entry for the decoder task's microbatch
+      (gathered into the ``[V * enc_pad]`` flat view
+      ``StageLayout.skip_rows`` addresses).
+    - ``W_down`` / ``W_up`` / ``W_turn`` / ``W_skip``: the proven liveness
+      windows — max simultaneously-live entries per channel across
+      devices; the executors allocate exactly these many buffer slots.
     """
 
     D: int
     M: int
     V: int
+    rings: int                     # 2 folded (down + up), 1 linear
     forward_steps: tuple[int, ...]
     sel: np.ndarray
     slot: np.ndarray
@@ -150,6 +178,21 @@ class StepTables:
     embed: np.ndarray
     turn_rd: np.ndarray
     turn_wr: np.ndarray
+    # ---- channel activity + liveness lowering --------------------------
+    down_send: np.ndarray
+    up_send: np.ndarray
+    down_slot: np.ndarray
+    up_slot: np.ndarray
+    rx_slot: np.ndarray
+    turn_wr_slot: np.ndarray
+    turn_rd_slot: np.ndarray
+    skip_wr: np.ndarray
+    skip_wr_slot: np.ndarray
+    skip_rd_slot: np.ndarray
+    W_down: int
+    W_up: int
+    W_turn: int
+    W_skip: int
     embed_device: int = 0
     turn_device: int = -1
 
@@ -157,34 +200,58 @@ class StepTables:
     def num_steps(self) -> int:
         return self.sel.shape[1]
 
+    @property
+    def live_hops(self) -> tuple[int, int]:
+        """(down, up) hops that actually carry a message (fwd pass)."""
+        return int(self.down_send.sum()), int(self.up_send.sum())
+
+    @property
+    def dense_hops(self) -> int:
+        """Hops the pre-liveness lowering paid: every ring, every step."""
+        return self.rings * self.D * self.num_steps
+
     @classmethod
     def from_schedule(cls, sched: Schedule, *, folded: bool,
                       device_of_stage=None,
-                      devices: tuple[int, ...] | None = None) -> "StepTables":
+                      devices: tuple[int, ...] | None = None,
+                      skip_consumers=None) -> "StepTables":
         """Lower a schedule's forward placements to step tables.
 
         ``device_of_stage`` is the partition's *explicit* stage->device
         mapping; when omitted the canonical placements (mirror fold /
         identity, or their V-fold interleaved generalization) are assumed.
         Pass the mapping as a ``devices`` *tuple* instead to memoize the
-        lowering per (schedule, folded, devices) — the tuner's candidate
-        loop and repeated ``auto_pipeline`` calls then reuse the
-        O(S*M*steps) extraction.  Raises ``ValueError`` on any shape the
-        synchronous scan cannot realize (malformed placements, a stage
-        mapped off the ring neighbourhood its messages need, double-booked
-        channels, a consumer scheduled before its input can arrive) — the
+        lowering per (schedule, folded, devices, skip_consumers) — the
+        tuner's candidate loop and repeated ``auto_pipeline`` calls then
+        reuse the O(S*M*steps) extraction.
+
+        ``skip_consumers[d][dec_slot]`` optionally lists the encoder slots
+        whose stash entries device ``d``'s decoder slot actually consumes
+        (``StageLayout`` derives this from the graph's skip edges — see
+        ``runtime.compile``).  Without it the analysis is conservative:
+        every decoder slot may read every encoder slot, so stash entries
+        stay live until the device's last decoder task of the microbatch.
+        With it, unconsumed entries become dead stores (never written) and
+        the skip window shrinks on sparse graphs.  Must be nested tuples
+        when combined with ``devices`` (the memoization key).
+
+        Raises ``ValueError`` on any shape the synchronous scan cannot
+        realize (malformed placements, a stage mapped off the ring
+        neighbourhood its messages need, double-booked channels, a
+        consumer scheduled before its input can arrive) — the
         planner/executor mismatches the closed forms used to hide surface
         here.
         """
         if devices is not None:
             if device_of_stage is not None:
                 raise ValueError("pass device_of_stage or devices, not both")
-            return _tables_cached(sched, folded, tuple(devices))
-        return cls._build(sched, folded, device_of_stage)
+            return _tables_cached(sched, folded, tuple(devices),
+                                  skip_consumers)
+        return cls._build(sched, folded, device_of_stage, skip_consumers)
 
     @classmethod
     def _build(cls, sched: Schedule, folded: bool,
-               device_of_stage) -> "StepTables":
+               device_of_stage, skip_consumers=None) -> "StepTables":
         S, M, D = sched.S, sched.M, sched.D
         if (S % (2 * D) if folded else S % D) != 0:
             raise ValueError(
@@ -199,7 +266,14 @@ class StepTables:
                     lambda s: (s % D) if s < half else (S - 1 - s) % D)
             else:
                 device_of_stage = lambda s: s % D
-        V, enc_slot, dec_slot = _slot_maps(S, D, folded, device_of_stage)
+        V, enc_slot, dec_slot = slot_maps(S, D, folded, device_of_stage)
+        if skip_consumers is not None:
+            if len(skip_consumers) != D or any(
+                    len(dev) != V for dev in skip_consumers):
+                raise ValueError(
+                    f"skip_consumers must list every (device, dec slot): "
+                    f"expected [{D}][{V}], got "
+                    f"{[len(dev) for dev in skip_consumers]}")
         fwd = sorted((p for p in sched.placements if p.virtual < S),
                      key=lambda p: (p.step, p.device))
         steps = sorted({p.step for p in fwd})
@@ -229,6 +303,14 @@ class StepTables:
                     f"at forward step {k} — run validate_schedule")
             tab[dev, k] = m
             ok[dev, k] = True
+
+        # message / buffer-lifetime event logs for the liveness analysis
+        msgs_down: list[tuple[int, int, int, int, int]] = []
+        msgs_up: list[tuple[int, int, int, int, int]] = []
+        turn_writes: dict[tuple[int, int], int] = {}   # (dev, m) -> step
+        turn_reads: dict[tuple[int, int], int] = {}
+        enc_runs: list[tuple[int, int, int, int]] = []  # (dev, k, m, vslot)
+        dec_runs: list[tuple[int, int, int, int]] = []
 
         k_of_task: dict[tuple[int, int], int] = {}
         for p in fwd:
@@ -260,14 +342,18 @@ class StepTables:
             is_enc = v < half
             sel[dev, k] = RUN_ENC if is_enc else RUN_DEC
             slot[dev, k] = enc_slot[v] if is_enc else dec_slot[v]
+            (enc_runs if is_enc else dec_runs).append(
+                (dev, k, m, int(slot[dev, k])))
             if v == 0:
                 embed[dev, k] = True
             if folded and v == half:
                 turn_rd[dev, k] = True
+                turn_reads[(dev, m)] = k
             if folded and v == half - 1:
                 # turnaround — consumed locally from the turn buffer by
                 # stage S/2, which must share the device; no send.
                 turn_wr[dev, k] = True
+                turn_writes[(dev, m)] = k
                 if device_of_stage(half) != dev:
                     raise ValueError(
                         f"turnaround stages {half - 1},{half} on devices "
@@ -287,8 +373,10 @@ class StepTables:
                         f"device {want}")
                 if is_enc:
                     mark_rx(down_mb, down_valid, nd, k + 1, m, "down")
+                    msgs_down.append((dev, nd, k, v, m))
                 else:
                     mark_rx(up_mb, up_valid, nd, k + 1, m, "up")
+                    msgs_up.append((dev, nd, k, v, m))
             if v == S - 1:
                 loss[dev, k] = True
 
@@ -309,48 +397,154 @@ class StepTables:
                     "input can arrive (constraint (10)) — run "
                     "validate_schedule")
 
-        return cls(D=D, M=M, V=V, forward_steps=tuple(steps), sel=sel,
+        # ---- channel activity + liveness windows -----------------------
+        down_send = np.zeros((D, T), dtype=bool)
+        up_send = np.zeros((D, T), dtype=bool)
+        down_slot = np.zeros((D, T), dtype=np.int32)
+        up_slot = np.zeros((D, T), dtype=np.int32)
+        rx_slot = np.zeros((D, T), dtype=np.int32)
+        windows = {}
+        for name, msgs, send_tab, slot_tab in (
+                ("down", msgs_down, down_send, down_slot),
+                ("up", msgs_up, up_send, up_slot)):
+            by_dev: dict[int, list[tuple[int, int]]] = {}
+            for src, dst, k_prod, v, m in msgs:
+                send_tab[src, k_prod] = True
+                # in flight in the receiver's buffer from arrival (start
+                # of k_prod + 1) until its consumer runs
+                by_dev.setdefault(dst, []).append(
+                    (k_prod + 1, k_of_task[(v + 1, m)]))
+            W = 0
+            for dst, ivs in by_dev.items():
+                assign, w = _color_intervals(ivs)
+                W = max(W, w)
+                for (k_arr, k_cons), sl in assign.items():
+                    slot_tab[dst, k_arr] = sl
+                    rx_slot[dst, k_cons] = sl
+            windows[name] = W
+
+        turn_wr_slot = np.zeros((D, T), dtype=np.int32)
+        turn_rd_slot = np.zeros((D, T), dtype=np.int32)
+        by_dev = {}
+        for (dev, m), kw in turn_writes.items():
+            kr = turn_reads.get((dev, m))
+            if kr is None:
+                turn_wr[dev, kw] = False    # dead store: no reader
+                continue
+            by_dev.setdefault(dev, []).append((kw, kr))
+        W_turn = 0
+        for dev, ivs in by_dev.items():
+            assign, w = _color_intervals(ivs)
+            W_turn = max(W_turn, w)
+            for (kw, kr), sl in assign.items():
+                turn_wr_slot[dev, kw] = sl
+                turn_rd_slot[dev, kr] = sl
+
+        # Skip stash: entry (device, microbatch, enc slot) is written when
+        # the encoder slot runs and stays live until the last decoder task
+        # whose slot consumes it.  Without skip_consumers every decoder
+        # slot is assumed to read every encoder slot (conservative).
+        skip_wr = np.zeros((D, T), dtype=bool)
+        skip_wr_slot = np.zeros((D, T), dtype=np.int32)
+        skip_rd_slot = np.zeros((D, T, V), dtype=np.int32)
+        last_read: dict[tuple[int, int, int], int] = {}
+        for dev, k2, m, dv in dec_runs:
+            evs = (range(V) if skip_consumers is None
+                   else skip_consumers[dev][dv])
+            for ev in evs:
+                if not 0 <= ev < V:
+                    raise ValueError(
+                        f"skip_consumers names enc slot {ev} on device "
+                        f"{dev}, but the layout has V={V} slots")
+                key = (dev, m, ev)
+                if last_read.get(key, -1) < k2:
+                    last_read[key] = k2
+        per_dev: dict[int, list[tuple[int, int]]] = {}
+        entry_of: dict[tuple[int, int, int], tuple[int, int]] = {}
+        for dev, k, m, vslot in enc_runs:
+            if not folded:
+                continue
+            end = last_read.get((dev, m, vslot))
+            if end is None:
+                continue                    # dead store: never consumed
+            skip_wr[dev, k] = True
+            per_dev.setdefault(dev, []).append((k, end))
+            entry_of[(dev, m, vslot)] = (k, end)
+        W_skip = 0
+        entry_slot: dict[tuple[int, int, int], int] = {}
+        for dev, ivs in per_dev.items():
+            assign, w = _color_intervals(ivs)
+            W_skip = max(W_skip, w)
+            for key, iv in entry_of.items():
+                if key[0] == dev:
+                    entry_slot[key] = assign[iv]
+        for dev, k2, m, dv in dec_runs:
+            for ev in range(V):
+                skip_rd_slot[dev, k2, ev] = entry_slot.get((dev, m, ev), 0)
+        for dev, k, m, vslot in enc_runs:
+            if skip_wr[dev, k]:
+                skip_wr_slot[dev, k] = entry_slot[(dev, m, vslot)]
+
+        return cls(D=D, M=M, V=V, rings=2 if folded else 1,
+                   forward_steps=tuple(steps), sel=sel,
                    slot=slot, mb=mb,
                    down_mb=down_mb, down_valid=down_valid, up_mb=up_mb,
                    up_valid=up_valid, loss=loss, embed=embed,
                    turn_rd=turn_rd, turn_wr=turn_wr,
+                   down_send=down_send, up_send=up_send,
+                   down_slot=down_slot, up_slot=up_slot, rx_slot=rx_slot,
+                   turn_wr_slot=turn_wr_slot, turn_rd_slot=turn_rd_slot,
+                   skip_wr=skip_wr, skip_wr_slot=skip_wr_slot,
+                   skip_rd_slot=skip_rd_slot,
+                   W_down=windows["down"], W_up=windows["up"],
+                   W_turn=W_turn, W_skip=W_skip,
                    embed_device=device_of_stage(0),
                    turn_device=device_of_stage(half - 1) if folded else -1)
 
 
 @functools.lru_cache(maxsize=256)
 def _tables_cached(sched: Schedule, folded: bool,
-                   devices: tuple[int, ...]) -> StepTables:
-    return StepTables._build(sched, folded, lambda s: devices[s])
+                   devices: tuple[int, ...],
+                   skip_consumers) -> StepTables:
+    return StepTables._build(sched, folded, lambda s: devices[s],
+                             skip_consumers)
 
 
 # ===========================================================================
-# Microbatch-indexed scan buffers
+# Rotating scan buffers (slot-indexed; sized by the liveness windows)
 # ===========================================================================
 
-def _zeros_buffer(proto: Pytree, M: int) -> Pytree:
-    """``[M, ...]`` zero buffer per leaf (proto may be concrete or structs)."""
+def _zeros_buffer(proto: Pytree, W: int, dtype=None) -> Pytree:
+    """``[W, ...]`` zero buffer per leaf (proto may be concrete or structs)."""
     return jax.tree.map(
-        lambda t: jnp.zeros((M,) + tuple(t.shape), t.dtype), proto)
+        lambda t: jnp.zeros((W,) + tuple(t.shape), dtype or t.dtype), proto)
 
 
-def _buf_store(buf: Pytree, m, val: Pytree, pred) -> Pytree:
-    """``buf[m] = val`` where ``pred`` (scalar bool), identity otherwise."""
+def _buf_store(buf: Pytree, i, val: Pytree, pred) -> Pytree:
+    """``buf[i] = val`` where ``pred`` (scalar bool), identity otherwise."""
     return jax.tree.map(
         lambda b, v: jnp.where(
-            pred, jax.lax.dynamic_update_index_in_dim(b, v, m, 0), b),
+            pred, jax.lax.dynamic_update_index_in_dim(
+                b, v.astype(b.dtype), i, 0), b),
         buf, val)
 
 
-def _buf_store2(buf: Pytree, m, v_idx, val: Pytree, pred) -> Pytree:
-    """``buf[m, v_idx] = val`` where ``pred`` — the (microbatch, slot)
-    indexed store interleaved plans use for their per-slot skip stash."""
-    def upd(b, x):
-        idx = (m, v_idx) + (0,) * (b.ndim - 2)
-        return jnp.where(
-            pred, jax.lax.dynamic_update_slice(b, x[None, None], idx), b)
+def _gather_rows(buf: Pytree, rows) -> Pytree:
+    """``buf[rows]`` flattened over the gathered axis: ``[W, pad, ...]``
+    leaves gathered with a ``[V]`` slot vector -> ``[V * pad, ...]`` (the
+    flat stash view ``StageLayout.skip_rows`` addresses)."""
+    return jax.tree.map(
+        lambda b: jnp.take(b, rows, axis=0).reshape(
+            (rows.shape[0] * b.shape[1],) + b.shape[2:]), buf)
 
-    return jax.tree.map(upd, buf, val)
+
+def _wire_dtype(cfg: PipelineConfig):
+    if cfg.wire_dtype not in WIRE_DTYPES:
+        raise ValueError(
+            f"unknown wire_dtype {cfg.wire_dtype!r}; expected one of "
+            f"{WIRE_DTYPES} (float32 is the exact-differential escape "
+            "hatch)")
+    return jnp.dtype(cfg.wire_dtype)
 
 
 # ===========================================================================
@@ -367,20 +561,23 @@ def make_wave_pipeline_from_schedule(
     loss_fn: Callable,        # (edge_p, x_final, mb, aux) -> scalar
     device_of_stage=None,     # partition's explicit stage->device mapping
     devices=None,             # ...same, as a tuple (memoized lowering)
+    skip_consumers=None,      # layout-derived (device, dec slot) -> enc slots
 ) -> Callable:
     """Lower a folded S=2VD schedule to ``fn(enc_stack, dec_stack, edge_p,
     mbs, aux) -> loss`` (same call signature as ``make_wave_pipeline``, but
     the stage stacks carry a leading slot axis: ``[D, V, pad, ...]``).
 
     Each scan step consults the schedule-derived tables: arrivals are
-    stored into microbatch-indexed receive buffers, the selected stage slot
-    runs on the slot's microbatch with its own parameter rows
-    (``stack[d, slot]``), encoder slots stash their skips under the
-    (microbatch, slot) index — and the turnaround slot the activation under
-    the microbatch — so each decoder slot reads exactly the skips its
-    collocated encoder slot produced.  Correct for any valid schedule,
-    including ``M < D`` and interleaved V > 1 plans; the rings wrap
-    (interleaved slot boundaries cross device D-1 -> 0).
+    stored into rotating receive buffers sized by the proven windows, the
+    selected stage slot runs on the slot's microbatch with its own
+    parameter rows (``stack[d, slot]``), encoder slots stash their skips
+    under the precomputed stash slot — and the turnaround slot the
+    activation under its turn slot — so each decoder slot reads exactly
+    the skips its collocated encoder slot produced.  Boundary activations
+    cross the rings in ``cfg.wire_dtype`` (zero-masked on quiescent
+    steps); compute stays in the model dtype.  Correct for any valid
+    schedule, including ``M < D`` and interleaved V > 1 plans; the rings
+    wrap (interleaved slot boundaries cross device D-1 -> 0).
 
     ``enc_stage_fn`` / ``dec_stage_fn`` receive the *slot index* as their
     last argument so callers can select per-slot block counts and skip
@@ -393,9 +590,18 @@ def make_wave_pipeline_from_schedule(
             f"pipeline config (M={M}, D={D})")
     tables = StepTables.from_schedule(sched, folded=True,
                                       device_of_stage=device_of_stage,
-                                      devices=devices)
+                                      devices=devices,
+                                      skip_consumers=skip_consumers)
     T, V = tables.num_steps, tables.V
+    wire = _wire_dtype(cfg)
     down_perm, up_perm = ring_perms(D, wrap=True)
+    # a ring no message ever rides is elided from the scan body entirely
+    down_used = bool(tables.down_send.any())
+    up_used = bool(tables.up_send.any())
+    W_down = max(tables.W_down, 1)
+    W_up = max(tables.W_up, 1)
+    W_turn = max(tables.W_turn, 1)
+    W_skip = max(tables.W_skip, 1)
     enc_stage = _wrap_remat(enc_stage_fn, cfg)
     dec_stage = _wrap_remat(dec_stage_fn, cfg)
 
@@ -408,6 +614,7 @@ def make_wave_pipeline_from_schedule(
         aux0 = tree_index(aux, 0)
         x_proto = jax.eval_shape(embed_fn, edge_p, mb0, aux0)
         zero_x = jnp.zeros(x_proto.shape, x_proto.dtype)
+        zero_w = jnp.zeros(x_proto.shape, wire)
         skips_proto = jax.eval_shape(
             lambda p, x, a: enc_stage(p, x, a, 0)[1],
             tree_index(enc_p, 0), zero_x, aux0)
@@ -418,33 +625,36 @@ def make_wave_pipeline_from_schedule(
         sel_t = jnp.asarray(tables.sel)[d]
         slot_t = jnp.asarray(tables.slot)[d]
         mb_t = jnp.asarray(tables.mb)[d]
-        dmb_t = jnp.asarray(tables.down_mb)[d]
         dok_t = jnp.asarray(tables.down_valid)[d]
-        umb_t = jnp.asarray(tables.up_mb)[d]
         uok_t = jnp.asarray(tables.up_valid)[d]
+        dsl_t = jnp.asarray(tables.down_slot)[d]
+        usl_t = jnp.asarray(tables.up_slot)[d]
+        rx_t = jnp.asarray(tables.rx_slot)[d]
+        dsnd_t = jnp.asarray(tables.down_send)[d]
+        usnd_t = jnp.asarray(tables.up_send)[d]
         loss_t = jnp.asarray(tables.loss)[d]
         emb_t = jnp.asarray(tables.embed)[d]
         trd_t = jnp.asarray(tables.turn_rd)[d]
         twr_t = jnp.asarray(tables.turn_wr)[d]
-
-        def cache_zeros(proto):
-            # [M, V, enc_pad, ...]: per-(microbatch, slot) skip stash
-            return jax.tree.map(
-                lambda t: jnp.zeros((M, V) + tuple(t.shape), t.dtype), proto)
+        twrs_t = jnp.asarray(tables.turn_wr_slot)[d]
+        trds_t = jnp.asarray(tables.turn_rd_slot)[d]
+        swr_t = jnp.asarray(tables.skip_wr)[d]
+        swrs_t = jnp.asarray(tables.skip_wr_slot)[d]
+        srd_t = jnp.asarray(tables.skip_rd_slot)[d]     # [T, V]
 
         init = (
-            zero_x,                         # down-ring register
-            zero_x,                         # up-ring register
-            _zeros_buffer(zero_x, M),       # enc_rx[m]: down arrivals
-            _zeros_buffer(zero_x, M),       # dec_rx[m]: up arrivals
-            _zeros_buffer(zero_x, M),       # turn[m]: own turn-slot output
-            cache_zeros(zero_skips),        # cache[m, v]: stashed skips
+            zero_w,                              # down-ring register (wire)
+            zero_w,                              # up-ring register (wire)
+            _zeros_buffer(zero_x, W_down, wire),  # enc_rx[W_down]: arrivals
+            _zeros_buffer(zero_x, W_up, wire),    # dec_rx[W_up]: arrivals
+            _zeros_buffer(zero_x, W_turn),        # turn[W_turn]
+            _zeros_buffer(zero_skips, W_skip),    # cache[W_skip]: skips
         )
 
         def step(carry, t):
             down_in, up_in, enc_rx, dec_rx, turn, cache = carry
-            enc_rx = _buf_store(enc_rx, dmb_t[t], down_in, dok_t[t])
-            dec_rx = _buf_store(dec_rx, umb_t[t], up_in, uok_t[t])
+            enc_rx = _buf_store(enc_rx, dsl_t[t], down_in, dok_t[t])
+            dec_rx = _buf_store(dec_rx, usl_t[t], up_in, uok_t[t])
             sel = sel_t[t]
             vslot = slot_t[t]
             m = mb_t[t]
@@ -458,38 +668,44 @@ def make_wave_pipeline_from_schedule(
                 x0 = jax.lax.cond(
                     emb_t[t], lambda: embed_fn(edge_p, mb_m, aux_m),
                     lambda: zero_x)
-                x_in = jnp.where(emb_t[t], x0, tree_index(enc_rx, m))
+                x_rx = tree_index(enc_rx, rx_t[t]).astype(zero_x.dtype)
+                x_in = jnp.where(emb_t[t], x0, x_rx)
                 return enc_stage(tree_index(enc_p, vslot), x_in, aux_m,
                                  vslot)
 
             def run_dec(_):
-                x_in = jnp.where(trd_t[t], tree_index(turn, m),
-                                 tree_index(dec_rx, m))
-                # flatten the slot axis: consumers address the stash by
-                # flat row slot*enc_pad + row (StageLayout.skip_rows)
-                skips_m = jax.tree.map(
-                    lambda s: s.reshape((s.shape[0] * s.shape[1],)
-                                        + s.shape[2:]),
-                    tree_index(cache, m))
+                x_rx = tree_index(dec_rx, rx_t[t]).astype(zero_x.dtype)
+                x_in = jnp.where(trd_t[t], tree_index(turn, trds_t[t]),
+                                 x_rx)
+                # gather the stash slots holding this microbatch's V
+                # encoder-slot entries -> the flat [V * enc_pad] view
+                # consumers address via StageLayout.skip_rows
+                skips_m = _gather_rows(cache, srd_t[t])
                 x_out = dec_stage(tree_index(dec_p, vslot), x_in, skips_m,
                                   aux_m, vslot)
                 return x_out, zero_skips
 
             x_out, skips = jax.lax.switch(
                 sel, (run_idle, run_enc, run_dec), None)
-            is_enc = sel == RUN_ENC
-            # only the turnaround slot's output is ever read back from
-            # turn[m]; gating the store on the table flag saves the
-            # [M, ...] buffer write (and its transpose in the backward
-            # pass) everywhere else
-            turn = _buf_store(turn, m, x_out, twr_t[t])
-            cache = _buf_store2(cache, m, vslot, skips, is_enc)
+            # gated stores: only the turnaround slot's output is read back
+            # from the turn buffer, and only stash entries some decoder
+            # row consumes are written (dead stores are elided — the
+            # liveness analysis cleared their flags)
+            turn = _buf_store(turn, twrs_t[t], x_out, twr_t[t])
+            cache = _buf_store(cache, swrs_t[t], skips, swr_t[t])
             loss = jax.lax.cond(
                 loss_t[t],
                 lambda: loss_fn(edge_p, x_out, mb_m, aux_m),
                 lambda: jnp.zeros((), jnp.float32))
-            down_next = jax.lax.ppermute(x_out, axis, down_perm)
-            up_next = jax.lax.ppermute(x_out, axis, up_perm)
+            # cast-on-send; quiescent hops carry zeros (the where
+            # transpose zeroes their backward cotangents too)
+            payload = x_out.astype(wire)
+            down_pl = jnp.where(dsnd_t[t], payload, zero_w)
+            up_pl = jnp.where(usnd_t[t], payload, zero_w)
+            down_next = (jax.lax.ppermute(down_pl, axis, down_perm)
+                         if down_used else down_pl)
+            up_next = (jax.lax.ppermute(up_pl, axis, up_perm)
+                       if up_used else up_pl)
             return (down_next, up_next, enc_rx, dec_rx, turn, cache), loss
 
         _, losses = jax.lax.scan(step, init, jnp.arange(T))
@@ -517,7 +733,9 @@ def make_linear_pipeline_from_schedule(
     (same call signature as ``make_linear_pipeline``; the stack carries a
     leading slot axis ``[D, V, pad, ...]`` and ``stage_fn`` receives the
     slot index).  The down ring wraps so interleaved (V > 1) plans cross
-    the D-1 -> 0 slot boundary."""
+    the D-1 -> 0 slot boundary; arrivals land in a rotating ``W_down``
+    receive buffer in ``cfg.wire_dtype`` and quiescent hops carry
+    zeros."""
     D, M, axis = cfg.num_devices, cfg.num_microbatches, cfg.axis
     if sched.M != M or sched.D != D:
         raise ValueError(
@@ -527,7 +745,10 @@ def make_linear_pipeline_from_schedule(
                                       device_of_stage=device_of_stage,
                                       devices=devices)
     T = tables.num_steps
+    wire = _wire_dtype(cfg)
     down_perm, _ = ring_perms(D, wrap=True)
+    down_used = bool(tables.down_send.any())
+    W_down = max(tables.W_down, 1)
     stage = _wrap_remat(stage_fn, cfg)
 
     def fn(stack, edge_p, mbs):
@@ -536,20 +757,23 @@ def make_linear_pipeline_from_schedule(
         mb0 = tree_index(mbs, 0)
         x_proto = jax.eval_shape(embed_fn, edge_p, mb0)
         zero_x = jnp.zeros(x_proto.shape, x_proto.dtype)
+        zero_w = jnp.zeros(x_proto.shape, wire)
 
         sel_t = jnp.asarray(tables.sel)[d]
         slot_t = jnp.asarray(tables.slot)[d]
         mb_t = jnp.asarray(tables.mb)[d]
-        dmb_t = jnp.asarray(tables.down_mb)[d]
         dok_t = jnp.asarray(tables.down_valid)[d]
+        dsl_t = jnp.asarray(tables.down_slot)[d]
+        rx_t = jnp.asarray(tables.rx_slot)[d]
+        dsnd_t = jnp.asarray(tables.down_send)[d]
         loss_t = jnp.asarray(tables.loss)[d]
         emb_t = jnp.asarray(tables.embed)[d]
 
-        init = (zero_x, _zeros_buffer(zero_x, M))
+        init = (zero_w, _zeros_buffer(zero_x, W_down, wire))
 
         def step(carry, t):
             h_in, rx = carry
-            rx = _buf_store(rx, dmb_t[t], h_in, dok_t[t])
+            rx = _buf_store(rx, dsl_t[t], h_in, dok_t[t])
             m = mb_t[t]
             vslot = slot_t[t]
             mb_m = tree_index(mbs, m)
@@ -561,7 +785,8 @@ def make_linear_pipeline_from_schedule(
                 x0 = jax.lax.cond(
                     emb_t[t], lambda: embed_fn(edge_p, mb_m),
                     lambda: zero_x)
-                x_in = jnp.where(emb_t[t], x0, tree_index(rx, m))
+                x_rx = tree_index(rx, rx_t[t]).astype(zero_x.dtype)
+                x_in = jnp.where(emb_t[t], x0, x_rx)
                 return stage(tree_index(my_p, vslot), x_in, vslot)
 
             x_out = jax.lax.switch(sel_t[t], (run_idle, run_stage), None)
@@ -569,7 +794,9 @@ def make_linear_pipeline_from_schedule(
                 loss_t[t],
                 lambda: loss_fn(edge_p, x_out, mb_m),
                 lambda: jnp.zeros((), jnp.float32))
-            h_next = jax.lax.ppermute(x_out, axis, down_perm)
+            h_pl = jnp.where(dsnd_t[t], x_out.astype(wire), zero_w)
+            h_next = (jax.lax.ppermute(h_pl, axis, down_perm)
+                      if down_used else h_pl)
             return (h_next, rx), loss
 
         _, losses = jax.lax.scan(step, init, jnp.arange(T))

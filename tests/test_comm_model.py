@@ -2,8 +2,9 @@
 from helpers.hypothesis_compat import given, settings, st
 
 from repro.core.graph import make_unet_like
-from repro.core.comm_model import (naive_pp_volume, pulse_volume,
-                                   partition_comm_volume, zero_volume_per_iter)
+from repro.core.comm_model import (lowered_comm_volume, naive_pp_volume,
+                                   pulse_volume, partition_comm_volume,
+                                   wire_factor, zero_volume_per_iter)
 from repro.core.partition import partition, blockwise_partition
 
 
@@ -40,3 +41,73 @@ def test_zero_volume():
     p = 10 * (1 << 20)
     assert zero_volume_per_iter(p, 8, 2) < zero_volume_per_iter(p, 8, 3)
     assert zero_volume_per_iter(p, 1, 2) == 0.0
+
+
+def test_collective_bytes_parses_stablehlo():
+    """Both StableHLO collective forms parse: single-line ops
+    (collective_permute) and region-bearing ops (all_reduce), whose
+    result type sits on the region's closing line — the region body's own
+    `->` signatures must not be miscounted."""
+    from repro.runtime.hlo_analysis import collective_bytes
+    txt = """
+    %71 = "stablehlo.collective_permute"(%70) <{channel_handle = #stablehlo.channel_handle<handle = 1, type = 1>, source_target_pairs = dense<[[0, 1]]> : tensor<1x2xi64>}> : (tensor<1x18x32xbf16>) -> tensor<1x18x32xbf16>
+    %5 = "stablehlo.all_reduce"(%4) <{replica_groups = dense<[[0, 1]]> : tensor<1x2xi64>}> ({
+    ^bb0(%arg0: tensor<f32>, %arg1: tensor<f32>):
+      %6 = stablehlo.add %arg0, %arg1 : (tensor<f32>, tensor<f32>) -> tensor<f32>
+      stablehlo.return %6 : tensor<f32>
+    }) : (tensor<4xf32>) -> tensor<4xf32>
+    """
+    st = collective_bytes(txt)
+    assert st.bytes_by_kind["collective-permute"] == 18 * 32 * 2
+    assert st.bytes_by_kind["all-reduce"] == 4 * 4   # NOT the region's f32
+    assert st.count_by_kind == {"collective-permute": 1, "all-reduce": 1}
+
+
+def test_bench_compare_flags_regressions_and_missing_metrics():
+    """The --compare gate: worse lower-is-better metrics fail, improved
+    ones pass, and a gated metric that vanishes from the new run (probe
+    started failing) fails instead of passing vacuously."""
+    from benchmarks.run import compare_baseline
+    old = {"hlo": {"g": {"bfloat16": 4608, "float32": 9216}},
+           "hlo_collective_permute_bytes": 4608,
+           "interleave": {"g": {"v1": {"bubble": 0.26,
+                                       "sim_makespan": 1.0}}}}
+    good = {"hlo": {"g": {"bfloat16": 4608, "float32": 9216}},
+            "hlo_collective_permute_bytes": 4000,       # improvement
+            "interleave": {"g": {"v1": {"bubble": 0.26,
+                                        "sim_makespan": 5.0}}}}  # ungated
+    assert compare_baseline(old, good) == []
+    worse = {"hlo": {"g": {"bfloat16": 9216, "float32": 9216}},
+             "hlo_collective_permute_bytes": 4608,
+             "interleave": {"g": {"v1": {"bubble": 0.30,
+                                         "sim_makespan": 1.0}}}}
+    regs = compare_baseline(old, worse)
+    assert any("bfloat16" in r for r in regs)
+    assert any("bubble" in r for r in regs)
+    vanished = {"hlo_collective_permute_bytes": 4608,
+                "interleave": {"g": {"v1": {"bubble": 0.26,
+                                            "sim_makespan": 1.0}}}}
+    regs = compare_baseline(old, vanished)
+    assert any("missing" in r and "bfloat16" in r for r in regs)
+
+
+def test_lowered_comm_volume_prices_live_bf16_hops():
+    """The lowered-executor pricing: live hops only (schedule activity
+    masks), wire-dtype bytes — vs the dense every-step/both-rings fp32
+    cost the pre-liveness table executors paid."""
+    from repro.core.schedule import template_wave
+    from repro.runtime.schedule_exec import StepTables
+    D, M, a = 2, 4, 1 << 10
+    tabs = StepTables.from_schedule(template_wave(D, M), folded=True)
+    v_bf = lowered_comm_volume(tabs, a)                  # bf16 default
+    v_fp = lowered_comm_volume(tabs, a, wire_dtype="float32")
+    # one down + one up hop per microbatch on the 2-device fold
+    assert v_bf.live_hops == 2 * M
+    assert v_bf.dense_hops == 2 * D * tabs.num_steps > v_bf.live_hops
+    assert v_bf.fwd_total == 2 * M * a                   # factor 1 (bf16)
+    assert v_fp.fwd_total == 2.0 * v_bf.fwd_total        # fp32 doubles
+    assert v_bf.train_total == 2.0 * v_bf.fwd_total      # bwd mirrors fwd
+    # the dense pre-liveness cost dominates both
+    assert v_bf.dense_fp32_total > v_fp.fwd_total
+    assert wire_factor("bfloat16") == 1.0
+    assert wire_factor("float32") == 2.0
