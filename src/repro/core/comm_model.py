@@ -154,3 +154,50 @@ def lowered_comm_volume(tables, payload_bytes: float,
                              dense_hops=tables.dense_hops,
                              payload_bytes=payload_bytes,
                              wire_dtype=wire_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapAccounting:
+    """Exposed-vs-hidden split of a schedule's live ring hops.
+
+    An **exposed** hop's consumer runs on the very next forward step, so
+    even the overlapped executors (``PipelineConfig.overlap``) pay its
+    full wire time on the critical path; a **hidden** hop has at least
+    one intervening step of compute to ride under, costing only the wire
+    time the covering compute does not absorb.  This is the accounting
+    the tuner's overlap-aware Eq. 15 term prices and the point where the
+    planner (``core.schedule.comm_stats``) and the executor lowering
+    (``StepTables.exposed_hops``) are held to agree — the overlap
+    counterpart of :func:`lowered_comm_volume`'s byte agreement.
+    """
+
+    exposed_hops: int
+    hidden_hops: int
+
+    @property
+    def total_hops(self) -> int:
+        return self.exposed_hops + self.hidden_hops
+
+    def comm_time(self, t_p2p: float, t_f: float,
+                  overlap: bool = True) -> float:
+        """Total wire seconds on the critical path.
+
+        ``t_p2p`` is one hop's wire time, ``t_f`` the typical compute a
+        hidden hop rides under.  ``overlap=False`` prices the synchronous
+        lowering: every live hop serializes at full ``t_p2p``.
+        """
+        if not overlap:
+            return self.total_hops * t_p2p
+        return (self.exposed_hops * t_p2p
+                + self.hidden_hops * max(0.0, t_p2p - t_f))
+
+
+def overlap_accounting(tables) -> OverlapAccounting:
+    """Extract the exposed/hidden split from a lowered or analyzed
+    schedule.  ``tables`` is duck-typed on ``exposed_hops`` /
+    ``hidden_hops`` — both :class:`~repro.runtime.schedule_exec.StepTables`
+    and the planner-side :class:`~repro.core.schedule.ScheduleCommStats`
+    qualify, so either layer's analysis can be priced (and the property
+    tests hold the two to agree)."""
+    return OverlapAccounting(exposed_hops=int(tables.exposed_hops),
+                             hidden_hops=int(tables.hidden_hops))

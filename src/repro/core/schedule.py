@@ -87,6 +87,11 @@ class Schedule:
 
     @property
     def makespan(self) -> int:
+        if not self.placements:
+            raise ValueError(
+                f"schedule (S={self.S}, M={self.M}, D={self.D}) has no "
+                "placements — makespan is undefined on an empty schedule "
+                "(validate_schedule reports this as a family (6) violation)")
         return 1 + max(p.step for p in self.placements)
 
     def grid(self) -> list[list[Placement | None]]:
@@ -131,6 +136,12 @@ class Schedule:
         return DevicePrograms(virt, mb, valid)
 
     def bubble_ratio(self) -> float:
+        if not self.placements:
+            raise ValueError(
+                f"schedule (S={self.S}, M={self.M}, D={self.D}) has no "
+                "placements — bubble_ratio is undefined on an empty "
+                "schedule (validate_schedule reports this as a family (6) "
+                "violation)")
         busy = len(self.placements)
         return 1.0 - busy / (self.D * self.makespan)
 
@@ -282,6 +293,13 @@ def validate_schedule(
     per-kind (enc/dec) slot numbering in slot-context messages."""
     errors: list[str] = []
     S, M, D = sched.S, sched.M, sched.D
+    if not sched.placements:
+        # One aggregate violation instead of 2*S*M missing-task lines: a
+        # placement-free schedule is a malformed *schedule*, not 2SM
+        # individually missing tasks, and makespan/bubble_ratio raise on
+        # it with the same diagnosis.
+        return [f"(6) schedule (S={S}, M={M}, D={D}) has no placements "
+                f"(expected {num_virtual(S) * M} tasks)"]
     ctx = _slot_context(S, device_of_stage, folded)
     # Placement bounds first (family (7)): an out-of-range virtual stage,
     # microbatch, device, or negative step would otherwise pass validation
@@ -350,6 +368,132 @@ def validate_schedule(
 
 
 # --------------------------------------------------------------------------
+# Planner-side communication statistics (liveness windows + overlap slack)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleCommStats:
+    """Ring-message accounting of a schedule's forward placements.
+
+    The planning-layer mirror of the executor lowering's channel analysis
+    (``runtime.schedule_exec.StepTables``): per-ring liveness windows (max
+    simultaneously-live receive-buffer entries) and the exposed-vs-hidden
+    hop split the overlapped executors realize.  A hop is **exposed** when
+    its consumer runs on the very next forward step — the arrival's
+    dependency forces the collective onto the critical path — and
+    **hidden** otherwise (the receive slot is dead until the consumer
+    runs, so the overlapped executor prefetches it under intervening
+    compute).  Pure host-side analysis (no jax import); the property
+    tests hold it to agree with the lowered ``StepTables`` field for
+    field, the same way ``lowered_comm_volume`` is held to the measured
+    HLO bytes.
+    """
+
+    W_down: int
+    W_up: int
+    W_turn: int
+    W_skip: int
+    exposed_down: int
+    exposed_up: int
+    hidden_down: int
+    hidden_up: int
+
+    @property
+    def exposed_hops(self) -> int:
+        return self.exposed_down + self.exposed_up
+
+    @property
+    def hidden_hops(self) -> int:
+        return self.hidden_down + self.hidden_up
+
+    @property
+    def live_hops(self) -> tuple[int, int]:
+        return (self.exposed_down + self.hidden_down,
+                self.exposed_up + self.hidden_up)
+
+    @property
+    def window_total(self) -> int:
+        return self.W_down + self.W_up + self.W_turn + self.W_skip
+
+
+def comm_stats(sched: Schedule, device_of_stage: Callable[[int], int],
+               folded: bool) -> ScheduleCommStats:
+    """Compute :class:`ScheduleCommStats` for a valid schedule.
+
+    Uses the same message model as the executor lowering: an enc->enc
+    boundary rides the down ring, dec->dec the up ring; a message is live
+    in its receiver's buffer from the step after its producer until its
+    consumer runs; the turnaround and the (conservative, all-slots) skip
+    stash are device-local lifetimes.  Windows are max-overlap counts per
+    device, so they equal the first-fit coloring's slot counts.
+    """
+    S, M = sched.S, sched.M
+    half = S // 2 if folded else S
+    fwd = [p for p in sched.placements if p.virtual < S]
+    steps = sorted({p.step for p in fwd})
+    k_of_step = {t: k for k, t in enumerate(steps)}
+    k_of = {(p.virtual, p.microbatch): k_of_step[p.step] for p in fwd}
+
+    def peak(ivs_by_dev: dict[int, list[tuple[int, int]]]) -> int:
+        best = 0
+        for ivs in ivs_by_dev.values():
+            events: dict[int, int] = {}
+            for a, b in ivs:
+                events[a] = events.get(a, 0) + 1
+                events[b + 1] = events.get(b + 1, 0) - 1
+            live = 0
+            for k in sorted(events):
+                live += events[k]
+                best = max(best, live)
+        return best
+
+    rings: dict[str, dict[int, list[tuple[int, int]]]] = {
+        "down": {}, "up": {}}
+    exposed = {"down": 0, "up": 0}
+    hidden = {"down": 0, "up": 0}
+    for p in fwd:
+        v, m = p.virtual, p.microbatch
+        if v >= S - 1 or (folded and v == half - 1):
+            continue                       # loss stage / local turnaround
+        ring = "down" if v < half else "up"
+        k_prod, k_cons = k_of[(v, m)], k_of[(v + 1, m)]
+        rings[ring].setdefault(device_of_stage(v + 1), []).append(
+            (k_prod + 1, k_cons))
+        if k_cons == k_prod + 1:
+            exposed[ring] += 1
+        else:
+            hidden[ring] += 1
+
+    turn: dict[int, list[tuple[int, int]]] = {}
+    skip: dict[int, list[tuple[int, int]]] = {}
+    if folded:
+        for m in range(M):
+            kw, kr = k_of.get((half - 1, m)), k_of.get((half, m))
+            if kw is not None and kr is not None:
+                turn.setdefault(device_of_stage(half - 1), []).append(
+                    (kw, kr))
+        last_dec: dict[tuple[int, int], int] = {}
+        for p in fwd:
+            if p.virtual >= half:
+                key = (p.device, p.microbatch)
+                k = k_of[(p.virtual, p.microbatch)]
+                if last_dec.get(key, -1) < k:
+                    last_dec[key] = k
+        for p in fwd:
+            if p.virtual < half:
+                end = last_dec.get((p.device, p.microbatch))
+                if end is not None:
+                    skip.setdefault(p.device, []).append(
+                        (k_of[(p.virtual, p.microbatch)], end))
+
+    return ScheduleCommStats(
+        W_down=peak(rings["down"]), W_up=peak(rings["up"]),
+        W_turn=peak(turn), W_skip=peak(skip),
+        exposed_down=exposed["down"], exposed_up=exposed["up"],
+        hidden_down=hidden["down"], hidden_up=hidden["up"])
+
+
+# --------------------------------------------------------------------------
 # Greedy template generator (scalable; 1F1B / wave patterns)
 # --------------------------------------------------------------------------
 
@@ -408,6 +552,19 @@ def greedy_schedule(
     return Schedule(S, M, D, tuple(placed))
 
 
+# Tie-break orientations greedy_schedule_timed accepts; the interleaved
+# portfolio in schedule_for_partition races all of them.
+TIMED_PRIORITIES = ("backward", "forward", "critical_path", "window")
+
+# Portfolio candidates whose simulated makespan lands within this relative
+# band of the best compete on liveness windows / exposed hops instead of
+# raw makespan: below 1% the event-driven model's fidelity cannot rank
+# candidates (it ignores launch overheads and overlap jitter), while the
+# windows are exact executor buffer memory.  The band is the hard bound on
+# how much modelled makespan a buffer win may spend.
+MAKESPAN_BAND = 0.01
+
+
 def greedy_schedule_timed(
     S: int,
     M: int,
@@ -432,17 +589,25 @@ def greedy_schedule_timed(
     - ``"forward"`` — forward tasks first (keeps downstream devices fed
       through the interleave's extra fill phases);
     - ``"critical_path"`` — longest remaining chain duration first
-      (HEFT-style upward rank; packs the drain the way the ILP does).
+      (HEFT-style upward rank; packs the drain the way the ILP does);
+    - ``"window"`` — oldest-resident input first: among equally-early
+      candidates, run the task whose predecessor finished *earliest*, so
+      arrivals drain FIFO.  A consumed arrival frees its receive slot, so
+      this orientation directly targets small liveness windows (W_down /
+      W_up) and leaves later-arriving messages the most overlap slack;
+      embeds (no arrival) yield to any task with a resident input.
 
-    None of the three dominates on interleaved mappings, so
+    None of the orientations dominates on interleaved mappings, so
     :func:`schedule_for_partition` races all of them.  The resulting
     per-device *order* is layered onto unit steps (longest-path over the
     chain / monotone / exclusivity constraints), producing a valid
     :class:`Schedule` whose order ``simulate`` — and the table-driven
     executors — replay exactly.
     """
-    if priority not in ("backward", "forward", "critical_path"):
-        raise ValueError(f"unknown priority {priority!r}")
+    if priority not in TIMED_PRIORITIES:
+        raise ValueError(
+            f"unknown priority {priority!r}; expected one of "
+            f"{TIMED_PRIORITIES}")
     V = num_virtual(S)
     dur_of = [times[stage_of_virtual(v, S)] * (
         bwd_ratio if is_backward(v, S) else 1.0) for v in range(V)]
@@ -450,14 +615,21 @@ def greedy_schedule_timed(
     for v in range(V - 1, -1, -1):
         rem[v] = rem[v + 1] + dur_of[v]
 
+    start: dict[tuple[int, int], float] = {}
+    finish: dict[tuple[int, int], float] = {}
+
     def tie_key(v: int, m: int):
         if priority == "critical_path":
             return (-rem[v], m)
+        if priority == "window":
+            # FIFO over resident inputs: the earliest-finished predecessor
+            # has occupied its receive slot longest — consuming it first
+            # keeps the rx liveness windows small.  Tasks with no arrival
+            # (embeds) defer to any task holding a slot.
+            arr = finish[(v - 1, m)] if v > 0 else float("inf")
+            return (arr, m, -v)
         bwd_first = priority == "backward"
         return (0 if (bwd_first == is_backward(v, S)) else 1, m, -v)
-
-    start: dict[tuple[int, int], float] = {}
-    finish: dict[tuple[int, int], float] = {}
     dev_free = [0.0] * D
     next_m = [0] * V        # lowest pending microbatch per v (monotone)
     dev_of_v = [device_of_stage(stage_of_virtual(v, S)) for v in range(V)]
@@ -539,11 +711,21 @@ def schedule_for_partition(part, M: int, *, use_ilp: bool = False,
 
     Interleaved partitions (more than one stage slot pair per device) race
     a small candidate portfolio — the unit-slot greedy plus the
-    duration-aware :func:`greedy_schedule_timed` in both priority
-    orientations, scored by event-driven simulation over the partition's
-    own stage costs — because no single list-scheduling priority dominates
-    once a device multiplexes V slots.  V = 1 plans keep the exact paper
-    templates.
+    duration-aware :func:`greedy_schedule_timed` in every priority
+    orientation (including the window-minimizing ``"window"``
+    tie-break) — because no single list-scheduling priority dominates
+    once a device multiplexes V slots.  Candidates are scored in two
+    passes: simulated makespan first; candidates within
+    :data:`MAKESPAN_BAND` of the best then compete on total liveness
+    windows (W_down + W_up + W_turn + W_skip — the buffers the executors
+    allocate), then exposed hops (messages whose consumer runs on the
+    very next step, which the overlapped executors cannot hide under
+    compute), with makespan as the final tie-break.  The windows and
+    overlap slack are optimization terms of the synthesis, not post-hoc
+    measurements; the band bounds how much modelled makespan a buffer
+    win may spend — below it the cost model's fidelity cannot separate
+    candidates, while the windows are exact executor memory.  V = 1
+    plans keep the exact paper templates.
 
     Raises ``ValueError`` listing every violated constraint if the
     synthesized schedule is invalid — planning bugs surface here, before an
@@ -555,15 +737,26 @@ def schedule_for_partition(part, M: int, *, use_ilp: bool = False,
                              collocated=part.collocated_pairs(),
                              time_limit=time_limit)
     else:
-        interleaved = S > (2 * D if getattr(part, "folded", False) else D)
+        folded = bool(getattr(part, "folded", False))
+        interleaved = S > (2 * D if folded else D)
         if interleaved:
             times = getattr(part, "stage_costs", None) or (1.0,) * S
             cands = [greedy_schedule(S, M, part.device_of_stage, D)] + [
                 greedy_schedule_timed(S, M, part.device_of_stage, D, times,
                                       priority=prio)
-                for prio in ("backward", "forward", "critical_path")
+                for prio in TIMED_PRIORITIES
             ]
-            sched = min(cands, key=lambda s: simulate(s, times)[0])
+            scored = [(simulate(s, times)[0], s) for s in cands]
+            best_mk = min(mk for mk, _ in scored)
+            near = [(mk, s) for mk, s in scored
+                    if mk <= best_mk * (1.0 + MAKESPAN_BAND)]
+
+            def residency(entry: tuple[float, Schedule]):
+                mk, s = entry
+                st = comm_stats(s, part.device_of_stage, folded)
+                return (st.window_total, st.exposed_hops, mk)
+
+            sched = min(near, key=residency)[1]
         else:
             sched = greedy_schedule(S, M, part.device_of_stage, D)
     errors = validate_schedule(sched, part.device_of_stage,
@@ -694,6 +887,18 @@ def ilp_schedule(
     constraints = LinearConstraint(A, np.array(lbs), np.array(ubs))
 
     # objective: min T_max + eps * sum(t * x)  (canonical early schedules)
+    #            + eps_w * sum_cross-edges (t(v+1,m) - t(v,m))
+    # The second tiebreak is a *residency* penalty on cross-device chain
+    # edges: each message occupies its receiver's rotating buffer slot
+    # from production until consumption, so total residency upper-bounds
+    # the liveness windows the executors allocate — the ILP prefers, among
+    # makespan-optimal schedules, ones with shorter in-flight lifetimes
+    # (smaller rx windows, more overlap slack).  Both weights are scaled
+    # so their combined contribution stays below one unit step: eps's
+    # term is <= 1/(T+1) and eps_w's <= 1/(2(T+1)), so T_max remains
+    # strictly dominant and ilp.makespan <= greedy.makespan is preserved.
+    # Residency needs a fixed stage->device mapping; with free device
+    # variables the cross-edge set is unknown, so the penalty is skipped.
     c = np.zeros(nvar)
     c[tmax_id] = 1.0
     eps = 1.0 / (V * M * T * (T + 1))
@@ -702,6 +907,18 @@ def ilp_schedule(
             for d in range(D):
                 for t in range(T):
                     c[xid(v, m, d, t)] = eps * t
+    if not free_map:
+        eps_w = eps / 2.0
+        for v in range(V - 1):
+            dv = device_of_stage(stage_of_virtual(v, S))
+            dn = device_of_stage(stage_of_virtual(v + 1, S))
+            if dv == dn:
+                continue
+            for m in range(M):
+                for d in range(D):
+                    for t in range(T):
+                        c[xid(v + 1, m, d, t)] += eps_w * t
+                        c[xid(v, m, d, t)] -= eps_w * t
 
     integrality = np.ones(nvar)
     res = milp(
@@ -732,6 +949,7 @@ def simulate(
     *,
     bwd_ratio: float = 2.0,
     p2p_time: float = 0.0,
+    overlap: bool = True,
 ) -> tuple[float, float]:
     """Event-driven makespan with real durations.
 
@@ -739,6 +957,14 @@ def simulate(
     a task starts when (a) its predecessor in the chain has finished
     (+``p2p_time`` if it crossed devices) and (b) its device is free.
     Returns ``(makespan_seconds, bubble_ratio)``.
+
+    ``overlap`` (default) models asynchronous sends — the table executors'
+    overlapped lowering: a producer hands its boundary activation to the
+    ring and immediately starts its next task, so only the *receiver*
+    waits out ``p2p_time``.  ``overlap=False`` models the synchronous
+    lowering (the ``PipelineConfig.overlap=False`` escape hatch), where
+    the producing device also blocks for ``p2p_time`` after every
+    cross-device send before its next compute.
     """
     S = sched.S
     by_dev: dict[int, list[Placement]] = {}
@@ -778,6 +1004,12 @@ def simulate(
                 start = max(ready, dev_free[d])
                 finish[key] = start + dur
                 dev_free[d] = start + dur
+                if not overlap and p.virtual < sched.S * 2 - 1:
+                    s_next = stage_of_virtual(p.virtual + 1, S)
+                    if s_next in dev_of and dev_of[s_next] != d:
+                        # synchronous lowering: the sender's ppermute sits
+                        # on its own timeline before the next compute
+                        dev_free[d] += p2p_time
                 busy_time += dur
                 queue.pop(0)
                 n_done += 1

@@ -21,12 +21,21 @@ from repro.core.schedule import (schedule_for_partition, simulate,
 
 @dataclasses.dataclass(frozen=True)
 class StageProfile:
-    """Per-stage profiled quantities; indices follow pipeline stage order."""
+    """Per-stage profiled quantities; indices follow pipeline stage order.
+
+    ``act_bytes_per_sample`` includes each stage's skip-stash bytes (the
+    historical aggregate every dense consumer prices);
+    ``skip_bytes_per_sample`` additionally breaks the skip share out per
+    stage so :func:`peak_memory` can price the stash at the proven
+    ``W_skip`` rotating window instead of dense over all ``P`` in-flight
+    microbatches.  Legacy profiles may leave it empty (skip treated as
+    inseparable from the activations — the dense pricing)."""
 
     fwd_time_per_sample: tuple[float, ...]   # T_f^s(b) = b * this
     param_bytes: tuple[int, ...]             # M_theta^s
-    act_bytes_per_sample: tuple[int, ...]    # M_a^s
+    act_bytes_per_sample: tuple[int, ...]    # M_a^s (incl. skip share)
     out_bytes_per_sample: tuple[int, ...]    # M_o^s
+    skip_bytes_per_sample: tuple[int, ...] = ()   # skip share of M_a^s
 
     @property
     def num_stages(self) -> int:
@@ -34,7 +43,7 @@ class StageProfile:
 
 
 def profile_partition(graph: BlockGraph, part: part_mod.Partition) -> StageProfile:
-    f, p, a, o = [], [], [], []
+    f, p, a, o, k = [], [], [], [], []
     for s in range(part.num_stages):
         lo, hi = part.stage_range(s)
         blocks = graph.blocks[lo:hi]
@@ -42,7 +51,8 @@ def profile_partition(graph: BlockGraph, part: part_mod.Partition) -> StageProfi
         p.append(sum(b.param_bytes for b in blocks))
         a.append(sum(b.act_bytes + b.skip_bytes for b in blocks))
         o.append(blocks[-1].act_bytes)
-    return StageProfile(tuple(f), tuple(p), tuple(a), tuple(o))
+        k.append(sum(b.skip_bytes for b in blocks))
+    return StageProfile(tuple(f), tuple(p), tuple(a), tuple(o), tuple(k))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,7 +79,8 @@ class TunerChoice:
 def peak_memory(
     prof: StageProfile, P: int, b: int, *, wave: bool, V: int = 1,
     param_state_factor: float = 7.0,
-    windows: tuple[int, int] | None = None, wire_bytes: int = 2,
+    windows: "tuple[int, int] | tuple[int, int, int] | None" = None,
+    wire_bytes: int = 2,
 ) -> float:
     """Eq. (14).  The busiest devices are the innermost collocated pair
     (stages P-1 and P, 0-indexed) which retain activations for all
@@ -84,41 +95,75 @@ def peak_memory(
     term (``P`` / ``P + 2V - 2`` activations) with the liveness windows
     the schedule lowering proved: ``W_rx`` receive-buffer entries at
     ``wire_bytes``/element (the wire format of the hops) plus two ring
-    registers, and ``W_turn`` turnaround entries at fp32.  ``tune``
-    passes the lowered windows, so smaller proven footprints admit larger
-    microbatches on memory-bound candidates.  Without windows the dense
-    pre-liveness sizing is priced (back-compat / no schedule yet).
+    registers, and ``W_turn`` turnaround entries at fp32.  The 3-tuple
+    form ``(W_rx, W_turn, W_skip)`` additionally prices the skip stash
+    at its proven rotating window — ``W_skip`` fp32 entries of the
+    largest per-stage skip payload — instead of dense over all ``P``
+    in-flight microbatches (the executor allocates exactly ``W_skip``
+    rotating entries, so the dense charge over-billed skip-heavy
+    candidates).  ``tune`` passes the lowered 3-tuple, so smaller proven
+    footprints admit larger microbatches on memory-bound candidates.
+    Without windows the dense pre-liveness sizing is priced (back-compat
+    / no schedule yet); the legacy 2-tuple keeps skip dense.
     """
     from repro.core.comm_model import ACT_DENOM_BYTES
 
     def boundary_term(m_out: float, dense_count: float) -> float:
         if windows is None:
             return dense_count * m_out * b
-        w_rx, w_turn = windows
+        w_rx, w_turn = windows[0], windows[1]
         return m_out * b * ((w_rx + 2) * wire_bytes / ACT_DENOM_BYTES
                             + w_turn * 4 / ACT_DENOM_BYTES)
+
+    w_skip = None
+    if windows is not None and len(windows) == 3 and prof.skip_bytes_per_sample:
+        w_skip = windows[2]
+    skips = prof.skip_bytes_per_sample or (0,) * prof.num_stages
+    # The skip stash lives at fp32 regardless of the wire format (it never
+    # rides the ring; act bytes are denominated at ACT_DENOM_BYTES/elem).
+    skip_entry_factor = b * 4 / ACT_DENOM_BYTES
 
     if V > 1:
         slots = 2 * V if wave else V
         m_theta = slots * max(prof.param_bytes)
-        m_act = slots * max(prof.act_bytes_per_sample)
+        if w_skip is None:
+            m_act = slots * max(prof.act_bytes_per_sample)
+            skip_term = 0.0
+        else:
+            m_act = slots * max(a - k for a, k in
+                                zip(prof.act_bytes_per_sample, skips))
+            skip_term = w_skip * max(skips) * skip_entry_factor
         m_out = max(prof.out_bytes_per_sample)
         return (param_state_factor * m_theta
                 + P * m_act * b
+                + skip_term
                 + boundary_term(m_out, P + slots - 2))
     if wave:
         i, j = P - 1, P  # innermost pair on the same device
         m_theta = prof.param_bytes[i] + prof.param_bytes[j]
-        m_act = prof.act_bytes_per_sample[i] + prof.act_bytes_per_sample[j]
+        if w_skip is None:
+            m_act = prof.act_bytes_per_sample[i] + prof.act_bytes_per_sample[j]
+            skip_term = 0.0
+        else:
+            m_act = (prof.act_bytes_per_sample[i] - skips[i]
+                     + prof.act_bytes_per_sample[j] - skips[j])
+            skip_term = w_skip * max(skips[i], skips[j]) * skip_entry_factor
         m_out = prof.out_bytes_per_sample[i - 1] if i >= 1 else prof.out_bytes_per_sample[0]
     else:
-        # 1F1B: stage 0 retains P microbatches
+        # 1F1B: stage 0 retains P microbatches (skip-free graphs, but the
+        # windowed form stays uniform if a profile carries skip bytes)
         m_theta = prof.param_bytes[0]
-        m_act = prof.act_bytes_per_sample[0]
+        if w_skip is None:
+            m_act = prof.act_bytes_per_sample[0]
+            skip_term = 0.0
+        else:
+            m_act = prof.act_bytes_per_sample[0] - skips[0]
+            skip_term = w_skip * skips[0] * skip_entry_factor
         m_out = prof.out_bytes_per_sample[0]
     return (
         param_state_factor * m_theta
         + P * m_act * b
+        + skip_term
         + boundary_term(m_out, P)
     )
 
@@ -133,6 +178,7 @@ def t_allreduce(param_bytes: float, G: int, hw: Hardware) -> float:
 def t_sched_paper(
     prof: StageProfile, P: int, b: int, G: int, hw: Hardware,
     *, M: int | None = None, V: int = 1, wire_dtype: str = "bfloat16",
+    overlap: bool = True,
 ) -> float:
     """Eq. (15): (10P-4) T_f(b) + (10P-12)(t_lat + b M_o / B) + T_AR.
 
@@ -159,6 +205,16 @@ def t_sched_paper(
     liveness lowering landed, the table executors paid fp32 on every hop
     while this model priced bf16 — the executors now pay what Eq. (15)
     prices.
+
+    ``overlap`` prices the double-buffered executors
+    (``PipelineConfig.overlap``, the default): the ~``4P-12`` fill/drain
+    ramp hops stay *exposed* (their consumer runs on the very next step,
+    nothing to hide under) and cost full ``p2p``, while the ``6VM``
+    steady-state hops ride under the next step's compute and only cost
+    what that compute does not absorb, ``max(0, p2p - t_f)`` — the same
+    split :class:`repro.core.comm_model.OverlapAccounting` prices from a
+    lowered schedule.  ``overlap=False`` is the synchronous lowering:
+    every hop serializes at full ``p2p`` (the historical form).
     """
     if M is None:
         M = P
@@ -166,9 +222,15 @@ def t_sched_paper(
     m_o = max(prof.out_bytes_per_sample) * b * wire_factor(wire_dtype)
     m_theta = max(prof.param_bytes)
     p2p = hw.t_lat + m_o / hw.inter_bw
+    n_hops = max(6 * V * M + 4 * P - 12, 0)
+    if overlap:
+        n_ramp = min(max(4 * P - 12, 0), n_hops)
+        t_comm = n_ramp * p2p + (n_hops - n_ramp) * max(0.0, p2p - t_f)
+    else:
+        t_comm = n_hops * p2p
     return (
         (6 * V * M + 4 * P - 4) * t_f
-        + max(6 * V * M + 4 * P - 12, 0) * p2p
+        + t_comm
         + t_allreduce(m_theta, G, hw)
     )
 
@@ -177,7 +239,7 @@ def t_sched_simulated(
     prof: StageProfile, P: int, b: int, G: int, hw: Hardware,
     *, microbatches: int, wave: bool,
     part: "part_mod.Partition | None" = None,
-    sched=None, wire_dtype: str = "bfloat16",
+    sched=None, wire_dtype: str = "bfloat16", overlap: bool = True,
 ) -> float:
     """Higher-fidelity alternative: event-driven simulation of the actual
     schedule with per-stage durations (beyond-paper option).  With a
@@ -185,7 +247,10 @@ def t_sched_simulated(
     stage->device mapping (required to price interleaved V > 1 plans);
     otherwise the classic V = 1 templates are simulated.  The schedule
     depends only on (part, microbatches) — callers sweeping b (the
-    tuner's inner loop) should synthesize once and pass ``sched``."""
+    tuner's inner loop) should synthesize once and pass ``sched``.
+    ``overlap`` selects whether cross-device sends occupy the sender
+    (synchronous lowering) or ride under its next task (the
+    double-buffered executors) — see :func:`repro.core.schedule.simulate`."""
     if sched is None:
         if part is not None:
             sched = schedule_for_partition(part, microbatches)
@@ -195,7 +260,8 @@ def t_sched_simulated(
     times = [t * b for t in prof.fwd_time_per_sample]
     m_o = max(prof.out_bytes_per_sample) * b * wire_factor(wire_dtype)
     mk, _ = simulate(sched, times, bwd_ratio=2.0,
-                     p2p_time=hw.t_lat + m_o / hw.inter_bw)
+                     p2p_time=hw.t_lat + m_o / hw.inter_bw,
+                     overlap=overlap)
     return mk + t_allreduce(max(prof.param_bytes), G, hw)
 
 
@@ -211,6 +277,7 @@ def tune(
     drops: list[str] | None = None,
     interleave_options: Sequence[int] | None = None,
     wire_dtype: str = "bfloat16",
+    overlap: bool = True,
 ) -> list[TunerChoice]:
     """Enumerate (P, G, b) — and the interleave degree V for wave plans —
     and return all feasible choices, best first.
@@ -243,6 +310,12 @@ def tune(
     larger microbatches) at ``wire_dtype`` hop bytes, and (b) plans whose
     schedule the executors cannot realize are dropped with a reason
     instead of failing later in ``auto_pipeline``.
+
+    ``overlap`` must match the executor mode the winning choice will run
+    (``PipelineConfig.overlap``): both scorers price hidden steady-state
+    hops at ``max(0, p2p - t_f)`` when True and full ``p2p`` when False,
+    so the tuner ranks candidates by the comm cost the lowering actually
+    pays.
     """
     if microbatches_per_iter is None:
         microbatches_per_iter = lambda P: max(P, 1)
@@ -297,7 +370,8 @@ def tune(
                         drops.append(f"{vtag}: schedule synthesis/lowering "
                                      f"infeasible: {e}")
                     continue
-                windows = (tabs.W_down + tabs.W_up, tabs.W_turn)
+                windows = (tabs.W_down + tabs.W_up, tabs.W_turn,
+                           tabs.W_skip)
             b = 1
             while b <= max_microbatch:
                 mem = peak_memory(prof, max(P, 1), b,
@@ -315,10 +389,12 @@ def tune(
                     t_iter = t_sched_simulated(prof, P, b, G, hw,
                                                microbatches=M, wave=wave,
                                                part=part, sched=sched,
-                                               wire_dtype=wire_dtype)
+                                               wire_dtype=wire_dtype,
+                                               overlap=overlap)
                 elif P > 1:
                     t_iter = t_sched_paper(prof, P, b, G, hw, M=M, V=V,
-                                           wire_dtype=wire_dtype)
+                                           wire_dtype=wire_dtype,
+                                           overlap=overlap)
                 else:
                     # pure DP: compute + all-reduce
                     t_f = sum(prof.fwd_time_per_sample) * b

@@ -74,6 +74,11 @@ def main(argv=None):
             args.ckpt_dir, (params, opt_state))
         print(f"[train] resumed from step {start}")
 
+    if start >= args.steps:
+        print(f"[train] nothing to do: resumed step {start} >= "
+              f"--steps {args.steps}")
+        return None
+
     import time
     t0 = time.time()
     for step in range(start, args.steps):

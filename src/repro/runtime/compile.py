@@ -559,11 +559,15 @@ class CompiledPipeline:
         if self.executor == "table":
             tabs = self.step_tables()
             live_d, live_u = tabs.live_hops
+            mode = "overlapped" if self.pcfg.overlap else "synchronous"
             lines.append(
                 f"  wire: {self.pcfg.wire_dtype}, live hops "
                 f"{live_d}+{live_u}/{tabs.dense_hops} (down+up/dense), "
                 f"windows W_down={tabs.W_down} W_up={tabs.W_up} "
                 f"W_turn={tabs.W_turn} W_skip={tabs.W_skip} (M={sched.M})")
+            lines.append(
+                f"  comm: {mode}, exposed hops {tabs.exposed_hops} / "
+                f"hidden {tabs.hidden_hops} (of {live_d + live_u} live)")
         if self.choice is not None:
             c = self.choice
             lines.append(f"  tuner: P={c.P} G={c.G} b={c.b} M={c.M} "
@@ -593,6 +597,7 @@ def auto_pipeline(
     use_ilp: bool = False,
     executor: str = "table",
     wire_dtype: str = "bfloat16",
+    overlap: bool = True,
 ) -> CompiledPipeline:
     """Plan, schedule, and lower a pipeline for ``graph`` on ``N`` devices.
 
@@ -620,6 +625,16 @@ def auto_pipeline(
     same dtype through the cast transposes).  ``"float32"`` is the
     exact-wire escape hatch the strict differential tests pin; closed-form
     executors are always fp32-wire references.
+
+    ``overlap`` (default True) double-buffers the table executors' ring
+    hops: each step's sends are issued at the top of the next step's scan
+    body, before that step's compute, so XLA's latency-hiding scheduler
+    can run the collective-permute concurrently with independent compute.
+    Values, arrival steps, and liveness windows are identical either way
+    — ``overlap=False`` is the synchronous reference lowering the
+    differential tests compare against.  The tuner scores candidates with
+    the matching comm term (hidden steady-state hops cost
+    ``max(0, t_p2p - t_f)``, exposed ramp hops full ``t_p2p``).
     """
     choice: TunerChoice | None = None
     if pipeline_devices is not None:
@@ -640,7 +655,8 @@ def auto_pipeline(
         choices = tune(graph, N, hw=hw, lam=lam, drops=drops,
                        interleave_options=(
                            (interleave,) if interleave is not None
-                           else None))
+                           else None),
+                       overlap=overlap)
         drops += [f"P={c.P} G={c.G} b={c.b}: pure data parallelism "
                   "(P=1 plans carry no pipeline to lower)"
                   for c in choices if c.partition is None or c.P <= 1]
@@ -671,7 +687,7 @@ def auto_pipeline(
     pcfg = PipelineConfig(num_devices=D, num_microbatches=M,
                           data_axes=data_axes, dp_size=dp_size,
                           remat=remat, remat_policy=remat_policy,
-                          wire_dtype=wire_dtype)
+                          wire_dtype=wire_dtype, overlap=overlap)
     layout = StageLayout.from_partition(part, graph)
     return CompiledPipeline(graph=graph, partition=part, schedule=sched,
                             layout=layout, pcfg=pcfg, model_fns=model_fns,

@@ -57,6 +57,26 @@ skip-stash lifetime).  The executors lower these directly:
   "float32"`` is the escape hatch the exact differential tests pin
   (see README "Wire format & buffer liveness" for tolerance guidance).
 
+Comm/compute overlap: with ``PipelineConfig.overlap`` (the default) the
+executors *double-buffer* the ring hops — step t's payload rides the
+``ppermute`` issued at the top of step t+1's scan body, before that
+step's compute, instead of at the bottom of step t.  The store tables
+prove the target receive slot is dead until the arrival's consumer runs,
+so prefetching into it is safe; values, arrival steps and windows are
+identical to the synchronous lowering (``overlap=False``, the
+differential reference), but the collective and the next step's
+independent compute now sit in the same scan iteration with no data
+dependency between them, so XLA's latency-hiding scheduler can overlap
+them.  The analysis classifies each hop as **exposed** (its consumer
+runs on the very next forward step — the dependency forces the
+collective onto the critical path; cost ``t_p2p``) or **hidden**
+(intervening compute covers it; cost ``max(0, t_p2p - t_f)``) —
+``exposed_hops`` / ``hidden_hops`` here, mirrored by the planner's
+``core.schedule.comm_stats`` and priced by
+``core.comm_model.overlap_accounting`` and the tuner's Eq. 15
+generalization, so the planner and the executor are held to the same
+split the way ``lowered_comm_volume`` already holds the live-hop bytes.
+
 The closed-form executors remain fp32-wire, O(1)-register differential
 references via ``auto_pipeline(..., executor="closed_form")``;
 ``core.comm_model.lowered_comm_volume`` prices exactly the live hops and
@@ -193,6 +213,11 @@ class StepTables:
     W_up: int
     W_turn: int
     W_skip: int
+    # hops whose consumer runs on the very next forward step: the arrival's
+    # dependency serializes the collective against compute even in the
+    # overlapped lowering (the rest are hidden under intervening steps)
+    exposed_down: int
+    exposed_up: int
     embed_device: int = 0
     turn_device: int = -1
 
@@ -209,6 +234,19 @@ class StepTables:
     def dense_hops(self) -> int:
         """Hops the pre-liveness lowering paid: every ring, every step."""
         return self.rings * self.D * self.num_steps
+
+    @property
+    def exposed_hops(self) -> int:
+        """Live hops whose consumer runs one step after the producer —
+        the overlapped executor cannot hide these under compute."""
+        return self.exposed_down + self.exposed_up
+
+    @property
+    def hidden_hops(self) -> int:
+        """Live hops with at least one intervening step before their
+        consumer: the overlapped lowering prefetches them under compute."""
+        down, up = self.live_hops
+        return down + up - self.exposed_hops
 
     @classmethod
     def from_schedule(cls, sched: Schedule, *, folded: bool,
@@ -404,16 +442,21 @@ class StepTables:
         up_slot = np.zeros((D, T), dtype=np.int32)
         rx_slot = np.zeros((D, T), dtype=np.int32)
         windows = {}
+        exposed = {}
         for name, msgs, send_tab, slot_tab in (
                 ("down", msgs_down, down_send, down_slot),
                 ("up", msgs_up, up_send, up_slot)):
             by_dev: dict[int, list[tuple[int, int]]] = {}
+            n_exposed = 0
             for src, dst, k_prod, v, m in msgs:
                 send_tab[src, k_prod] = True
                 # in flight in the receiver's buffer from arrival (start
                 # of k_prod + 1) until its consumer runs
-                by_dev.setdefault(dst, []).append(
-                    (k_prod + 1, k_of_task[(v + 1, m)]))
+                k_cons = k_of_task[(v + 1, m)]
+                by_dev.setdefault(dst, []).append((k_prod + 1, k_cons))
+                if k_cons == k_prod + 1:
+                    n_exposed += 1
+            exposed[name] = n_exposed
             W = 0
             for dst, ivs in by_dev.items():
                 assign, w = _color_intervals(ivs)
@@ -498,6 +541,7 @@ class StepTables:
                    skip_rd_slot=skip_rd_slot,
                    W_down=windows["down"], W_up=windows["up"],
                    W_turn=W_turn, W_skip=W_skip,
+                   exposed_down=exposed["down"], exposed_up=exposed["up"],
                    embed_device=device_of_stage(0),
                    turn_device=device_of_stage(half - 1) if folded else -1)
 
@@ -651,8 +695,14 @@ def make_wave_pipeline_from_schedule(
             _zeros_buffer(zero_skips, W_skip),    # cache[W_skip]: skips
         )
 
-        def step(carry, t):
-            down_in, up_in, enc_rx, dec_rx, turn, cache = carry
+        def hop(down_pl, up_pl):
+            down = (jax.lax.ppermute(down_pl, axis, down_perm)
+                    if down_used else down_pl)
+            up = (jax.lax.ppermute(up_pl, axis, up_perm)
+                  if up_used else up_pl)
+            return down, up
+
+        def body(down_in, up_in, enc_rx, dec_rx, turn, cache, t):
             enc_rx = _buf_store(enc_rx, dsl_t[t], down_in, dok_t[t])
             dec_rx = _buf_store(dec_rx, usl_t[t], up_in, uok_t[t])
             sel = sel_t[t]
@@ -702,11 +752,32 @@ def make_wave_pipeline_from_schedule(
             payload = x_out.astype(wire)
             down_pl = jnp.where(dsnd_t[t], payload, zero_w)
             up_pl = jnp.where(usnd_t[t], payload, zero_w)
-            down_next = (jax.lax.ppermute(down_pl, axis, down_perm)
-                         if down_used else down_pl)
-            up_next = (jax.lax.ppermute(up_pl, axis, up_perm)
-                       if up_used else up_pl)
-            return (down_next, up_next, enc_rx, dec_rx, turn, cache), loss
+            return down_pl, up_pl, enc_rx, dec_rx, turn, cache, loss
+
+        if cfg.overlap:
+            # Double-buffered hops: the carry holds step t-1's *unsent*
+            # payload and its ppermute is issued at the top of body t,
+            # before this step's compute.  The arrival still lands at the
+            # same step as the synchronous lowering (values identical),
+            # but the collective no longer depends on — nor is depended
+            # on by — this step's compute unless the arrival's consumer
+            # runs right now (an *exposed* hop), so XLA's latency-hiding
+            # scheduler can run hop and compute concurrently.
+            def step(carry, t):
+                pend_down, pend_up, enc_rx, dec_rx, turn, cache = carry
+                down_in, up_in = hop(pend_down, pend_up)
+                down_pl, up_pl, enc_rx, dec_rx, turn, cache, loss = body(
+                    down_in, up_in, enc_rx, dec_rx, turn, cache, t)
+                return (down_pl, up_pl, enc_rx, dec_rx, turn, cache), loss
+        else:
+            # Synchronous reference: hop at the bottom of the producing
+            # step; the carry holds the arrival.
+            def step(carry, t):
+                down_in, up_in, enc_rx, dec_rx, turn, cache = carry
+                down_pl, up_pl, enc_rx, dec_rx, turn, cache, loss = body(
+                    down_in, up_in, enc_rx, dec_rx, turn, cache, t)
+                down_nx, up_nx = hop(down_pl, up_pl)
+                return (down_nx, up_nx, enc_rx, dec_rx, turn, cache), loss
 
         _, losses = jax.lax.scan(step, init, jnp.arange(T))
         total = jnp.sum(losses) / M
@@ -771,8 +842,11 @@ def make_linear_pipeline_from_schedule(
 
         init = (zero_w, _zeros_buffer(zero_x, W_down, wire))
 
-        def step(carry, t):
-            h_in, rx = carry
+        def hop(h_pl):
+            return (jax.lax.ppermute(h_pl, axis, down_perm)
+                    if down_used else h_pl)
+
+        def body(h_in, rx, t):
             rx = _buf_store(rx, dsl_t[t], h_in, dok_t[t])
             m = mb_t[t]
             vslot = slot_t[t]
@@ -795,9 +869,20 @@ def make_linear_pipeline_from_schedule(
                 lambda: loss_fn(edge_p, x_out, mb_m),
                 lambda: jnp.zeros((), jnp.float32))
             h_pl = jnp.where(dsnd_t[t], x_out.astype(wire), zero_w)
-            h_next = (jax.lax.ppermute(h_pl, axis, down_perm)
-                      if down_used else h_pl)
-            return (h_next, rx), loss
+            return h_pl, rx, loss
+
+        if cfg.overlap:
+            # double-buffered hop: carry = pending payload, permuted at
+            # the top of the next step's body (see the wave executor)
+            def step(carry, t):
+                pend, rx = carry
+                h_pl, rx, loss = body(hop(pend), rx, t)
+                return (h_pl, rx), loss
+        else:
+            def step(carry, t):
+                h_in, rx = carry
+                h_pl, rx, loss = body(h_in, rx, t)
+                return (hop(h_pl), rx), loss
 
         _, losses = jax.lax.scan(step, init, jnp.arange(T))
         total = jnp.sum(losses) / M

@@ -11,7 +11,11 @@ mocked multi-device meshes (forced host devices) and
   (loss + grads) — the closed forms are the hand-written references;
 - the lowered step tables must match ``Schedule.grid()`` exactly
   (``device_programs`` slot-for-slot; ``StepTables`` on the forward
-  placements), for greedy *and* ILP schedules.
+  placements), for greedy *and* ILP schedules;
+- on selected configs, the overlapped (double-buffered ring hops)
+  executor must match the synchronous reference lowering
+  (``PipelineConfig.overlap=False``) — loss + grads at rtol 1e-4 on the
+  exact fp32 wire.
 
 Configs (pass names as argv to run a subset; default: all):
   linear-even    LM, S=D=4, uniform costs -> even 1F1B split
@@ -122,6 +126,25 @@ def _diff_wire(cp, mesh, state, batch_args, label):
           f"(loss {float(lb):.6f} vs {float(lf):.6f})")
 
 
+def _diff_overlap(cp, mesh, state, batch_args, label):
+    """Overlapped (double-buffered) executor vs the synchronous reference
+    lowering (``PipelineConfig.overlap=False``): loss + grads at rtol RTOL
+    on the exact fp32 wire — moving each step's ring sends to the top of
+    the next step's scan body must not change any value, only when the
+    collective runs relative to compute."""
+    ov = dataclasses.replace(
+        cp, pcfg=dataclasses.replace(cp.pcfg, overlap=True))
+    sync = dataclasses.replace(
+        cp, pcfg=dataclasses.replace(cp.pcfg, overlap=False))
+    lo, go = jax.jit(jax.value_and_grad(ov.bind(mesh)))(state, *batch_args)
+    ls, gs = jax.jit(jax.value_and_grad(sync.bind(mesh)))(state, *batch_args)
+    np.testing.assert_allclose(float(lo), float(ls), rtol=RTOL)
+    _check_grads(cp.merge_params(go[0], go[1]),
+                 cp.merge_params(gs[0], gs[1]), f"{label}[overlap-vs-sync]")
+    print(f"{label}: overlapped executor == synchronous lowering "
+          f"(loss {float(lo):.6f}; grads OK)")
+
+
 def _diff_executors(cp, mesh, state, batch_args, label):
     """Table executor vs closed-form executor: loss + grads (rtol 1e-4)."""
     cf = dataclasses.replace(cp, executor="closed_form")
@@ -137,7 +160,8 @@ def _diff_executors(cp, mesh, state, batch_args, label):
 
 
 def _run_lm(name, fwd_times, expect_uneven, *, force_wave=None,
-            pipeline_devices=4, compare_closed=True, interleave=None):
+            pipeline_devices=4, compare_closed=True, interleave=None,
+            check_overlap=False):
     cfg = LMConfig(name="t", vocab=64, d_model=32, n_layers=8,
                    attn=AttnConfig(32, 4, 2, 8), d_ff=64,
                    tied_embeddings=True)
@@ -182,9 +206,11 @@ def _run_lm(name, fwd_times, expect_uneven, *, force_wave=None,
     _check_grads(cp.merge_params(gp[0], gp[1]), gr, name)
     print(f"{name}: counts={cp.layout.counts} loss={float(lp):.6f} "
           f"== ref {float(lr):.6f}; grads OK")
+    batch_args = (mbs, {}) if cp.folded else (mbs,)
     if compare_closed:
-        batch_args = (mbs, {}) if cp.folded else (mbs,)
         _diff_executors(cp, mesh, state, batch_args, name)
+    if check_overlap:
+        _diff_overlap(cp, mesh, state, batch_args, name)
 
 
 def _run_uvit(name, fwd_times, expect_uneven, *, pipeline_devices=2,
@@ -248,7 +274,7 @@ def _run_uvit(name, fwd_times, expect_uneven, *, pipeline_devices=2,
 def _run_skipvit(name, cfg, fwd_times, *, pipeline_devices=2,
                  microbatches=4, compare_closed=True, interleave=None,
                  use_ilp=False, expect_asym=True, remat=True,
-                 check_wire=False):
+                 check_wire=False, check_overlap=False):
     """SkipViT (homogeneous stack, sparse/mid-block skips): the partitions
     are mirror-ASYMMETRIC folds — the configs StageLayout used to reject.
     Table executor vs single-device reference; closed-form wave (which now
@@ -310,6 +336,8 @@ def _run_skipvit(name, cfg, fwd_times, *, pipeline_devices=2,
     if check_wire:
         _check_windows(cp, name)
         _diff_wire(cp, mesh, state, (mb, aux), name)
+    if check_overlap:
+        _diff_overlap(cp, mesh, state, (mb, aux), name)
 
 
 def _run_hunyuan(name, *, pipeline_devices=2, microbatches=4):
@@ -397,7 +425,8 @@ def _run_hunyuan(name, *, pipeline_devices=2, microbatches=4):
 CONFIGS = {
     "linear-even": lambda: _run_lm("linear-even", None, False),
     "linear-uneven": lambda: _run_lm(
-        "linear-uneven", [4, 1, 1, 1, 1, 1, 1, 4], True),
+        "linear-uneven", [4, 1, 1, 1, 1, 1, 1, 4], True,
+        check_overlap=True),
     "wave-even": lambda: _run_uvit("wave-even", None, False),
     "wave-uneven": lambda: _run_uvit(
         "wave-uneven", [3, 1, 1, 1, 1, 1, 1, 3], True, check_wire=True),
@@ -421,7 +450,7 @@ CONFIGS = {
     # (2,1)/(2,3) — the partitions StageLayout.from_partition rejected
     "wave-asym": lambda: _run_skipvit(
         "wave-asym", SkipViTConfig("t", n_enc=3, n_mid=2, n_dec=3),
-        [1, 1, 4, 0.5, 0.5, 0.5, 1, 1]),
+        [1, 1, 4, 0.5, 0.5, 0.5, 1, 1], check_overlap=True),
     # sparse skips: pair (1, 6) dropped -> decoder rows without a skip
     # read zeros via the pairing table's -1 sentinel (closed-form diff
     # covered by wave-asym; skipped here to keep tier-1 lean)
@@ -446,7 +475,7 @@ CONFIGS = {
         SkipViTConfig("t", n_enc=4, n_mid=2, n_dec=4),
         [1, 1, 2, 4, 0.5, 0.5, 0.5, 1, 1, 2],
         interleave=2, compare_closed=False, expect_asym=False,
-        remat=False, check_wire=True),
+        remat=False, check_wire=True, check_overlap=True),
     # ILP-synthesized (Eqs. 6-13) V=2 interleaved schedule through the
     # same table-driven lowering — exact orders, not just greedy ones
     "wave-interleaved-ilp": lambda: _run_skipvit(

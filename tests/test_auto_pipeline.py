@@ -441,8 +441,21 @@ def test_tuner_prices_windowed_buffers():
         prof = profile_partition(g, c.partition)
         windowed = peak_memory(
             prof, c.P, c.b, wave=c.wave, V=c.V,
-            windows=(tabs.W_down + tabs.W_up, tabs.W_turn))
+            windows=(tabs.W_down + tabs.W_up, tabs.W_turn, tabs.W_skip))
         assert c.peak_mem == windowed     # the score used the windows
+        # vs the legacy 2-tuple (skip charged dense inside m_act), the
+        # 3-tuple moves the skip stash to its proven rotating window:
+        # out go P dense in-flight copies, in come W_skip fp32 entries
+        legacy = peak_memory(
+            prof, c.P, c.b, wave=c.wave, V=c.V,
+            windows=(tabs.W_down + tabs.W_up, tabs.W_turn))
+        if c.wave and c.V == 1:
+            i, j = c.P - 1, c.P
+            skips = prof.skip_bytes_per_sample
+            dense_charge = c.P * (skips[i] + skips[j]) * c.b
+            window_charge = tabs.W_skip * max(skips[i], skips[j]) * c.b * 2
+            assert windowed == pytest.approx(
+                legacy - dense_charge + window_charge)
         if c.V > 1:
             # interleaved greedy schedules may genuinely buffer O(M)
             # arrivals on a multiplexed slot — the window then reports

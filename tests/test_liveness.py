@@ -9,14 +9,22 @@ until its consumer runs, inclusive; a stash entry from its write until its
 last read), across random valid schedules: greedy, duration-aware timed
 greedy in all priority orientations, and (nightly) the exact ILP, for
 interleave degrees V in {1, 2, 4}.
+
+They also hold the planner and the executor to AGREE on the overlap
+accounting: the planner-side ``core.schedule.comm_stats`` must report the
+same windows, live-hop counts, and exposed/hidden hop split as the
+executors' own lowering, and the double-buffered overlap mode never needs
+buffers beyond the proven windows (exposed + hidden == live, per ring).
 """
 import random
 
 import pytest
 
 from helpers.hypothesis_compat import given, settings, st
+from repro.core.comm_model import overlap_accounting
 from repro.core.partition import interleaved_wave_devices
-from repro.core.schedule import (greedy_schedule, greedy_schedule_timed,
+from repro.core.schedule import (TIMED_PRIORITIES, comm_stats,
+                                 greedy_schedule, greedy_schedule_timed,
                                  ilp_schedule, template_1f1b, template_wave,
                                  validate_schedule)
 from repro.runtime.schedule_exec import StepTables
@@ -46,6 +54,7 @@ def replay_windows(sched, device_of_stage, folded):
 
     rings = {"down": {}, "up": {}}
     n_msgs = {"down": 0, "up": 0}
+    n_exposed = {"down": 0, "up": 0}
     for p in fwd:
         v, m = p.virtual, p.microbatch
         if v >= S - 1 or (folded and v == half - 1):
@@ -55,6 +64,10 @@ def replay_windows(sched, device_of_stage, folded):
         rings[ring].setdefault(dst, []).append(
             (k_of[(v, m)] + 1, k_of[(v + 1, m)]))
         n_msgs[ring] += 1
+        # exposed = the consumer runs on the very next forward step, so
+        # the overlapped executor has no compute to hide the hop under
+        if k_of[(v + 1, m)] == k_of[(v, m)] + 1:
+            n_exposed[ring] += 1
 
     turn = {}
     if folded:
@@ -85,7 +98,8 @@ def replay_windows(sched, device_of_stage, folded):
 
     return {"W_down": peak(rings["down"]), "W_up": peak(rings["up"]),
             "W_turn": peak(turn), "W_skip": peak(skip),
-            "n_down": n_msgs["down"], "n_up": n_msgs["up"]}
+            "n_down": n_msgs["down"], "n_up": n_msgs["up"],
+            "x_down": n_exposed["down"], "x_up": n_exposed["up"]}
 
 
 def _check(sched, device_of_stage, folded):
@@ -100,6 +114,22 @@ def _check(sched, device_of_stage, folded):
     down, up = tabs.live_hops
     assert down == ref["n_down"] and up == ref["n_up"]
     assert down + up <= tabs.dense_hops
+    # overlap accounting: every live hop is exposed or hidden, nothing
+    # else — the double-buffered mode restructures WHEN hops are issued,
+    # never how many, so it cannot widen the proven windows above
+    assert tabs.exposed_down == ref["x_down"], (tabs.exposed_down, ref)
+    assert tabs.exposed_up == ref["x_up"], (tabs.exposed_up, ref)
+    assert tabs.exposed_hops + tabs.hidden_hops == down + up
+    assert 0 <= tabs.hidden_hops
+    # planner/executor agreement: the pure-python analysis the synthesizer
+    # and tuner consult reports the identical windows + hop classification
+    stats = comm_stats(sched, device_of_stage, folded)
+    assert (stats.W_down, stats.W_up, stats.W_turn, stats.W_skip) == \
+        (tabs.W_down, tabs.W_up, tabs.W_turn, tabs.W_skip)
+    assert stats.live_hops == tabs.live_hops
+    assert (stats.exposed_down, stats.exposed_up) == \
+        (tabs.exposed_down, tabs.exposed_up)
+    assert overlap_accounting(stats) == overlap_accounting(tabs)
     return tabs
 
 
@@ -129,7 +159,7 @@ def test_windows_match_replay_greedy_and_timed(D, M, V, seed):
     dev = lambda s: devices[s]
     _check(greedy_schedule(S, M, dev, D), dev, True)
     times = [rnd.uniform(0.1, 2.0) for _ in range(S)]
-    for prio in ("backward", "forward", "critical_path"):
+    for prio in TIMED_PRIORITIES:
         sched = greedy_schedule_timed(S, M, dev, D, times, priority=prio,
                                       p2p_time=rnd.uniform(0.0, 0.3))
         assert not validate_schedule(sched, dev)

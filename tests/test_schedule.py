@@ -7,7 +7,8 @@ import random
 import pytest
 
 from helpers.hypothesis_compat import given, settings, st
-from repro.core.schedule import (Placement, Schedule, template_1f1b,
+from repro.core.schedule import (Placement, Schedule, TIMED_PRIORITIES,
+                                 template_1f1b,
                                  template_wave, template_interleaved,
                                  ilp_schedule, greedy_schedule,
                                  greedy_schedule_timed,
@@ -150,20 +151,22 @@ def test_validate_schedule_reports_slot_context():
 @settings(max_examples=15, deadline=None)
 def test_timed_greedy_always_valid(D, M, V, seed):
     """The duration-aware list scheduler satisfies every constraint family
-    on interleaved mappings, for all three priorities and random
-    durations."""
+    on interleaved mappings, for all priority orientations (including the
+    window-minimizing arrival-order tie-break) and random durations."""
     from repro.core.partition import interleaved_wave_devices
     rnd = random.Random(seed)
     S = 2 * V * D
     devices = interleaved_wave_devices(S, D)
     dev = lambda st: devices[st]
     times = [rnd.uniform(0.1, 2.0) for _ in range(S)]
-    for prio in ("backward", "forward", "critical_path"):
+    for prio in TIMED_PRIORITIES:
         s = greedy_schedule_timed(S, M, dev, D, times, priority=prio,
                                   p2p_time=rnd.uniform(0.0, 0.3))
         assert not validate_schedule(s, dev)
         mk, bub = simulate(s, times, bwd_ratio=2.0)
         assert mk > 0 and 0.0 <= bub < 1.0
+    with pytest.raises(ValueError, match="priority"):
+        greedy_schedule_timed(S, M, dev, D, times, priority="sideways")
 
 
 @given(st.integers(2, 4), st.integers(1, 2), st.integers(0, 10_000))
@@ -203,6 +206,40 @@ def test_simulation_durations():
     assert 0.0 <= bubble < 0.5
     mk2, _ = simulate(s, [1.0] * 8, bwd_ratio=2.0, p2p_time=0.5)
     assert mk2 > mk
+
+
+@given(st.integers(2, 4), st.integers(2, 6), st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_simulate_sync_never_beats_overlap(D, M, seed):
+    """``simulate(overlap=False)`` charges the sender for every
+    cross-device hop (the synchronous lowering); the default overlapped
+    semantics let sends ride under the next task.  Synchronous makespan
+    must therefore dominate, and they coincide when hops are free."""
+    rnd = random.Random(seed)
+    s = template_wave(D, M)
+    times = [rnd.uniform(0.1, 2.0) for _ in range(2 * D)]
+    p2p = rnd.uniform(0.0, 0.5)
+    mk_ov, _ = simulate(s, times, bwd_ratio=2.0, p2p_time=p2p)
+    mk_sync, _ = simulate(s, times, bwd_ratio=2.0, p2p_time=p2p,
+                          overlap=False)
+    assert mk_sync >= mk_ov - 1e-9
+    free_ov, _ = simulate(s, times, bwd_ratio=2.0, p2p_time=0.0)
+    free_sync, _ = simulate(s, times, bwd_ratio=2.0, p2p_time=0.0,
+                            overlap=False)
+    assert free_sync == pytest.approx(free_ov)
+
+
+def test_empty_schedule_reports_shape():
+    """A placement-free schedule must raise a clear error naming the
+    schedule shape from makespan/bubble_ratio (not a bare ``max() arg is
+    an empty sequence``), and validate as a family (6) violation."""
+    empty = Schedule(S=4, M=2, D=2, placements=())
+    with pytest.raises(ValueError, match=r"S=4.*no placements"):
+        _ = empty.makespan
+    with pytest.raises(ValueError, match=r"no placements.*bubble_ratio"):
+        empty.bubble_ratio()
+    errs = validate_schedule(empty, lambda st: min(st, 3 - st))
+    assert errs and any("(6)" in e and "no placements" in e for e in errs)
 
 
 def test_monotone_in_microbatches():

@@ -3,7 +3,8 @@ import dataclasses
 
 from repro.core.graph import make_unet_like
 from repro.core.hw import V100_CLUSTER, Hardware
-from repro.core.tuner import tune, peak_memory, t_allreduce, profile_partition
+from repro.core.tuner import (tune, peak_memory, t_allreduce, t_sched_paper,
+                              t_sched_simulated, profile_partition)
 from repro.core.partition import partition
 
 
@@ -19,6 +20,55 @@ def test_memory_monotone_in_microbatch():
     prof = profile_partition(g, part)
     mems = [peak_memory(prof, 4, b, wave=True) for b in (1, 2, 4, 8)]
     assert all(m2 > m1 for m1, m2 in zip(mems, mems[1:]))
+
+
+def test_windowed_skip_pricing():
+    """The 3-tuple windows form moves the skip stash from the dense
+    ``P`` in-flight copies to ``W_skip`` rotating fp32 entries; the legacy
+    2-tuple and windows-free forms still price skip dense (back-compat),
+    and a profile without the skip split falls back to dense pricing."""
+    g = _graph()
+    part = partition(g, 4)
+    prof = profile_partition(g, part)
+    assert prof.skip_bytes_per_sample and any(prof.skip_bytes_per_sample)
+    P, b = 4, 2
+    legacy = peak_memory(prof, P, b, wave=True, windows=(2, 1))
+    w0 = peak_memory(prof, P, b, wave=True, windows=(2, 1, 0))
+    w2 = peak_memory(prof, P, b, wave=True, windows=(2, 1, 2))
+    i, j = P - 1, P
+    skip_dense = P * (prof.skip_bytes_per_sample[i]
+                      + prof.skip_bytes_per_sample[j]) * b
+    # W_skip=0: the whole dense skip charge is gone
+    assert w0 == legacy - skip_dense
+    # each W_skip entry bills the largest per-stage payload at fp32
+    assert w2 - w0 == 2 * max(prof.skip_bytes_per_sample[i],
+                              prof.skip_bytes_per_sample[j]) * b * 2
+    # a profile that never split skip out ignores the 3rd window
+    # component entirely (skip stays dense inside m_act)
+    unsplit = dataclasses.replace(prof, skip_bytes_per_sample=())
+    assert peak_memory(unsplit, P, b, wave=True, windows=(2, 1, 2)) == legacy
+
+
+def test_paper_model_overlap_term():
+    """Eq. (15)'s overlap-aware comm term: hidden steady-state hops cost
+    max(0, p2p - t_f), so the overlapped price is <= the synchronous one
+    and they coincide when every hop is exposed (no steady state)."""
+    g = _graph()
+    prof = profile_partition(g, partition(g, 4))
+    hw = V100_CLUSTER
+    for b in (1, 4):
+        ov = t_sched_paper(prof, 4, b, 4, hw)
+        sync = t_sched_paper(prof, 4, b, 4, hw, overlap=False)
+        assert ov <= sync
+    # simulation scoring exposes the same knob
+    sim_ov = t_sched_simulated(prof, 4, 1, 4, hw, microbatches=4, wave=True)
+    sim_sync = t_sched_simulated(prof, 4, 1, 4, hw, microbatches=4,
+                                 wave=True, overlap=False)
+    assert sim_ov <= sim_sync
+    # overlap=True choices never rank worse than their sync-priced twins
+    a = tune(g, 16, hw=hw)[0]
+    s = tune(g, 16, hw=hw, overlap=False)[0]
+    assert a.t_sample <= s.t_sample + 1e-12
 
 
 def test_allreduce_model():
