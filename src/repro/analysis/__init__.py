@@ -1,0 +1,46 @@
+"""Static plan verification: prove a lowered plan safe before it runs.
+
+The compile path validates *schedules* (``core.schedule.validate_schedule``,
+constraint families 6-11) and the lowering rejects shapes the executors
+cannot realize (``runtime.schedule_exec.PlanError``) — but until now
+nothing certified the *lowered step tables themselves*: the rotating-buffer
+slot assignments, channel-activity masks, and double-buffered hop ordering
+the scan bodies actually execute.  This package closes that gap with pure
+host-side analyses (no jax import, no execution):
+
+- :mod:`repro.analysis.dataflow` — abstractly interprets a lowered
+  :class:`~repro.runtime.schedule_exec.StepTables` device program over the
+  rotating ``W_down``/``W_up``/``W_turn``/``W_skip`` buffers and proves it
+  race-free (no store clobbers a live slot), initialization-sound (every
+  read sees exactly one matching store), deadlock-free (ring sends and
+  receives pair one hop apart every step, in both the synchronous and the
+  overlapped double-buffered lowering) and wire-dtype consistent.
+- :mod:`repro.analysis.certificate` — bundles the proof into a
+  machine-readable :class:`PlanCertificate` (JSON), attached to
+  ``CompiledPipeline.certify()`` and verifiable offline.
+- :mod:`repro.analysis.verify` — ``python -m repro.analysis.verify`` CLI:
+  certify tier-1 config plans or a saved plan file.
+- :mod:`repro.analysis.kernel_check` — import-free static shape / tiling /
+  dtype checks for the Pallas kernels.
+- :mod:`repro.analysis.lint` — AST policy linter for repo invariants ruff
+  cannot express (compat-only ``jax.experimental`` imports, lazy jax under
+  ``core/``, guarded ``max()``/``min()`` over placement sequences).
+"""
+from repro.analysis.dataflow import (CHECKS, DataflowReport, Violation,
+                                     interpret_tables)
+from repro.analysis.certificate import (PlanCertificate, certify_plan,
+                                        certify_schedule, certify_tables,
+                                        export_plan, load_plan)
+
+__all__ = [
+    "CHECKS",
+    "DataflowReport",
+    "Violation",
+    "interpret_tables",
+    "PlanCertificate",
+    "certify_plan",
+    "certify_schedule",
+    "certify_tables",
+    "export_plan",
+    "load_plan",
+]

@@ -13,8 +13,6 @@ from __future__ import annotations
 import time
 from typing import Callable, Sequence
 
-import jax
-
 from repro.core.graph import Block, BlockGraph
 from repro.core.hw import Hardware, TPU_V5E
 
@@ -44,6 +42,8 @@ def measure_block_times(
     iters: int = 3,
 ) -> list[float]:
     """Wall-clock seconds per call for each jitted block function."""
+    import jax                       # lazy: core/ imports without jax
+
     times = []
     for fn, a in zip(fns, args):
         jfn = jax.jit(fn)

@@ -4,6 +4,9 @@ Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec VMEM
 tiling), <name>/ops.py (jit'd public wrapper + custom VJP; interpret=True
 on CPU) and <name>/ref.py (pure-jnp oracle swept in tests/test_kernels.py).
 """
-from repro.kernels.flash_attention import flash_attention
-from repro.kernels.skip_matmul import skip_concat_matmul
-from repro.kernels.linear_scan import gated_linear_scan
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_supported)
+from repro.kernels.skip_matmul import (skip_concat_matmul,
+                                       skip_concat_matmul_supported)
+from repro.kernels.linear_scan import (gated_linear_scan,
+                                       gated_linear_scan_supported)

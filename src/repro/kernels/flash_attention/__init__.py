@@ -1,2 +1,3 @@
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_reference
+from repro.analysis.kernel_check import flash_attention_supported  # noqa: F401

@@ -1,2 +1,3 @@
 from repro.kernels.linear_scan.ops import gated_linear_scan
 from repro.kernels.linear_scan.ref import gated_linear_scan_reference
+from repro.analysis.kernel_check import gated_linear_scan_supported  # noqa: F401

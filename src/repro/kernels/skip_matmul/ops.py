@@ -13,20 +13,13 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def skip_concat_matmul_supported(rows: int, d: int, n: int,
-                                 block: int = 128) -> bool:
-    """Whether (rows, D) x (2D, N) operands tile the kernel's grid.
-
-    Single source of truth for the divisibility rule
-    ``skip_concat_matmul_fwd`` asserts (each dim must be a multiple of
-    its clamped block size); callers use it to fall back to the
-    reference contraction instead of tripping the assert.  Empty
-    operands are unsupported (the grid would be degenerate).
-    """
-    def tiles(dim: int) -> bool:
-        return dim > 0 and dim % min(block, dim) == 0
-
-    return tiles(rows) and tiles(d) and tiles(n)
+# Single source of truth for the launch constraints lives in the static
+# analysis layer (repro.analysis.kernel_check, jax-free): each dim must
+# be a positive multiple of its clamped block size and the VMEM-resident
+# blocks must fit the core budget.  Callers use the predicate to fall
+# back to the reference contraction instead of tripping the kernel's
+# trace-time assert.
+from repro.analysis.kernel_check import skip_concat_matmul_supported  # noqa: F401
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=())

@@ -383,6 +383,21 @@ class CompiledPipeline:
             self.schedule, folded=True, devices=self.partition.devices,
             skip_consumers=self.layout.skip_consumers())
 
+    def certify(self, *, name: str | None = None):
+        """Statically verify the lowered plan and return the
+        :class:`~repro.analysis.certificate.PlanCertificate`.
+
+        Abstractly interprets the step tables (no execution): race- and
+        deadlock-freedom of the ring hops, store/read matching on every
+        rotating buffer, wire-dtype flow, and the liveness-window bounds
+        — the proof ``python -m repro.analysis.verify`` re-checks
+        offline.  Raises nothing on failure; inspect ``cert.ok`` /
+        ``cert.violations`` (a freshly planned pipeline always
+        certifies clean — a FAIL here means a planner/lowering bug).
+        """
+        from repro.analysis.certificate import certify_plan
+        return certify_plan(self, name=name)
+
     # ---- executor ------------------------------------------------------
     def build(self) -> Callable:
         """Lower to an executor.

@@ -104,6 +104,38 @@ Pytree = Any
 IDLE, RUN_ENC, RUN_DEC = 0, 1, 2
 
 
+class PlanError(ValueError):
+    """A plan the lowering cannot realize, with structured context.
+
+    Every rejection carries the name of the violated check plus the
+    (device, step, slot) coordinates where the lowering noticed it, so
+    callers — and the mutation-soundness suite — can dispatch on
+    ``err.check`` instead of grepping message strings.  Subclasses
+    ``ValueError``: every pre-existing ``except ValueError`` /
+    ``pytest.raises(ValueError, match=...)`` site keeps working, and the
+    original message text is preserved verbatim inside the formatted
+    string.  ``python -m repro.analysis.verify`` replays the same plan
+    through the full static dataflow proof for the complete report.
+    """
+
+    POINTER = ("see `python -m repro.analysis.verify` for the full "
+               "diagnostic report")
+
+    def __init__(self, message: str, *, check: str,
+                 device: int | None = None, step: int | None = None,
+                 slot: int | None = None):
+        self.check = check
+        self.device = device
+        self.step = step
+        self.slot = slot
+        where = ", ".join(
+            f"{k}={v}" for k, v in (("device", device), ("step", step),
+                                    ("slot", slot)) if v is not None)
+        super().__init__(
+            f"[{check}{'; ' + where if where else ''}] {message} "
+            f"({self.POINTER})")
+
+
 def _color_intervals(ivs) -> tuple[dict[tuple[int, int], int], int]:
     """First-fit interval coloring by start step.
 
@@ -292,11 +324,12 @@ class StepTables:
                device_of_stage, skip_consumers=None) -> "StepTables":
         S, M, D = sched.S, sched.M, sched.D
         if (S % (2 * D) if folded else S % D) != 0:
-            raise ValueError(
+            raise PlanError(
                 f"schedule has S={S} stages but a "
                 f"{'folded' if folded else 'linear'} executor over D={D} "
                 f"devices lowers S = {'2*V*D' if folded else 'V*D'} "
-                "(an integer number of stage slots per device)")
+                "(an integer number of stage slots per device)",
+                check="program-shape")
         half = S // 2 if folded else S
         if device_of_stage is None:
             if folded:
@@ -308,10 +341,11 @@ class StepTables:
         if skip_consumers is not None:
             if len(skip_consumers) != D or any(
                     len(dev) != V for dev in skip_consumers):
-                raise ValueError(
+                raise PlanError(
                     f"skip_consumers must list every (device, dec slot): "
                     f"expected [{D}][{V}], got "
-                    f"{[len(dev) for dev in skip_consumers]}")
+                    f"{[len(dev) for dev in skip_consumers]}",
+                    check="program-shape")
         fwd = sorted((p for p in sched.placements if p.virtual < S),
                      key=lambda p: (p.step, p.device))
         steps = sorted({p.step for p in fwd})
@@ -332,13 +366,15 @@ class StepTables:
 
         def mark_rx(tab, ok, dev, k, m, chan):
             if k >= T:
-                raise ValueError(
+                raise PlanError(
                     f"message for m={m} sent on the last forward step has "
-                    "no consumer step — run validate_schedule")
+                    "no consumer step — run validate_schedule",
+                    check="no-lost-message", device=dev)
             if ok[dev, k]:
-                raise ValueError(
+                raise PlanError(
                     f"two messages on the {chan} channel of device {dev} "
-                    f"at forward step {k} — run validate_schedule")
+                    f"at forward step {k} — run validate_schedule",
+                    check="send-recv-pairing", device=dev, step=k)
             tab[dev, k] = m
             ok[dev, k] = True
 
@@ -355,8 +391,9 @@ class StepTables:
             v, m, dev = p.virtual, p.microbatch, p.device
             err = placement_bounds_error(p, S, M, D)
             if err is not None:
-                raise ValueError(
-                    f"placement v={v} m={m}: {err}; run validate_schedule")
+                raise PlanError(
+                    f"placement v={v} m={m}: {err}; run validate_schedule",
+                    check="placement-bounds")
             # The stage layout pins each stage to the partition's device
             # mapping; routing below assumes it.  A schedule with a
             # permuted device mapping (e.g. an ILP free-mapping solve) is
@@ -364,17 +401,19 @@ class StepTables:
             # rather than run the wrong stage's parameters silently.
             canon = device_of_stage(v)
             if dev != canon:
-                raise ValueError(
+                raise PlanError(
                     f"placement v={v} m={m} on device {dev}, but this "
                     f"executor's stage layout pins stage {v} to device "
                     f"{canon} (slot "
                     f"{enc_slot.get(v, dec_slot.get(v))}); re-synthesize "
-                    "the schedule with the partition's device_of_stage")
+                    "the schedule with the partition's device_of_stage",
+                    check="stage-routing", device=dev)
             k = k_of_step[p.step]
             if sel[dev, k] != IDLE:
-                raise ValueError(
+                raise PlanError(
                     f"device {dev} double-booked at step {p.step} — run "
-                    "validate_schedule")
+                    "validate_schedule",
+                    check="program-shape", device=dev, step=k)
             k_of_task[(v, m)] = k
             mb[dev, k] = m
             is_enc = v < half
@@ -393,10 +432,11 @@ class StepTables:
                 turn_wr[dev, k] = True
                 turn_writes[(dev, m)] = k
                 if device_of_stage(half) != dev:
-                    raise ValueError(
+                    raise PlanError(
                         f"turnaround stages {half - 1},{half} on devices "
                         f"{dev},{device_of_stage(half)}: the fold "
-                        "collocates them (constraint (9))")
+                        "collocates them (constraint (9))",
+                        check="stage-routing", device=dev)
             elif v < S - 1:
                 # enc -> enc rides the down ring, dec -> dec the up ring
                 # (both wrap: interleaved slot boundaries cross D-1 -> 0);
@@ -404,11 +444,13 @@ class StepTables:
                 nd = device_of_stage(v + 1)
                 want = (dev + 1) % D if is_enc else (dev - 1) % D
                 if nd != want:
-                    raise ValueError(
+                    raise PlanError(
                         f"stage {v} on device {dev} (slot "
                         f"{slot[dev, k]}) feeds stage {v + 1} on device "
                         f"{nd}, but the ring executors only deliver to "
-                        f"device {want}")
+                        f"device {want}",
+                        check="stage-routing", device=dev, step=k,
+                        slot=int(slot[dev, k]))
                 if is_enc:
                     mark_rx(down_mb, down_valid, nd, k + 1, m, "down")
                     msgs_down.append((dev, nd, k, v, m))
@@ -426,14 +468,17 @@ class StepTables:
                 continue
             dep = (p.virtual - 1, p.microbatch)
             if dep not in k_of_task:
-                raise ValueError(
+                raise PlanError(
                     f"task v={p.virtual} m={p.microbatch} has no scheduled "
-                    "predecessor — run validate_schedule")
+                    "predecessor — run validate_schedule",
+                    check="matched-store-read", device=p.device)
             if k_of_task[(p.virtual, p.microbatch)] < k_of_task[dep] + 1:
-                raise ValueError(
+                raise PlanError(
                     f"task v={p.virtual} m={p.microbatch} runs before its "
                     "input can arrive (constraint (10)) — run "
-                    "validate_schedule")
+                    "validate_schedule",
+                    check="matched-store-read", device=p.device,
+                    step=k_of_task[(p.virtual, p.microbatch)])
 
         # ---- channel activity + liveness windows -----------------------
         down_send = np.zeros((D, T), dtype=bool)
@@ -496,9 +541,10 @@ class StepTables:
                    else skip_consumers[dev][dv])
             for ev in evs:
                 if not 0 <= ev < V:
-                    raise ValueError(
+                    raise PlanError(
                         f"skip_consumers names enc slot {ev} on device "
-                        f"{dev}, but the layout has V={V} slots")
+                        f"{dev}, but the layout has V={V} slots",
+                        check="program-shape", device=dev, slot=ev)
                 key = (dev, m, ev)
                 if last_read.get(key, -1) < k2:
                     last_read[key] = k2
@@ -584,10 +630,11 @@ def _gather_rows(buf: Pytree, rows) -> Pytree:
 
 def _wire_dtype(cfg: PipelineConfig):
     if cfg.wire_dtype not in WIRE_DTYPES:
-        raise ValueError(
+        raise PlanError(
             f"unknown wire_dtype {cfg.wire_dtype!r}; expected one of "
             f"{WIRE_DTYPES} (float32 is the exact-differential escape "
-            "hatch)")
+            "hatch)",
+            check="wire-dtype-flow")
     return jnp.dtype(cfg.wire_dtype)
 
 
@@ -629,9 +676,10 @@ def make_wave_pipeline_from_schedule(
     """
     D, M, axis = cfg.num_devices, cfg.num_microbatches, cfg.axis
     if sched.M != M or sched.D != D:
-        raise ValueError(
+        raise PlanError(
             f"schedule (M={sched.M}, D={sched.D}) does not match the "
-            f"pipeline config (M={M}, D={D})")
+            f"pipeline config (M={M}, D={D})",
+            check="program-shape")
     tables = StepTables.from_schedule(sched, folded=True,
                                       device_of_stage=device_of_stage,
                                       devices=devices,
@@ -809,9 +857,10 @@ def make_linear_pipeline_from_schedule(
     zeros."""
     D, M, axis = cfg.num_devices, cfg.num_microbatches, cfg.axis
     if sched.M != M or sched.D != D:
-        raise ValueError(
+        raise PlanError(
             f"schedule (M={sched.M}, D={sched.D}) does not match the "
-            f"pipeline config (M={M}, D={D})")
+            f"pipeline config (M={M}, D={D})",
+            check="program-shape")
     tables = StepTables.from_schedule(sched, folded=False,
                                       device_of_stage=device_of_stage,
                                       devices=devices)

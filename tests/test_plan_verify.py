@@ -1,0 +1,369 @@
+"""Static plan verification: valid plans certify clean, corrupted ones don't.
+
+Soundness here is mutation-tested: every lowered plan the synthesizers
+emit (greedy / timed / ILP, V in {1, 2, 4}, asymmetric and interleaved
+folds, both hop lowerings) must yield a clean ``PlanCertificate``, and
+each targeted corruption class — swapped steps, shrunken liveness
+window, flipped channel-activity bit, dropped skip-stash store, misrouted
+buffer slot, falsified hop accounting — must be rejected with a *named*
+check from ``repro.analysis.dataflow.CHECKS``.  An interpreter that
+certified a corrupted table would be worse than no interpreter.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import (CHECKS, PlanCertificate, certify_tables,
+                            interpret_tables)
+from repro.analysis.certificate import (WIRE_DTYPES as CERT_WIRE_DTYPES,
+                                        export_plan, load_plan)
+from repro.core.partition import partition
+from repro.core.schedule import (TIMED_PRIORITIES, greedy_schedule,
+                                 greedy_schedule_timed,
+                                 schedule_for_partition, template_1f1b,
+                                 template_interleaved, template_wave)
+from repro.runtime.schedule_exec import PlanError, StepTables
+
+
+def _wave_tables(D=3, M=6):
+    sched = template_wave(D, M)
+    return StepTables.from_schedule(
+        sched, folded=True,
+        device_of_stage=lambda s, S=2 * D: min(s, S - 1 - s))
+
+
+def _mutated(tabs, **muts):
+    """dataclasses.replace with per-array copy-and-edit callbacks."""
+    kw = {}
+    for name, fn in muts.items():
+        val = getattr(tabs, name)
+        if isinstance(val, np.ndarray):
+            val = np.array(val, copy=True)
+            fn(val)
+        else:
+            val = fn(val)
+        kw[name] = val
+    return dataclasses.replace(tabs, **kw)
+
+
+def _asym_part():
+    from repro.models.diffusion import SkipViTConfig, skipvit_pipeline_graph
+    cfg = SkipViTConfig("t", n_enc=3, n_mid=2, n_dec=3)
+    g = skipvit_pipeline_graph(cfg,
+                               fwd_times=[1, 1, 4, .5, .5, .5, 1, 1])
+    return partition(g, 2, lam=0.0), g
+
+
+def _interleaved_part(V=2):
+    from repro.models.diffusion import SkipViTConfig, skipvit_pipeline_graph
+    cfg = SkipViTConfig("t", n_enc=4, n_mid=2, n_dec=4)
+    g = skipvit_pipeline_graph(
+        cfg, fwd_times=[1, 1, 2, 4, 0.5, 0.5, 0.5, 1, 1, 2])
+    return partition(g, 2, lam=0.0, interleave=V), g
+
+
+def _consumers(part, g):
+    from repro.runtime.compile import StageLayout
+    return StageLayout.from_partition(part, g).skip_consumers()
+
+
+# ===========================================================================
+# Semantic-constant parity: the jax-free analysis layer re-declares the
+# executor's selector codes and wire-dtype set — they must never drift.
+# ===========================================================================
+
+def test_analysis_constants_mirror_executor():
+    from repro.analysis import dataflow
+    from repro.runtime import schedule_exec, pipeline
+    assert (dataflow.IDLE, dataflow.RUN_ENC, dataflow.RUN_DEC) == \
+        (schedule_exec.IDLE, schedule_exec.RUN_ENC, schedule_exec.RUN_DEC)
+    assert CERT_WIRE_DTYPES == pipeline.WIRE_DTYPES
+
+
+# ===========================================================================
+# Every synthesized plan certifies clean
+# ===========================================================================
+
+@pytest.mark.parametrize("D,M", [(2, 4), (3, 6), (4, 8)])
+@pytest.mark.parametrize("overlap", [True, False])
+def test_wave_templates_certify_clean(D, M, overlap):
+    tabs = _wave_tables(D, M)
+    cert = certify_tables(tabs, overlap=overlap)
+    assert cert.ok, cert.violations
+    assert cert.failed_checks == ()
+    assert tuple(cert.checks) == CHECKS
+
+
+@pytest.mark.parametrize("D,M", [(2, 4), (4, 8)])
+def test_linear_templates_certify_clean(D, M):
+    tabs = StepTables.from_schedule(template_1f1b(D, M), folded=False)
+    cert = certify_tables(tabs)
+    assert cert.ok, cert.violations
+    assert cert.hops["live_up"] == 0       # single-ring plan
+
+
+@pytest.mark.parametrize("prio", (None,) + TIMED_PRIORITIES)
+def test_asym_fold_schedules_certify_clean(prio):
+    """Greedy + every timed priority on the mirror-asymmetric fold."""
+    part, g = _asym_part()
+    S, D, M = part.num_stages, part.num_devices, 4
+    if prio is None:
+        sched = greedy_schedule(S, M, part.device_of_stage, D)
+    else:
+        times = part.stage_costs or (1.0,) * S
+        sched = greedy_schedule_timed(S, M, part.device_of_stage, D,
+                                      times, priority=prio)
+    consumers = _consumers(part, g)
+    tabs = StepTables.from_schedule(sched, folded=True,
+                                    devices=part.devices,
+                                    skip_consumers=consumers)
+    for overlap in (True, False):
+        cert = certify_tables(tabs, skip_consumers=consumers,
+                              overlap=overlap)
+        assert cert.ok, cert.violations
+
+
+@pytest.mark.parametrize("V", [2])
+def test_interleaved_portfolio_certifies_clean(V):
+    part, g = _interleaved_part(V)
+    sched = schedule_for_partition(part, 4)
+    consumers = _consumers(part, g)
+    tabs = StepTables.from_schedule(sched, folded=True,
+                                    devices=part.devices,
+                                    skip_consumers=consumers)
+    cert = certify_tables(tabs, skip_consumers=consumers)
+    assert cert.ok, cert.violations
+    assert tabs.V == V
+
+
+def test_v4_template_certifies_clean():
+    tabs = StepTables.from_schedule(template_interleaved(2, 4, 4),
+                                    folded=True)
+    cert = certify_tables(tabs)
+    assert cert.ok, cert.violations
+    assert tabs.V == 4
+
+
+def test_ilp_plan_certifies_clean():
+    part, g = _asym_part()
+    sched = schedule_for_partition(part, 4, use_ilp=True, time_limit=60.0)
+    consumers = _consumers(part, g)
+    tabs = StepTables.from_schedule(sched, folded=True,
+                                    devices=part.devices,
+                                    skip_consumers=consumers)
+    cert = certify_tables(tabs, skip_consumers=consumers)
+    assert cert.ok, cert.violations
+
+
+def test_compiled_pipeline_certify():
+    """End-to-end: auto_pipeline -> CompiledPipeline.certify()."""
+    from repro.models.diffusion import SkipViTConfig, skipvit_pipeline_graph
+    from repro.runtime.adapters import skipvit_model_fns
+    from repro.runtime.compile import auto_pipeline
+    cfg = SkipViTConfig("t", n_enc=3, n_mid=2, n_dec=3)
+    g = skipvit_pipeline_graph(cfg,
+                               fwd_times=[1, 1, 4, .5, .5, .5, 1, 1])
+    cp = auto_pipeline(g, skipvit_model_fns(cfg), 2, pipeline_devices=2,
+                       microbatches=4)
+    cert = cp.certify(name="asym")
+    assert cert.ok, cert.violations
+    assert cert.plan["overlap"] is True
+    assert cert.name == "asym"
+    # the certificate's window proof matches the lowered tables
+    tabs = cp.step_tables()
+    assert cert.windows["down"]["declared"] == tabs.W_down
+    assert cert.windows["down"]["peak"] <= tabs.W_down
+
+
+# ===========================================================================
+# Mutation soundness: every corruption class is rejected by name
+# ===========================================================================
+
+def _failed(tabs, **certify_kw):
+    cert = certify_tables(tabs, **certify_kw)
+    assert not cert.ok, "corrupted tables certified clean"
+    assert set(cert.failed_checks) <= set(CHECKS)
+    assert cert.failed_checks, "violations must carry a named check"
+    return cert.failed_checks
+
+
+def test_mutation_swap_two_steps():
+    tabs = _wave_tables()
+    cols = ("sel", "slot", "mb", "down_mb", "down_valid", "up_mb",
+            "up_valid", "loss", "embed", "turn_rd", "turn_wr",
+            "down_send", "up_send", "down_slot", "up_slot", "rx_slot",
+            "turn_wr_slot", "turn_rd_slot", "skip_wr", "skip_wr_slot",
+            "skip_rd_slot")
+
+    def swap(a):
+        a[1, [3, 4]] = a[1, [4, 3]]
+
+    failed = _failed(_mutated(tabs, **{c: swap for c in cols}))
+    assert "send-recv-pairing" in failed
+
+
+def test_mutation_shrink_liveness_window():
+    tabs = _wave_tables()
+    assert _failed(_mutated(tabs, W_down=lambda w: w - 1)) == \
+        ("buffer-bounds",)
+    assert "buffer-bounds" in _failed(
+        _mutated(tabs, W_skip=lambda w: w - 1))
+
+
+def test_mutation_flip_channel_activity_bit():
+    tabs = _wave_tables()
+    sends = np.nonzero(tabs.down_send[0])[0]
+
+    def drop(a):
+        a[0, sends[1]] = False
+
+    assert "send-recv-pairing" in _failed(_mutated(tabs, down_send=drop))
+
+    quiet = np.nonzero(~tabs.down_send[0] & (tabs.sel[0] != 0))[0]
+
+    def add(a):
+        a[0, quiet[0]] = True
+
+    assert "send-recv-pairing" in _failed(_mutated(tabs, down_send=add))
+
+
+def test_mutation_drop_skip_stash_store():
+    tabs = _wave_tables()
+    writes = np.nonzero(tabs.skip_wr[1])[0]
+
+    def drop(a):
+        a[1, writes[0]] = False
+
+    assert "matched-store-read" in _failed(_mutated(tabs, skip_wr=drop))
+
+
+def test_mutation_misroute_store_slot():
+    tabs = _wave_tables()
+    arrivals = np.nonzero(tabs.down_valid[1])[0]
+
+    def rotate(a):
+        k = arrivals[1]
+        a[1, k] = (a[1, k] + 1) % tabs.W_down
+
+    failed = _failed(_mutated(tabs, down_slot=rotate))
+    assert "no-live-overwrite" in failed or "matched-store-read" in failed
+
+
+def test_mutation_slot_out_of_window():
+    tabs = _wave_tables()
+    arrivals = np.nonzero(tabs.down_valid[1])[0]
+
+    def oob(a):
+        a[1, arrivals[0]] = tabs.W_down + 3
+
+    assert "buffer-bounds" in _failed(_mutated(tabs, down_slot=oob))
+
+
+def test_mutation_falsified_hop_accounting():
+    tabs = _wave_tables()
+    assert _failed(_mutated(tabs, exposed_down=lambda x: x + 1)) == \
+        ("overlap-accounting",)
+
+
+def test_mutation_dropped_loss():
+    tabs = _wave_tables()
+    steps = np.nonzero(tabs.loss.any(axis=0))[0]
+
+    def drop(a):
+        a[:, steps[0]] = False
+
+    assert "program-shape" in _failed(_mutated(tabs, loss=drop))
+
+
+def test_mutation_interleaved_skip_misroute():
+    """The V > 1 stash gather tables are verified per encoder slot."""
+    part, g = _interleaved_part(2)
+    consumers = _consumers(part, g)
+    tabs = StepTables.from_schedule(schedule_for_partition(part, 4),
+                                    folded=True, devices=part.devices,
+                                    skip_consumers=consumers)
+    d, k = np.argwhere(tabs.skip_wr)[1]
+
+    def rotate(a):
+        a[d, k] = (a[d, k] + 1) % max(tabs.W_skip, 2)
+
+    failed = _failed(_mutated(tabs, skip_wr_slot=rotate),
+                     skip_consumers=consumers)
+    assert "matched-store-read" in failed or \
+        "no-live-overwrite" in failed or "no-lost-message" in failed
+
+
+# ===========================================================================
+# Certificates and snapshots round-trip
+# ===========================================================================
+
+def test_certificate_json_roundtrip():
+    cert = certify_tables(_wave_tables(), name="wave3")
+    doc = json.loads(cert.to_json())
+    back = PlanCertificate.from_json(cert.to_json())
+    assert back == cert
+    assert doc["schema"] == "repro.plan-certificate/v1"
+    with pytest.raises(ValueError, match="schema"):
+        PlanCertificate.from_dict({"schema": "bogus"})
+
+
+def test_plan_snapshot_roundtrip(tmp_path):
+    part, g = _interleaved_part(2)
+    consumers = _consumers(part, g)
+    tabs = StepTables.from_schedule(schedule_for_partition(part, 4),
+                                    folded=True, devices=part.devices,
+                                    skip_consumers=consumers)
+    path = tmp_path / "plan.json"
+    export_plan(tabs, path, skip_consumers=consumers, name="il2")
+    saved = load_plan(path)
+    cert = saved.certify()
+    assert cert.ok, cert.violations
+    assert saved.tables.num_steps == tabs.num_steps
+    assert saved.tables.live_hops == tabs.live_hops
+    # the rehydrated tables drive the same interpreter verdicts
+    report = interpret_tables(saved.tables,
+                              skip_consumers=saved.skip_consumers)
+    assert report.ok
+
+
+def test_verify_cli_on_snapshot(tmp_path):
+    from repro.analysis import verify
+    tabs = _wave_tables(2, 4)
+    good = tmp_path / "good.json"
+    export_plan(tabs, good, name="wave2")
+    assert verify.main(["--plan", str(good)]) == 0
+    bad = tmp_path / "bad.json"
+    export_plan(dataclasses.replace(tabs, W_down=tabs.W_down - 1), bad,
+                name="shrunk")
+    assert verify.main(["--plan", str(bad)]) == 1
+
+
+# ===========================================================================
+# PlanError: structured lowering rejections
+# ===========================================================================
+
+def test_plan_error_carries_structure():
+    dev = lambda s: min(s, 3 - s)
+    with pytest.raises(PlanError, match="skip_consumers") as ei:
+        StepTables.from_schedule(template_wave(2, 4), folded=True,
+                                 device_of_stage=dev,
+                                 skip_consumers=(((),),))
+    assert ei.value.check == "program-shape"
+    assert isinstance(ei.value, ValueError)
+    assert "repro.analysis.verify" in str(ei.value)
+
+
+def test_plan_error_stage_routing():
+    """A schedule synthesized for a permuted device mapping is valid but
+    unrealizable on the canonical layout — rejected with coordinates."""
+    D, S, M = 2, 4, 4
+    permuted = lambda s: (min(s, S - 1 - s) + 1) % D
+    sched = greedy_schedule(S, M, permuted, D)
+    with pytest.raises(PlanError, match="stage layout") as ei:
+        StepTables.from_schedule(
+            sched, folded=True,
+            device_of_stage=lambda s: min(s, S - 1 - s))
+    assert ei.value.check == "stage-routing"
+    assert ei.value.device is not None

@@ -1,0 +1,167 @@
+"""Unit tests for the jax-free analysis layer: kernel checks + policy lint.
+
+The kernel checks must mirror the Pallas kernels' trace-time asserts
+exactly (same clamping, same divisibility) — they are what routes
+unsupported shapes to the reference implementations *before* tracing.
+The policy linter is exercised against synthetic files placed at
+policy-relevant paths, plus the real repo tree (which must be green).
+"""
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis.kernel_check import (check_flash_attention,
+                                         check_gated_linear_scan,
+                                         check_skip_concat_matmul,
+                                         flash_attention_supported,
+                                         gated_linear_scan_supported,
+                                         skip_concat_matmul_supported)
+from repro.analysis.lint import lint_file, lint_paths
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ===========================================================================
+# kernel_check
+# ===========================================================================
+
+def test_skip_matmul_supported_matches_kernel_contract():
+    """The predicate mirrors skip_concat_matmul_fwd's clamped-block
+    asserts: dim % min(block, dim) == 0, positive dims."""
+    assert skip_concat_matmul_supported(256, 128, 512)
+    assert skip_concat_matmul_supported(32, 64, 16)      # all clamped
+    assert skip_concat_matmul_supported(100, 128, 128)   # bm clamps to 100
+    assert not skip_concat_matmul_supported(0, 128, 128)
+    assert not skip_concat_matmul_supported(200, 128, 128)  # 200 % 128
+    assert not skip_concat_matmul_supported(128, 129, 128)  # 129 % 128
+
+
+def test_skip_matmul_ops_reexports_analysis_predicate():
+    """kernels/ops delegates to the analysis layer — one source of
+    truth for the launch constraint."""
+    from repro.kernels.skip_matmul.ops import (
+        skip_concat_matmul_supported as via_ops)
+    assert via_ops is skip_concat_matmul_supported
+
+
+def test_flash_attention_check():
+    assert flash_attention_supported(256, 256, 64)
+    assert flash_attention_supported(64, 64, 64)         # clamped blocks
+    assert not flash_attention_supported(250, 256, 64)
+    rep = check_flash_attention(8, 250, 256, 64)
+    assert not rep.ok
+    assert any("S=250" in f.detail for f in rep.errors())
+    # whole K/V rows are VMEM-resident: absurd T must be rejected
+    rep = check_flash_attention(1, 128, 128 * 65536, 128)
+    assert not rep.ok and any("VMEM" in f.detail for f in rep.errors())
+    # sub-lane head dim is a warning, not an error
+    rep = check_flash_attention(8, 256, 256, 64, dtype="bfloat16")
+    assert rep.ok and any(f.level == "warn" for f in rep.findings)
+    assert not check_flash_attention(8, 256, 256, 64, window=0).ok
+    assert not check_flash_attention(8, 256, 256, 64, dtype="int4").ok
+
+
+def test_gated_linear_scan_check():
+    assert gated_linear_scan_supported(1024, 256)
+    assert gated_linear_scan_supported(32, 16)           # clamped
+    assert not gated_linear_scan_supported(1000, 256)
+    rep = check_gated_linear_scan(4, 2048, 256, block_t=2048)
+    assert rep.ok and any("unroll" in f.detail for f in rep.findings)
+    assert not check_gated_linear_scan(0, 128, 128).ok
+
+
+def test_skip_matmul_check_reports():
+    rep = check_skip_concat_matmul(256, 384, 512)
+    assert rep.ok and not rep.findings
+    rep = check_skip_concat_matmul(0, 128, 128)
+    assert not rep.ok and "degenerate" in str(rep)
+
+
+# ===========================================================================
+# lint — synthetic files at policy-relevant paths
+# ===========================================================================
+
+def _lint_snippet(tmp_path, rel, src):
+    path = tmp_path / "repro" / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(src))
+    return [f.rule for f in lint_file(path)]
+
+
+def test_lint_compat_only_experimental(tmp_path):
+    bad = _lint_snippet(tmp_path, "runtime/foo.py",
+                        "from jax.experimental import shard_map\n")
+    assert bad == ["compat-only-experimental"]
+    bad = _lint_snippet(tmp_path, "models/bar.py",
+                        "import jax.experimental.pallas as pl\n")
+    assert bad == ["compat-only-experimental"]
+    # function-local does not escape the rule (compat is the only site)
+    bad = _lint_snippet(tmp_path, "runtime/baz.py", """
+        def f():
+            from jax.experimental import mesh_utils
+    """)
+    assert bad == ["compat-only-experimental"]
+    assert _lint_snippet(tmp_path, "runtime/compat.py",
+                         "from jax.experimental import shard_map\n") == []
+    assert _lint_snippet(tmp_path, "kernels/fa/kernel.py",
+                         "from jax.experimental import pallas as pl\n") == []
+
+
+def test_lint_core_lazy_jax(tmp_path):
+    assert _lint_snippet(tmp_path, "core/foo.py", "import jax\n") == \
+        ["core-lazy-jax"]
+    assert _lint_snippet(tmp_path, "core/foo.py",
+                         "import jax.numpy as jnp\n") == ["core-lazy-jax"]
+    assert _lint_snippet(tmp_path, "core/foo.py", """
+        def f():
+            import jax
+            return jax
+    """) == []
+    assert _lint_snippet(tmp_path, "core/foo.py", """
+        from typing import TYPE_CHECKING
+        if TYPE_CHECKING:
+            import jax
+    """) == []
+    # outside core/ a module-top jax import is fine
+    assert _lint_snippet(tmp_path, "runtime/foo.py", "import jax\n") == []
+
+
+def test_lint_guarded_placement_extrema(tmp_path):
+    bad = _lint_snippet(tmp_path, "core/schedule.py", """
+        def makespan(self):
+            return max(p.step for p in self.placements)
+    """)
+    assert bad == ["guarded-placement-extrema"]
+    assert _lint_snippet(tmp_path, "core/schedule.py", """
+        def makespan(self):
+            if not self.placements:
+                raise ValueError("empty")
+            return max(p.step for p in self.placements)
+    """) == []
+    assert _lint_snippet(tmp_path, "core/schedule.py", """
+        def makespan(self):
+            return max((p.step for p in self.placements), default=0)
+    """) == []
+    # the rule is scoped to core/schedule.py
+    assert _lint_snippet(tmp_path, "core/other.py", """
+        def f(placements):
+            return max(p.step for p in placements)
+    """) == []
+
+
+def test_repo_tree_is_policy_clean():
+    """The committed tree passes its own policy linter (profiler fix +
+    compat discipline) — the same invocation CI runs."""
+    paths = [REPO / d for d in ("src", "tests", "benchmarks")
+             if (REPO / d).is_dir()]
+    findings = lint_paths(paths)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_lint_cli_green():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
