@@ -39,6 +39,12 @@ REGRESSION_RULES: tuple[tuple[str, frozenset, float], ...] = (
                               "skip_entries"}), 0.05),
     ("measured", frozenset({"overlap_on_us"}), 1.00),
     ("measured", frozenset({"overlap_ratio"}), 0.50),
+    # analytic ZeRO hybrid rows: comm share of an iteration + sharded
+    # param/grad/optimizer peak bytes per device at each zero_stage
+    ("zero", frozenset({"comm_share_pct", "b1_comm_share_pct",
+                        "b2_comm_share_pct", "b4_comm_share_pct",
+                        "peak_gb_zero0", "peak_gb_zero1",
+                        "peak_gb_zero2"}), 0.05),
 )
 REGRESSION_TOL = 0.05   # the tight band (kept for --help/callers)
 
@@ -127,7 +133,7 @@ def main() -> None:
     auto_pipeline_json: dict = {}
     for mod in modules:
         try:
-            if mod is auto_pipeline:
+            if mod in (auto_pipeline, zero_breakdown):
                 rows = mod.run(json_sink=auto_pipeline_json)
             else:
                 rows = mod.run()

@@ -1,22 +1,48 @@
-"""Paper Fig. 2: ZeRO-3 time breakdown (comm share of iteration time)."""
+"""Paper Fig. 2: ZeRO time breakdown + hybrid sharded memory footprints.
+
+Two row families, both analytic (deterministic, CI-gated at the tight 5%
+band via the ``zero`` subtree of ``BENCH_auto_pipeline.json``):
+
+- ``zero_breakdown.hunyuan.b{b}.comm_share_pct`` — the paper's Fig. 2
+  motivation numbers (ZeRO-3 re-gather comm share on the 2-node V100
+  cluster).
+- ``zero_breakdown.<big config>.*`` — what the hybrid tuner actually
+  charges: ZeRO all-gather/reduce-scatter comm share of an iteration
+  (``core.tuner.t_grad_sync``) and the per-device param+grad+optimizer
+  bytes at each zero_stage (``core.tuner.zero_param_state_breakdown``
+  with the ISSUE's 12 B/param fp32 Adam state over bf16 params, so
+  ``param_state_factor = 8``).
+"""
 from __future__ import annotations
 
 from repro.core.comm_model import zero_volume_per_iter
-from repro.core.hw import V100_CLUSTER
+from repro.core.hw import TPU_V5E, V100_CLUSTER
 from repro.core.partition import blockwise_partition
-from repro.core.tuner import profile_partition
+from repro.core.tuner import (profile_partition, t_grad_sync,
+                              zero_param_state_breakdown)
 from benchmarks.partition_balance import MODELS
 
 
 MFU = 0.35
+DP = 8              # data-parallel degree the sharded footprints assume
+TOKENS = 4096       # per-replica tokens/iter for the comm-share proxy
+# bf16 params (2 B) + fp32 m/v/master (12 B) -> opt = 6x param bytes
+PARAM_STATE_FACTOR = 8.0
 
 
-def run() -> list[str]:
+def _big_configs():
+    from repro.configs import deepseek_v3_671b, granite_34b
+    return {"granite_34b": granite_34b.CFG,
+            "deepseek_v3_671b": deepseek_v3_671b.CFG}
+
+
+def run(json_sink: dict | None = None) -> list[str]:
     rows = []
     hw = V100_CLUSTER
     from repro.core.profiler import reprofile_graph
     g = reprofile_graph(MODELS["hunyuan"](), hw)
     prof = profile_partition(g, blockwise_partition(g, 1, folded=False))
+    sink = {} if json_sink is None else json_sink.setdefault("zero", {})
     for b in (1, 2, 4):
         t_comp = 3 * sum(prof.fwd_time_per_sample) / MFU * b
         # ZeRO-3 re-gathers parameters in fwd AND bwd; on a 2-node cluster
@@ -26,6 +52,25 @@ def run() -> list[str]:
         share = 100 * t_comm / (t_comm + t_comp)
         rows.append(f"zero_breakdown.hunyuan.b{b}.comm_share_pct,"
                     f"{share:.1f},paper: ~30%")
+        sink.setdefault("hunyuan", {})[f"b{b}_comm_share_pct"] = share
+
+    hw = TPU_V5E
+    for name, cfg in _big_configs().items():
+        pb = cfg.param_count() * 2.0            # bf16 at-rest bytes
+        t_comp = 6.0 * cfg.param_count() * TOKENS / (hw.peak_flops * MFU)
+        t_comm = t_grad_sync(pb, DP, hw, 2)
+        share = 100 * t_comm / (t_comm + t_comp)
+        dst = sink.setdefault(name, {})
+        dst["comm_share_pct"] = share
+        rows.append(f"zero_breakdown.{name}.comm_share_pct,{share:.1f},"
+                    f"dp={DP} all-gather+reduce-scatter vs {MFU:.0%} MFU")
+        for z in (0, 1, 2):
+            peak = sum(zero_param_state_breakdown(
+                pb, dp=DP, zero_stage=z,
+                param_state_factor=PARAM_STATE_FACTOR).values()) / 1e9
+            dst[f"peak_gb_zero{z}"] = peak
+            rows.append(f"zero_breakdown.{name}.peak_gb_zero{z},"
+                        f"{peak:.1f},param+grad+opt GB/device at dp={DP}")
     return rows
 
 

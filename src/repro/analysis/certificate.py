@@ -99,9 +99,11 @@ class PlanCertificate:
 
     def summary(self) -> str:
         p = self.plan
+        dp, zs = p.get("dp", 1), p.get("zero_stage", 0)
+        hybrid = f" dp={dp} zero={zs}" if dp > 1 or zs > 0 else ""
         head = (f"{self.name or 'plan'}: D={p['D']} M={p['M']} "
-                f"V={p['V']} rings={p['rings']} steps={p['num_steps']} "
-                f"wire={p['wire_dtype']} "
+                f"V={p['V']} rings={p['rings']} steps={p['num_steps']}"
+                f"{hybrid} wire={p['wire_dtype']} "
                 f"{'overlap' if p['overlap'] else 'sync'}")
         win = " ".join(f"{c}={w['peak']}/{w['declared']}"
                        for c, w in self.windows.items())
@@ -120,6 +122,7 @@ class PlanCertificate:
 
 def _certificate_from_report(tabs, report: DataflowReport, *,
                              overlap: bool, wire_dtype: str,
+                             dp: int = 1, zero_stage: int = 0,
                              name: str | None) -> PlanCertificate:
     violations = list(report.violations)
     if wire_dtype not in WIRE_DTYPES:
@@ -138,6 +141,7 @@ def _certificate_from_report(tabs, report: DataflowReport, *,
         plan={"D": int(tabs.D), "M": int(tabs.M), "V": int(tabs.V),
               "rings": int(tabs.rings),
               "num_steps": int(tabs.num_steps),
+              "dp": int(dp), "zero_stage": int(zero_stage),
               "overlap": bool(overlap), "wire_dtype": wire_dtype},
         windows={"down": {"declared": int(tabs.W_down),
                           "peak": report.peak_down},
@@ -158,18 +162,23 @@ def _certificate_from_report(tabs, report: DataflowReport, *,
 
 def certify_tables(tabs, *, skip_consumers=None, overlap: bool = True,
                    wire_dtype: str = "bfloat16",
+                   dp: int = 1, zero_stage: int = 0,
                    name: str | None = None) -> PlanCertificate:
     """Certify lowered step tables directly (numpy-only, no jax).
 
     ``skip_consumers`` must be the same consumer map the lowering was
     given (``StageLayout.skip_consumers()``) — folded V > 1 plans elide
     dead stash stores, so the conservative read-every-slot default would
-    reject valid plans.
+    reject valid plans.  ``dp``/``zero_stage`` record the hybrid plan
+    dimensions (DP replica count over the data axes and ZeRO sharding
+    stage) the executor was configured with — the dataflow proof itself
+    is per-replica, so they are certificate metadata, not checked state.
     """
     report = interpret_tables(tabs, overlap=overlap,
                               skip_consumers=skip_consumers)
     return _certificate_from_report(tabs, report, overlap=overlap,
-                                    wire_dtype=wire_dtype, name=name)
+                                    wire_dtype=wire_dtype, dp=dp,
+                                    zero_stage=zero_stage, name=name)
 
 
 def certify_plan(plan, *, name: str | None = None) -> PlanCertificate:
@@ -185,12 +194,15 @@ def certify_plan(plan, *, name: str | None = None) -> PlanCertificate:
     consumers = plan.layout.skip_consumers() if plan.folded else None
     return certify_tables(
         tabs, skip_consumers=consumers, overlap=plan.pcfg.overlap,
-        wire_dtype=plan.pcfg.wire_dtype, name=name)
+        wire_dtype=plan.pcfg.wire_dtype,
+        dp=getattr(plan.pcfg, "dp_size", 1),
+        zero_stage=getattr(plan.pcfg, "zero_stage", 0), name=name)
 
 
 def certify_schedule(sched, *, folded: bool, devices=None,
                      skip_consumers=None, overlap: bool = True,
                      wire_dtype: str = "bfloat16",
+                     dp: int = 1, zero_stage: int = 0,
                      name: str | None = None) -> PlanCertificate:
     """Lower a validated schedule and certify the result.
 
@@ -202,7 +214,7 @@ def certify_schedule(sched, *, folded: bool, devices=None,
                                     skip_consumers=skip_consumers)
     return certify_tables(tabs, skip_consumers=skip_consumers,
                           overlap=overlap, wire_dtype=wire_dtype,
-                          name=name)
+                          dp=dp, zero_stage=zero_stage, name=name)
 
 
 # ===========================================================================
@@ -218,12 +230,15 @@ class SavedPlan:
     skip_consumers: tuple | None
     overlap: bool
     wire_dtype: str
+    dp: int = 1
+    zero_stage: int = 0
     name: str | None = None
 
     def certify(self) -> PlanCertificate:
         return certify_tables(
             self.tables, skip_consumers=self.skip_consumers,
             overlap=self.overlap, wire_dtype=self.wire_dtype,
+            dp=self.dp, zero_stage=self.zero_stage,
             name=self.name)
 
 
@@ -241,11 +256,13 @@ class _Tables:
 
 def export_plan(tabs, path, *, skip_consumers=None, overlap: bool = True,
                 wire_dtype: str = "bfloat16",
+                dp: int = 1, zero_stage: int = 0,
                 name: str | None = None) -> None:
     """Snapshot lowered step tables (+ proof context) to a JSON file."""
     doc: dict[str, Any] = {"schema": PLAN_SCHEMA, "name": name,
                            "overlap": bool(overlap),
                            "wire_dtype": wire_dtype,
+                           "dp": int(dp), "zero_stage": int(zero_stage),
                            "skip_consumers": skip_consumers,
                            "tables": {}}
     for field in _TABLE_FIELDS:
@@ -282,4 +299,6 @@ def load_plan(path) -> SavedPlan:
     return SavedPlan(tables=tabs, skip_consumers=consumers,
                      overlap=bool(doc["overlap"]),
                      wire_dtype=str(doc["wire_dtype"]),
+                     dp=int(doc.get("dp", 1)),
+                     zero_stage=int(doc.get("zero_stage", 0)),
                      name=doc.get("name"))

@@ -36,8 +36,11 @@ import sys
 RULES = ("compat-only-experimental", "core-lazy-jax",
          "guarded-placement-extrema")
 
-#: the only module allowed to touch jax.experimental / shard_map directly
-COMPAT_MODULE = "runtime/compat.py"
+#: modules allowed to touch jax.experimental / shard_map directly —
+#: the compat shim itself, plus runtime/sharding.py (the PartitionSpec
+#: rule tables sit next to the sharding entry points it re-exports)
+COMPAT_MODULES = ("runtime/compat.py", "runtime/sharding.py")
+COMPAT_MODULE = COMPAT_MODULES[0]   # back-compat alias
 #: subtrees exempt from the compat rule (pallas IS the kernel API)
 KERNEL_PREFIX = "kernels/"
 
@@ -99,8 +102,8 @@ class _FileLinter(ast.NodeVisitor):
     # ---- rule 1 + 2: import policy -------------------------------------
     def _check_import(self, node):
         in_core = self.rel is not None and self.rel.startswith("core/")
-        exempt_compat = self.rel in (None, COMPAT_MODULE) or \
-            (self.rel or "").startswith(KERNEL_PREFIX)
+        exempt_compat = self.rel is None or self.rel in COMPAT_MODULES \
+            or (self.rel or "").startswith(KERNEL_PREFIX)
         for mod in _imported_modules(node):
             root = mod.split(".")[0]
             if not exempt_compat and (

@@ -86,9 +86,15 @@ def _synthesize(part, M: int, *, use_ilp: bool, time_limit: float):
 
 
 def certify_config(name: str, *, use_ilp: bool = False,
-                   time_limit: float = 120.0, export_dir=None
-                   ) -> list[PlanCertificate]:
-    """Certify every (synthesis, V, overlap) plan for one tier-1 config."""
+                   time_limit: float = 120.0, export_dir=None,
+                   zero: bool = False) -> list[PlanCertificate]:
+    """Certify every (synthesis, V, overlap) plan for one tier-1 config.
+
+    Every run also certifies at least one hybrid (dp=2) plan per graph —
+    the per-replica dataflow proof is unchanged, but the certificate
+    records the (dp, zero_stage) dimensions the executor would run with.
+    ``zero`` (nightly) adds the ZeRO-2 rest-sharded variant.
+    """
     from repro.core.partition import partition
     from repro.runtime.compile import StageLayout
     from repro.runtime.schedule_exec import StepTables
@@ -114,6 +120,18 @@ def certify_config(name: str, *, use_ilp: bool = False,
                 certs.append(certify_tables(
                     tabs, skip_consumers=consumers, overlap=overlap,
                     name=tag))
+            if synth == "portfolio" and V == 1:
+                for z in ((1, 2) if zero else (1,)):
+                    certs.append(certify_tables(
+                        tabs, skip_consumers=consumers, overlap=True,
+                        dp=2, zero_stage=z,
+                        name=f"{name}/v1/portfolio/dp2-zero{z}"))
+                if export_dir is not None:
+                    export_plan(tabs,
+                                export_dir / f"{name}_v1_portfolio_dp2.json",
+                                skip_consumers=consumers, dp=2,
+                                zero_stage=2 if zero else 1,
+                                name=f"{name}/v1/portfolio/dp2")
             if export_dir is not None:
                 path = export_dir / f"{name}_v{V}_{synth}.json"
                 export_plan(tabs, path, skip_consumers=consumers,
@@ -134,6 +152,9 @@ def main(argv=None) -> int:
                          "JSON) instead of re-synthesizing")
     ap.add_argument("--use-ilp", action="store_true",
                     help="additionally certify exact-ILP plans (V=1)")
+    ap.add_argument("--zero", action="store_true",
+                    help="additionally certify ZeRO-2 hybrid (dp=2) "
+                         "plan variants (nightly)")
     ap.add_argument("--time-limit", type=float, default=120.0,
                     help="ILP solver time limit in seconds")
     ap.add_argument("--export-dir", metavar="DIR",
@@ -158,7 +179,7 @@ def main(argv=None) -> int:
         for name in (args.configs or TIER1_CONFIGS):
             certs.extend(certify_config(
                 name, use_ilp=args.use_ilp, time_limit=args.time_limit,
-                export_dir=export_dir))
+                export_dir=export_dir, zero=args.zero))
 
     for cert in certs:
         print(cert.summary())

@@ -11,7 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Sequence
 
-from repro.core.comm_model import WIRE_BYTES, wire_factor
+from repro.core.comm_model import (WIRE_BYTES, wire_factor,
+                                   zero_volume_per_iter)
 from repro.core.graph import BlockGraph
 from repro.core.hw import Hardware, TPU_V5E
 from repro.core import partition as part_mod
@@ -74,6 +75,58 @@ class TunerChoice:
     partition: "part_mod.Partition | None" = None
     # ^ the partition this choice was scored on — the compile path
     #   (runtime.compile.auto_pipeline) lowers it directly.
+    zero_stage: int = 0    # ZeRO sharding over the dp axis: 0 = replicated,
+    #   1 = optimizer state sharded, 2 = params-at-rest + grads +
+    #   optimizer state sharded (all-gather-on-use in the scan body)
+
+    @property
+    def dp(self) -> int:
+        """Data-parallel degree (alias: the mesh's 'data' axis size)."""
+        return self.G
+
+
+def zero_param_state_breakdown(
+    m_theta: float, *, dp: int = 1, zero_stage: int = 0,
+    param_state_factor: float = 7.0, m_gather: float | None = None,
+) -> dict[str, float]:
+    """Per-device param/grad/optimizer resident bytes under ZeRO sharding.
+
+    Decomposes the legacy lump ``param_state_factor * m_theta`` into
+    params (1x), grads (1x) and optimizer state (``param_state_factor -
+    2`` x, the AdamW m/v/master share).  ZeRO-1 shards the optimizer
+    term over the ``dp`` replicas; ZeRO-2 also shards params-at-rest and
+    the (reduce-scattered) grads, charging one transient all-gathered
+    working copy ``m_gather`` for the stage slot currently in use
+    (default: all of ``m_theta`` — conservative for multi-slot layouts
+    whose callers don't pass the per-slot size).  The components are the
+    executor's actual sharded leaf bytes (``runtime.sharding.
+    zero_stack_specs`` scatters every eligible leaf by exactly ``dp``),
+    which the property tests pin.
+    """
+    opt = max(param_state_factor - 2.0, 0.0)
+    if dp <= 1 or zero_stage <= 0:
+        return {"params": m_theta, "grads": m_theta,
+                "opt": opt * m_theta, "gathered": 0.0}
+    if zero_stage == 1:
+        return {"params": m_theta, "grads": m_theta,
+                "opt": opt * m_theta / dp, "gathered": 0.0}
+    if m_gather is None:
+        m_gather = m_theta
+    return {"params": m_theta / dp, "grads": m_theta / dp,
+            "opt": opt * m_theta / dp, "gathered": float(m_gather)}
+
+
+def zero_param_state_bytes(
+    m_theta: float, *, dp: int = 1, zero_stage: int = 0,
+    param_state_factor: float = 7.0, m_gather: float | None = None,
+) -> float:
+    """Scalar form of :func:`zero_param_state_breakdown`; bit-identical
+    to the legacy ``param_state_factor * m_theta`` when unsharded."""
+    if dp <= 1 or zero_stage <= 0:
+        return param_state_factor * m_theta
+    return sum(zero_param_state_breakdown(
+        m_theta, dp=dp, zero_stage=zero_stage,
+        param_state_factor=param_state_factor, m_gather=m_gather).values())
 
 
 def peak_memory(
@@ -81,6 +134,7 @@ def peak_memory(
     param_state_factor: float = 7.0,
     windows: "tuple[int, int] | tuple[int, int, int] | None" = None,
     wire_bytes: int = 2,
+    dp: int = 1, zero_stage: int = 0,
 ) -> float:
     """Eq. (14).  The busiest devices are the innermost collocated pair
     (stages P-1 and P, 0-indexed) which retain activations for all
@@ -105,8 +159,20 @@ def peak_memory(
     footprints admit larger microbatches on memory-bound candidates.
     Without windows the dense pre-liveness sizing is priced (back-compat
     / no schedule yet); the legacy 2-tuple keeps skip dense.
+
+    ``dp``/``zero_stage`` charge the ZeRO-sharded param/optimizer bytes
+    instead of the replicated ``param_state_factor * m_theta`` lump (see
+    :func:`zero_param_state_breakdown`): optimizer state ``/dp`` at
+    ZeRO-1+, params-at-rest and grads ``/dp`` plus one transient
+    gathered stage copy at ZeRO-2.  ``dp <= 1`` or ``zero_stage == 0``
+    is bit-identical to the historical form.
     """
     from repro.core.comm_model import ACT_DENOM_BYTES
+
+    def param_state(m_theta: float, m_gather: float) -> float:
+        return zero_param_state_bytes(
+            m_theta, dp=dp, zero_stage=zero_stage,
+            param_state_factor=param_state_factor, m_gather=m_gather)
 
     def boundary_term(m_out: float, dense_count: float) -> float:
         if windows is None:
@@ -134,7 +200,7 @@ def peak_memory(
                                 zip(prof.act_bytes_per_sample, skips))
             skip_term = w_skip * max(skips) * skip_entry_factor
         m_out = max(prof.out_bytes_per_sample)
-        return (param_state_factor * m_theta
+        return (param_state(m_theta, max(prof.param_bytes))
                 + P * m_act * b
                 + skip_term
                 + boundary_term(m_out, P + slots - 2))
@@ -161,7 +227,7 @@ def peak_memory(
             skip_term = w_skip * skips[0] * skip_entry_factor
         m_out = prof.out_bytes_per_sample[0]
     return (
-        param_state_factor * m_theta
+        param_state(m_theta, m_theta)
         + P * m_act * b
         + skip_term
         + boundary_term(m_out, P)
@@ -169,16 +235,40 @@ def peak_memory(
 
 
 def t_allreduce(param_bytes: float, G: int, hw: Hardware) -> float:
-    """Eq. (16): ring all-reduce of the largest stage's gradients."""
+    """Eq. (16): ring all-reduce of the largest stage's gradients.
+
+    Routed through the same ``2(G-1)/G`` volume arithmetic as the ZeRO
+    term so stage-0/1 and stage-2 candidates with identical modelled
+    volume tie *exactly* (bit-for-bit) and the tuner's zero_stage
+    tie-break stays deterministic."""
     if G <= 1:
         return 0.0
-    return hw.t_lat + 2.0 * (G - 1) * param_bytes / (G * hw.intra_bw)
+    return hw.t_lat + zero_volume_per_iter(param_bytes, G, 2) / hw.intra_bw
+
+
+def t_grad_sync(param_bytes: float, G: int, hw: Hardware,
+                zero_stage: int = 0) -> float:
+    """Eq. (16) generalized to the ZeRO stages.
+
+    ZeRO-0/1 all-reduce the gradients (ZeRO-1's optimizer shard update is
+    local, so its wire cost is the same ring all-reduce).  ZeRO-2 pays
+    the all-gather-on-use + gradient reduce-scatter volume instead
+    (:func:`repro.core.comm_model.zero_volume_per_iter` — the same
+    ``2(G-1)/G`` ring bytes an all-reduce moves, which is ZeRO's claim:
+    sharding the state costs no extra steady-state volume).
+    """
+    if G <= 1:
+        return 0.0
+    if zero_stage >= 2:
+        return hw.t_lat + (zero_volume_per_iter(param_bytes, G, zero_stage)
+                           / hw.intra_bw)
+    return t_allreduce(param_bytes, G, hw)
 
 
 def t_sched_paper(
     prof: StageProfile, P: int, b: int, G: int, hw: Hardware,
     *, M: int | None = None, V: int = 1, wire_dtype: str = "bfloat16",
-    overlap: bool = True,
+    overlap: bool = True, zero_stage: int = 0,
 ) -> float:
     """Eq. (15): (10P-4) T_f(b) + (10P-12)(t_lat + b M_o / B) + T_AR.
 
@@ -231,7 +321,7 @@ def t_sched_paper(
     return (
         (6 * V * M + 4 * P - 4) * t_f
         + t_comm
-        + t_allreduce(m_theta, G, hw)
+        + t_grad_sync(m_theta, G, hw, zero_stage)
     )
 
 
@@ -240,6 +330,7 @@ def t_sched_simulated(
     *, microbatches: int, wave: bool,
     part: "part_mod.Partition | None" = None,
     sched=None, wire_dtype: str = "bfloat16", overlap: bool = True,
+    zero_stage: int = 0,
 ) -> float:
     """Higher-fidelity alternative: event-driven simulation of the actual
     schedule with per-stage durations (beyond-paper option).  With a
@@ -262,7 +353,7 @@ def t_sched_simulated(
     mk, _ = simulate(sched, times, bwd_ratio=2.0,
                      p2p_time=hw.t_lat + m_o / hw.inter_bw,
                      overlap=overlap)
-    return mk + t_allreduce(max(prof.param_bytes), G, hw)
+    return mk + t_grad_sync(max(prof.param_bytes), G, hw, zero_stage)
 
 
 def tune(
@@ -278,6 +369,7 @@ def tune(
     interleave_options: Sequence[int] | None = None,
     wire_dtype: str = "bfloat16",
     overlap: bool = True,
+    zero_stages: Sequence[int] = (0, 1, 2),
 ) -> list[TunerChoice]:
     """Enumerate (P, G, b) — and the interleave degree V for wave plans —
     and return all feasible choices, best first.
@@ -316,6 +408,17 @@ def tune(
     hops at ``max(0, p2p - t_f)`` when True and full ``p2p`` when False,
     so the tuner ranks candidates by the comm cost the lowering actually
     pays.
+
+    ``zero_stages`` lists the ZeRO stages to search for every dp > 1
+    candidate (dp is ``G``, the data axis of the hybrid mesh): 0
+    replicates param/optimizer state, 1 shards the optimizer state over
+    dp, 2 also shards params-at-rest + grads with an all-gather-on-use
+    in the executor scan body.  ``peak_memory`` charges the sharded
+    bytes and the scorers price the ZeRO collective volume
+    (:func:`t_grad_sync`), so memory-bound big configs become feasible
+    at higher stages — ties on modelled time break toward the *lowest*
+    stage (least sharding machinery).  ``G == 1`` candidates only ever
+    score stage 0 (there is nothing to shard over).
     """
     if microbatches_per_iter is None:
         microbatches_per_iter = lambda P: max(P, 1)
@@ -372,46 +475,62 @@ def tune(
                     continue
                 windows = (tabs.W_down + tabs.W_up, tabs.W_turn,
                            tabs.W_skip)
-            b = 1
-            while b <= max_microbatch:
-                mem = peak_memory(prof, max(P, 1), b,
-                                  wave=wave and P > 1, V=V,
-                                  windows=windows,
-                                  wire_bytes=WIRE_BYTES[wire_dtype])
-                if mem >= hw.mem_limit:
-                    if b == 1 and drops is not None:
-                        drops.append(
-                            f"{vtag}: smallest microbatch already exceeds "
-                            f"the memory budget (peak {mem / 1e9:.2f} GB "
-                            f">= {hw.mem_limit / 1e9:.2f} GB)")
-                    break
-                if use_simulation and P > 1:
-                    t_iter = t_sched_simulated(prof, P, b, G, hw,
-                                               microbatches=M, wave=wave,
-                                               part=part, sched=sched,
+            for z in (tuple(zero_stages) if G > 1 else (0,)):
+                ztag = vtag if z == 0 else f"{vtag} zero{z}"
+                b = 1
+                while b <= max_microbatch:
+                    mem = peak_memory(prof, max(P, 1), b,
+                                      wave=wave and P > 1, V=V,
+                                      windows=windows,
+                                      wire_bytes=WIRE_BYTES[wire_dtype],
+                                      dp=G, zero_stage=z)
+                    if mem >= hw.mem_limit:
+                        if b == 1 and drops is not None:
+                            if z == 0:
+                                drops.append(
+                                    f"{ztag}: smallest microbatch already "
+                                    f"exceeds the memory budget (peak "
+                                    f"{mem / 1e9:.2f} GB >= "
+                                    f"{hw.mem_limit / 1e9:.2f} GB)")
+                            else:
+                                drops.append(
+                                    f"{ztag}: smallest microbatch exceeds "
+                                    f"the memory budget even with ZeRO-{z} "
+                                    f"param/optimizer state sharded over "
+                                    f"dp={G} (peak {mem / 1e9:.2f} GB >= "
+                                    f"{hw.mem_limit / 1e9:.2f} GB)")
+                        break
+                    if use_simulation and P > 1:
+                        t_iter = t_sched_simulated(prof, P, b, G, hw,
+                                                   microbatches=M, wave=wave,
+                                                   part=part, sched=sched,
+                                                   wire_dtype=wire_dtype,
+                                                   overlap=overlap,
+                                                   zero_stage=z)
+                    elif P > 1:
+                        t_iter = t_sched_paper(prof, P, b, G, hw, M=M, V=V,
                                                wire_dtype=wire_dtype,
-                                               overlap=overlap)
-                elif P > 1:
-                    t_iter = t_sched_paper(prof, P, b, G, hw, M=M, V=V,
-                                           wire_dtype=wire_dtype,
-                                           overlap=overlap)
-                else:
-                    # pure DP: compute + all-reduce
-                    t_f = sum(prof.fwd_time_per_sample) * b
-                    t_iter = 3.0 * t_f * M + t_allreduce(
-                        sum(prof.param_bytes), G, hw
-                    )
-                samples = b * M * G
-                choices.append(TunerChoice(
-                    P=P, G=G, b=b,
-                    t_sample=t_iter / samples,
-                    t_sched=t_iter,
-                    peak_mem=mem,
-                    wave=wave and P > 1,
-                    M=M,
-                    V=V if P > 1 else 1,
-                    partition=part,
-                ))
-                b *= 2
-    choices.sort(key=lambda c: c.t_sample)
+                                               overlap=overlap,
+                                               zero_stage=z)
+                    else:
+                        # pure DP: compute + gradient synchronization
+                        t_f = sum(prof.fwd_time_per_sample) * b
+                        t_iter = 3.0 * t_f * M + t_grad_sync(
+                            sum(prof.param_bytes), G, hw, z
+                        )
+                    samples = b * M * G
+                    choices.append(TunerChoice(
+                        P=P, G=G, b=b,
+                        t_sample=t_iter / samples,
+                        t_sched=t_iter,
+                        peak_mem=mem,
+                        wave=wave and P > 1,
+                        M=M,
+                        V=V if P > 1 else 1,
+                        partition=part,
+                        zero_stage=z,
+                    ))
+                    b *= 2
+    # ties on modelled time break toward the least sharding machinery
+    choices.sort(key=lambda c: (c.t_sample, c.zero_stage))
     return choices

@@ -398,6 +398,33 @@ class CompiledPipeline:
         from repro.analysis.certificate import certify_plan
         return certify_plan(self, name=name)
 
+    # ---- ZeRO-2 stack sharding -----------------------------------------
+    def _zero_layout(self) -> tuple:
+        """(stacked_specs, gather_dims) for ZeRO-2 rest-sharded stage
+        stacks, or ``(None, None)`` below stage 2 / without a dp axis.
+
+        One entry per param stack: the ``P(axis, None, None, ...,
+        "data", ...)`` in_specs :func:`runtime.sharding.zero_stack_specs`
+        derives (``bind`` hands them to ``shard_pipeline``) and the
+        matching slot-view gather dims the table executors all-gather on
+        use.  Stack shapes come from ``eval_shape`` of the model's own
+        init — no parameters are materialized.
+        """
+        if self.pcfg.zero_stage < 2 or self.pcfg.dp_size <= 1:
+            return None, None
+        from repro.runtime.sharding import zero_stack_specs
+        stacks, _ = jax.eval_shape(
+            lambda k: self.split_params(self.model_fns.init_fn(k)),
+            jax.random.PRNGKey(0))
+        specs, dims = [], []
+        for st in stacks:
+            sp, dm = zero_stack_specs(st, dp=self.pcfg.dp_size,
+                                      axis=self.pcfg.axis,
+                                      data_axes=self.pcfg.data_axes)
+            specs.append(sp)
+            dims.append(dm)
+        return tuple(specs), tuple(dims)
+
     # ---- executor ------------------------------------------------------
     def build(self) -> Callable:
         """Lower to an executor.
@@ -424,6 +451,13 @@ class CompiledPipeline:
                 f"closed-form executors realize one (enc, dec) stage slot "
                 f"pair per device; this plan interleaves V={layout.V} "
                 "slots — lower through executor='table'")
+        if self.executor == "closed_form" and pcfg.zero_stage >= 2 \
+                and pcfg.dp_size > 1:
+            raise ValueError(
+                "closed-form executors keep stage stacks replicated over "
+                f"the data axes; zero_stage={pcfg.zero_stage} shards them "
+                "at rest — lower through executor='table'")
+        _, zero_dims = self._zero_layout()
 
         def my(table):
             # device-local lookup into a per-device host constant table
@@ -464,7 +498,8 @@ class CompiledPipeline:
                     enc_stage_fn=enc_stage_fn, dec_stage_fn=dec_stage_fn,
                     loss_fn=fns.loss_fn,
                     devices=self.partition.devices,
-                    skip_consumers=layout.skip_consumers())
+                    skip_consumers=layout.skip_consumers(),
+                    zero_dims=zero_dims)
 
             flat_enc = tuple(c[0] for c in layout.enc_counts)
             flat_dec = tuple(c[0] for c in layout.dec_counts)
@@ -496,7 +531,8 @@ class CompiledPipeline:
             return make_linear_pipeline_from_schedule(
                 pcfg, self.schedule, embed_fn=embed, stage_fn=stage_fn,
                 loss_fn=loss,
-                devices=self.partition.devices)
+                devices=self.partition.devices,
+                zero_dims=zero_dims[0] if zero_dims is not None else None)
 
         def stage_cf(stage_p, x):
             return scan_blocks(fns.block_fn, squeeze_slot(stage_p), x,
@@ -534,11 +570,14 @@ class CompiledPipeline:
                 lambda x: P(None, data)
                 if data and getattr(x, "ndim", 0) >= 2 else P(), t)
 
+        stacked_specs, _ = self._zero_layout()
+
         def wrap(edge, *batch_args):
             return shard_pipeline(
                 fn, mesh, stacked_args=2 if self.folded else 1, axis=axis,
                 batch_specs=(jax.tree.map(lambda _: P(), edge),
-                             *(batch_spec(a) for a in batch_args)))
+                             *(batch_spec(a) for a in batch_args)),
+                stacked_specs=stacked_specs)
 
         if self.folded:
             def loss(params, mbs, aux):
@@ -583,9 +622,14 @@ class CompiledPipeline:
             lines.append(
                 f"  comm: {mode}, exposed hops {tabs.exposed_hops} / "
                 f"hidden {tabs.hidden_hops} (of {live_d + live_u} live)")
+        if self.pcfg.dp_size > 1 or self.pcfg.zero_stage > 0:
+            lines.append(
+                f"  hybrid: dp={self.pcfg.dp_size} over "
+                f"{self.pcfg.data_axes}, zero_stage={self.pcfg.zero_stage}")
         if self.choice is not None:
             c = self.choice
             lines.append(f"  tuner: P={c.P} G={c.G} b={c.b} M={c.M} "
+                         f"zero={c.zero_stage} "
                          f"t/sample={c.t_sample*1e3:.3f} ms")
         return "\n".join(lines)
 
@@ -607,6 +651,7 @@ def auto_pipeline(
     interleave: int | None = None,
     data_axes: tuple[str, ...] = ("data",),
     dp_size: int | None = None,
+    zero_stage: int | None = None,
     remat: bool = True,
     remat_policy: str | None = None,
     use_ilp: bool = False,
@@ -650,7 +695,21 @@ def auto_pipeline(
     differential tests compare against.  The tuner scores candidates with
     the matching comm term (hidden steady-state hops cost
     ``max(0, t_p2p - t_f)``, exposed ramp hops full ``t_p2p``).
+
+    ``zero_stage`` selects ZeRO sharding over the data axes of the
+    ``("data", "model")`` mesh: 0 replicates everything per DP rank, 1
+    shards only optimizer state (train.steps applies the leaf-wise specs;
+    executors are untouched), 2 additionally shards the stage parameter
+    stacks at rest — the table executors all-gather each slot row on use
+    inside the remat region, and the gather's transpose reduce-scatters
+    the parameter gradients over ``data``.  With the tuner driving,
+    ``None`` (default) searches stages {0, 1, 2} and ``peak_memory``
+    charges each candidate its sharded param/optimizer bytes; pinning
+    restricts the search.  With ``pipeline_devices`` pinned, ``None``
+    means 0.
     """
+    if zero_stage is not None and zero_stage not in (0, 1, 2):
+        raise ValueError(f"zero_stage must be in (0, 1, 2), got {zero_stage}")
     choice: TunerChoice | None = None
     if pipeline_devices is not None:
         part = partition_graph(graph, pipeline_devices, hw=hw, lam=lam,
@@ -668,15 +727,23 @@ def auto_pipeline(
                 "wave vs linear from graph.skips and would ignore it")
         drops: list[str] = []
         choices = tune(graph, N, hw=hw, lam=lam, drops=drops,
+                       zero_stages=((zero_stage,) if zero_stage is not None
+                                    else (0, 1, 2)),
                        interleave_options=(
                            (interleave,) if interleave is not None
                            else None),
                        overlap=overlap)
-        drops += [f"P={c.P} G={c.G} b={c.b}: pure data parallelism "
+        pure_dp = sorted({(c.P, c.G, c.zero_stage) for c in choices
+                          if c.partition is None or c.P <= 1})
+        drops += [f"P={p} G={g}" + (f" zero{z}" if z else "")
+                  + ": pure data parallelism "
                   "(P=1 plans carry no pipeline to lower)"
-                  for c in choices if c.partition is None or c.P <= 1]
+                  for p, g, z in pure_dp]
         keep = [c for c in choices if c.partition is not None and c.P > 1]
         if not keep:
+            # every per-candidate drop reason the tuner and the P>1 filter
+            # collected, in full — truncating this list hides the memory /
+            # network constraint that actually killed the plan
             detail = "\n  ".join(drops) or "tuner enumerated no candidates"
             raise ValueError(
                 f"tuner found no feasible pipeline plan for N={N}; "
@@ -695,12 +762,20 @@ def auto_pipeline(
         M = 2 * D if part.folded else max(D, 2)
     if dp_size is None:
         dp_size = choice.G if choice is not None else 1
+    if choice is not None and zero_stage is None:
+        zero_stage = choice.zero_stage
+    zero_stage = zero_stage or 0
+    if zero_stage > 0 and dp_size <= 1:
+        # nothing to shard over — a stage-1/2 request on a single replica
+        # is the replicated plan; record it as such
+        zero_stage = 0
     # Schedule synthesis + full constraint validation happens here; an
     # invalid plan raises before any executor is built.
     sched = schedule_for_partition(part, M, use_ilp=use_ilp)
 
     pcfg = PipelineConfig(num_devices=D, num_microbatches=M,
                           data_axes=data_axes, dp_size=dp_size,
+                          zero_stage=zero_stage,
                           remat=remat, remat_policy=remat_policy,
                           wire_dtype=wire_dtype, overlap=overlap)
     layout = StageLayout.from_partition(part, graph)

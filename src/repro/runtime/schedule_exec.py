@@ -97,7 +97,7 @@ from repro.core.schedule import (Schedule, placement_bounds_error,
                                  slot_maps)
 from repro.runtime.pipeline import (WIRE_DTYPES, PipelineConfig,
                                     _wrap_remat, ring_perms, tree_index,
-                                    tree_local)
+                                    tree_local, zero_all_gather)
 
 Pytree = Any
 
@@ -653,10 +653,20 @@ def make_wave_pipeline_from_schedule(
     device_of_stage=None,     # partition's explicit stage->device mapping
     devices=None,             # ...same, as a tuple (memoized lowering)
     skip_consumers=None,      # layout-derived (device, dec slot) -> enc slots
+    zero_dims=None,           # (enc_dims, dec_dims): ZeRO-2 slot-view
+    #   gather dims per stack leaf (runtime.sharding.zero_stack_specs);
+    #   None = unsharded stacks
 ) -> Callable:
     """Lower a folded S=2VD schedule to ``fn(enc_stack, dec_stack, edge_p,
     mbs, aux) -> loss`` (same call signature as ``make_wave_pipeline``, but
     the stage stacks carry a leading slot axis: ``[D, V, pad, ...]``).
+
+    With ``zero_dims`` the stacks arrive ZeRO-2 rest-sharded over
+    ``cfg.data_axes`` (their shard_map in_specs carry the matching
+    ``P("data", ...)``-suffixed entries): each stage invocation
+    all-gathers its slot's leaves on use *inside* the remat region, so
+    backward re-gathers instead of retaining the full params and the
+    gather's transpose reduce-scatters the gradient over the data axis.
 
     Each scan step consults the schedule-derived tables: arrivals are
     stored into rotating receive buffers sized by the proven windows, the
@@ -694,6 +704,17 @@ def make_wave_pipeline_from_schedule(
     W_up = max(tables.W_up, 1)
     W_turn = max(tables.W_turn, 1)
     W_skip = max(tables.W_skip, 1)
+    if zero_dims is not None:
+        enc_dims, dec_dims = zero_dims
+        enc_inner, dec_inner = enc_stage_fn, dec_stage_fn
+
+        def enc_stage_fn(stage_p, x, aux_m, slot):  # noqa: F811
+            stage_p = zero_all_gather(stage_p, enc_dims, cfg.data_axes)
+            return enc_inner(stage_p, x, aux_m, slot)
+
+        def dec_stage_fn(stage_p, x, skips, aux_m, slot):  # noqa: F811
+            stage_p = zero_all_gather(stage_p, dec_dims, cfg.data_axes)
+            return dec_inner(stage_p, x, skips, aux_m, slot)
     enc_stage = _wrap_remat(enc_stage_fn, cfg)
     dec_stage = _wrap_remat(dec_stage_fn, cfg)
 
@@ -847,6 +868,7 @@ def make_linear_pipeline_from_schedule(
     loss_fn: Callable,        # (edge_p, x_final, mb) -> scalar
     device_of_stage=None,     # partition's explicit stage->device mapping
     devices=None,             # ...same, as a tuple (memoized lowering)
+    zero_dims=None,           # ZeRO-2 slot-view gather dims per stack leaf
 ) -> Callable:
     """Lower a linear S=VD schedule to ``fn(stack, edge_p, mbs) -> loss``
     (same call signature as ``make_linear_pipeline``; the stack carries a
@@ -854,7 +876,9 @@ def make_linear_pipeline_from_schedule(
     slot index).  The down ring wraps so interleaved (V > 1) plans cross
     the D-1 -> 0 slot boundary; arrivals land in a rotating ``W_down``
     receive buffer in ``cfg.wire_dtype`` and quiescent hops carry
-    zeros."""
+    zeros.  ``zero_dims`` rest-shards the stack exactly as in
+    :func:`make_wave_pipeline_from_schedule` (all-gather-on-use inside
+    the remat region; grads reduce-scatter through the transpose)."""
     D, M, axis = cfg.num_devices, cfg.num_microbatches, cfg.axis
     if sched.M != M or sched.D != D:
         raise PlanError(
@@ -869,6 +893,12 @@ def make_linear_pipeline_from_schedule(
     down_perm, _ = ring_perms(D, wrap=True)
     down_used = bool(tables.down_send.any())
     W_down = max(tables.W_down, 1)
+    if zero_dims is not None:
+        stage_inner = stage_fn
+
+        def stage_fn(stage_p, x, slot):  # noqa: F811
+            stage_p = zero_all_gather(stage_p, zero_dims, cfg.data_axes)
+            return stage_inner(stage_p, x, slot)
     stage = _wrap_remat(stage_fn, cfg)
 
     def fn(stack, edge_p, mbs):

@@ -149,6 +149,82 @@ def build_param_specs(
     return walk(params, ())
 
 
+def zero_stack_specs(
+    stacks: Pytree,
+    *,
+    dp: int,
+    axis: str = "model",
+    data_axes: tuple[str, ...] = ("data",),
+    rules: dict[str, tuple] | None = None,
+    min_shard_size: int = 2 ** 8,
+) -> tuple[Pytree, Pytree]:
+    """ZeRO rest-sharding for ``[D, V, pad, ...]`` stage parameter stacks.
+
+    Returns ``(specs, gather_dims)``.  ``specs`` mirrors the stack pytree
+    with ``P(axis, None, None, ...)`` leaves: the leading device dim
+    shards over the pipeline axis as always, and one trailing (block)
+    dim additionally shards over ``data_axes`` — the same right-aligned
+    ``LM_RULES`` fsdp placement ``build_param_specs`` applies to
+    unstacked params, with tp/ep disabled (the stage axis *is* the
+    pipeline).  ``gather_dims`` holds, per leaf, the dim index within
+    the per-slot ``[pad, ...]`` view (what ``tree_index(tree_local(
+    stack), vslot)`` yields inside the scan body) the executor must
+    all-gather on use; ``-1`` = replicated, no gather.  A leaf stays
+    replicated when its per-block size is under ``min_shard_size``
+    (smaller than ``build_param_specs``'s ``min_fsdp_size`` — stacked
+    stage blocks amortize the gather over the whole slot row) or when
+    no eligible dim divides ``dp``.
+
+    Optimizer state mirrors the param tree leaf-wise (see
+    ``optim/adamw.py``), so these specs shard ZeRO-1 optimizer state for
+    the stacks too — apply them to the ``m``/``v`` leaves unchanged.
+    """
+    rules = dict(LM_RULES, **(rules or {}))
+
+    def spec_for(path: tuple[str, ...], leaf) -> tuple[P, int]:
+        rep = (P(axis), -1)
+        nblock = leaf.ndim - 3
+        if dp <= 1 or nblock < 1:
+            return rep
+        block_size = 1
+        for d in leaf.shape[3:]:
+            block_size *= d
+        if block_size < min_shard_size:
+            return rep
+        rule = rules.get("/".join(path[-2:])) or rules.get(path[-1]) \
+            or ("fsdp",)
+        # right-align the rule against the block dims; tp/ep entries
+        # are disabled here, only "fsdp" maps to the data axes
+        entries = [r if r == "fsdp" else None for r in rule][-nblock:]
+        entries = [None] * (nblock - len(entries)) + list(entries)
+        j = next((k for k, e in enumerate(entries)
+                  if e == "fsdp" and leaf.shape[3 + k] % dp == 0), None)
+        if j is None:
+            # fallback: largest block dim dp divides (ZeRO does not care
+            # which dim is scattered, only that the bytes are)
+            divisible = [k for k in range(nblock)
+                         if leaf.shape[3 + k] % dp == 0]
+            if not divisible:
+                return rep
+            j = max(divisible, key=lambda k: leaf.shape[3 + k])
+        trailing = [None] * nblock
+        trailing[j] = data_axes
+        return P(axis, None, None, *trailing), 1 + j
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {k: walk(v, path + (k,)) for k, v in node.items()}
+            return ({k: v[0] for k, v in out.items()},
+                    {k: v[1] for k, v in out.items()})
+        if isinstance(node, (list, tuple)):
+            t = [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+            return (type(node)(x[0] for x in t),
+                    type(node)(x[1] for x in t))
+        return spec_for(path, node)
+
+    return walk(stacks, ())
+
+
 def batch_specs(batch: Pytree, dp_axes: Sequence[str] = ("pod", "data"),
                 mesh=None) -> Pytree:
     """Shard the leading batch dim of every leaf over the DP axes present

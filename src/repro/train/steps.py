@@ -42,6 +42,11 @@ class ParallelPlan:
     pp_degree: int = 16
     microbatches: int = 16
     int8_optimizer: bool = False
+    # ZeRO stage for the pp strategies: 0 = replicate per DP rank,
+    # 1 = shard optimizer state over fsdp_axes (leaf-wise stack specs),
+    # 2 = additionally shard the stage param stacks at rest (requires an
+    #     adapter compiled with the matching PipelineConfig.zero_stage).
+    zero_stage: int = 0
     seq_shard_axis: str | None = None   # decode-cache sequence sharding
     custom_rules: dict | None = None
     notes: str = ""
@@ -196,10 +201,30 @@ def build_pp_train_step(adapter, mesh, batch_struct: Pytree,
     def stack_specs(tree):
         return jax.tree.map(lambda _: stack_spec, tree)
 
+    # ZeRO over the DP axes: stage 1 shards only optimizer state with the
+    # leaf-wise stack specs (adamw state mirrors params leaf-for-leaf);
+    # stage 2 stores the stacks themselves sharded at rest — legal only
+    # when the adapter's executor was compiled to all-gather on use
+    # (PipelineConfig.zero_stage >= 2), so rest-sharding keys off the
+    # adapter's pcfg, never off the plan alone.
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    zs_exec = getattr(getattr(adapter, "pcfg", None), "zero_stage", 0)
+    zdp = 1
+    for a in fsdp:
+        zdp *= sizes.get(a, 1)
+    zero_stage = max(zs_exec, plan.zero_stage) if (fsdp and zdp > 1) else 0
+    zstack_specs = (tuple(
+        shard_rules.zero_stack_specs(s, dp=zdp, axis="model",
+                                     data_axes=fsdp)[0]
+        for s in stacks_struct) if zero_stage >= 1 else None)
+
     edge_specs = shard_rules.build_param_specs(
         edge_struct, tp_axis=None, fsdp_axes=fsdp or None)
-    p_specs = (tuple(stack_specs(s) for s in stacks_struct), edge_specs)
-    o_specs = opt_specs_like(p_specs, plan.int8_optimizer, fsdp)
+    p_stack_specs = (zstack_specs if zs_exec >= 2
+                     else tuple(stack_specs(s) for s in stacks_struct))
+    p_specs = (p_stack_specs, edge_specs)
+    o_like = ((zstack_specs, edge_specs) if zero_stage >= 1 else p_specs)
+    o_specs = opt_specs_like(o_like, plan.int8_optimizer, fsdp)
     b_specs = shard_rules.batch_specs(
         batch_struct, dp_axes=_filter_axes(mesh, plan.batch_axes), mesh=mesh)
 
@@ -210,7 +235,8 @@ def build_pp_train_step(adapter, mesh, batch_struct: Pytree,
         stacks, edge = params
         args = make_microbatches(batch, rng, edge)
         in_specs = (
-            *(jax.tree.map(lambda _: P("model"), s) for s in stacks),
+            *(p_stack_specs if zs_exec >= 2 else
+              tuple(jax.tree.map(lambda _: P("model"), s) for s in stacks)),
             jax.tree.map(lambda _: P(), edge),
             *(jax.tree.map(
                 lambda x: P(None, dp_axes, *([None] * (x.ndim - 2)))

@@ -35,6 +35,9 @@ Configs (pass names as argv to run a subset; default: all):
   wave-hunyuan   Hunyuan-DiT small config through the compile path
                  (adaLN + cross-attn blocks; time-MLP grads flow through
                  the aux conditioning closure)
+  linear-zero2 / wave-zero1 / wave-zero2
+                 hybrid ZeRO x pipeline (dp=2, P=2): ZeRO-sharded
+                 param/optimizer stacks vs the unsharded reference
 
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
@@ -161,7 +164,7 @@ def _diff_executors(cp, mesh, state, batch_args, label):
 
 def _run_lm(name, fwd_times, expect_uneven, *, force_wave=None,
             pipeline_devices=4, compare_closed=True, interleave=None,
-            check_overlap=False):
+            check_overlap=False, zero_stage=None):
     cfg = LMConfig(name="t", vocab=64, d_model=32, n_layers=8,
                    attn=AttnConfig(32, 4, 2, 8), d_ff=64,
                    tied_embeddings=True)
@@ -171,7 +174,16 @@ def _run_lm(name, fwd_times, expect_uneven, *, force_wave=None,
     cp = auto_pipeline(graph, lm_model_fns(cfg), pipeline_devices,
                        pipeline_devices=pipeline_devices, microbatches=4,
                        lam=0.0, dp_size=2, force_wave=force_wave,
-                       interleave=interleave, wire_dtype="float32")
+                       interleave=interleave, wire_dtype="float32",
+                       zero_stage=zero_stage)
+    if zero_stage is not None:
+        assert cp.pcfg.zero_stage == zero_stage, (name, cp.pcfg.zero_stage)
+        if zero_stage >= 2:
+            specs, dims = cp._zero_layout()
+            assert specs is not None
+            flat_dims = jax.tree.leaves(dims)
+            assert any(d >= 0 for d in flat_dims), (
+                f"{name}: ZeRO-2 layout sharded no stack leaf", flat_dims)
     V = interleave or 1
     if force_wave:
         assert cp.folded
@@ -462,6 +474,22 @@ CONFIGS = {
     # Hunyuan-DiT model_fns coverage (ROADMAP item): adaLN + cross-attn
     # blocks through the full compile path vs the single-device reference
     "wave-hunyuan": lambda: _run_hunyuan("wave-hunyuan"),
+    # Hybrid ZeRO x pipeline (dp=2, P=2, fp32 wire): the executor runs DP
+    # replicas of the pipeline with ZeRO-sharded state, and must still
+    # match the unsharded single-replica reference at rtol 1e-4.
+    # zero1 shards only optimizer state (executors untouched — this pins
+    # that the plan records the stage without perturbing values); zero2
+    # stores the stacks sharded at rest, all-gathers each slot row on use
+    # inside the remat region, and reduce-scatters param grads over data.
+    "linear-zero2": lambda: _run_lm(
+        "linear-zero2", [4, 1, 1, 1, 1, 1, 1, 4], False,
+        pipeline_devices=2, zero_stage=2, compare_closed=False),
+    "wave-zero1": lambda: _run_lm(
+        "wave-zero1", [4, 1, 1, 1, 1, 1, 1, 4], True, force_wave=True,
+        pipeline_devices=2, zero_stage=1, compare_closed=False),
+    "wave-zero2": lambda: _run_lm(
+        "wave-zero2", [4, 1, 1, 1, 1, 1, 1, 4], True, force_wave=True,
+        pipeline_devices=2, zero_stage=2, compare_closed=False),
     # V=2 interleaved 1F1B (linear S = VD, cyclic slot placement, the
     # wraparound down ring): the skip-free side of the interleave axis
     "linear-interleaved": lambda: _run_lm(

@@ -310,6 +310,21 @@ def test_auto_pipeline_reports_dropped_plans():
     assert "stages" in msg           # S > n explanation present
 
 
+def test_auto_pipeline_zero_memory_drop_reasons():
+    """On a memory-infeasible budget the raised error carries the full
+    per-candidate drop list, naming the ZeRO constraint that killed each
+    candidate — including that even ZeRO-2 sharding over the dp axis
+    could not fit the smallest microbatch."""
+    from repro.core.hw import TPU_V5E
+    hw = dataclasses.replace(TPU_V5E, mem_limit=float(1 << 10))
+    cfg = _lm_cfg()
+    with pytest.raises(ValueError) as ei:
+        auto_pipeline(lm_pipeline_graph(cfg), lm_model_fns(cfg), 4, hw)
+    msg = str(ei.value)
+    assert "memory budget" in msg
+    assert "even with ZeRO-2 param/optimizer state sharded over dp=" in msg
+
+
 def test_schedule_for_partition_greedy_matches_templates():
     g = uvit_pipeline_graph(_uvit_cfg())
     part = partition(g, 2)
@@ -441,14 +456,16 @@ def test_tuner_prices_windowed_buffers():
         prof = profile_partition(g, c.partition)
         windowed = peak_memory(
             prof, c.P, c.b, wave=c.wave, V=c.V,
-            windows=(tabs.W_down + tabs.W_up, tabs.W_turn, tabs.W_skip))
+            windows=(tabs.W_down + tabs.W_up, tabs.W_turn, tabs.W_skip),
+            dp=c.dp, zero_stage=c.zero_stage)
         assert c.peak_mem == windowed     # the score used the windows
         # vs the legacy 2-tuple (skip charged dense inside m_act), the
         # 3-tuple moves the skip stash to its proven rotating window:
         # out go P dense in-flight copies, in come W_skip fp32 entries
         legacy = peak_memory(
             prof, c.P, c.b, wave=c.wave, V=c.V,
-            windows=(tabs.W_down + tabs.W_up, tabs.W_turn))
+            windows=(tabs.W_down + tabs.W_up, tabs.W_turn),
+            dp=c.dp, zero_stage=c.zero_stage)
         if c.wave and c.V == 1:
             i, j = c.P - 1, c.P
             skips = prof.skip_bytes_per_sample
@@ -499,7 +516,8 @@ def test_step_tables_memoized_lowering():
 # ---------------------------------------------------------------------------
 
 _TIER1_EQUIV = ("linear-uneven", "wave-uneven", "wave-short",
-                "wave-asym", "wave-sparse", "wave-interleaved")
+                "wave-asym", "wave-sparse", "wave-interleaved",
+                "linear-zero2", "wave-zero1", "wave-zero2")
 
 
 @pytest.fixture(scope="session")
@@ -542,6 +560,16 @@ def test_auto_pipeline_equivalence_interleaved(tier1_equiv_out):
     assert "wave-interleaved: closed-form executor rejects V=2" \
         in tier1_equiv_out
     assert "wave-interleaved: cuts=" in tier1_equiv_out
+
+
+def test_auto_pipeline_equivalence_zero_hybrid(tier1_equiv_out):
+    """Hybrid ZeRO x pipeline (dp=2, P=2, fp32 wire): with zero_stage=1
+    (optimizer-state-only sharding) and zero_stage=2 (param stacks sharded
+    at rest, all-gather-on-use inside the scan body, grads reduce-scattered
+    over the data axis) the table executor still matches the unsharded
+    single-replica reference on loss AND grads at rtol 1e-4."""
+    for cfg in ("linear-zero2", "wave-zero1", "wave-zero2"):
+        assert f"{cfg}: " in tier1_equiv_out and "grads OK" in tier1_equiv_out
 
 
 @pytest.mark.slow

@@ -328,6 +328,34 @@ def test_plan_snapshot_roundtrip(tmp_path):
     assert report.ok
 
 
+def test_certificate_and_snapshot_carry_hybrid_dims(tmp_path):
+    """Certificates and saved plans record the (dp, zero_stage) hybrid
+    dimensions, show them in summaries, and default pre-hybrid documents
+    to the replicated single-replica reading."""
+    tabs = _wave_tables(2, 4)
+    cert = certify_tables(tabs, name="wave2", dp=2, zero_stage=1)
+    assert cert.plan["dp"] == 2 and cert.plan["zero_stage"] == 1
+    assert "dp=2 zero=1" in cert.summary()
+    base = certify_tables(tabs, name="wave2")
+    assert base.plan["dp"] == 1 and base.plan["zero_stage"] == 0
+    assert "dp=" not in base.summary()
+
+    path = tmp_path / "plan.json"
+    export_plan(tabs, path, name="wave2", dp=2, zero_stage=2)
+    saved = load_plan(path)
+    assert (saved.dp, saved.zero_stage) == (2, 2)
+    cert2 = saved.certify()
+    assert cert2.ok and cert2.plan["dp"] == 2 \
+        and cert2.plan["zero_stage"] == 2
+    # snapshots written before the hybrid axes existed load as dp=1/z=0
+    doc = json.loads(path.read_text())
+    del doc["dp"], doc["zero_stage"]
+    path.write_text(json.dumps(doc))
+    old = load_plan(path)
+    assert (old.dp, old.zero_stage) == (1, 0)
+    assert old.certify().plan["zero_stage"] == 0
+
+
 def test_verify_cli_on_snapshot(tmp_path):
     from repro.analysis import verify
     tabs = _wave_tables(2, 4)

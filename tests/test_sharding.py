@@ -1,0 +1,199 @@
+"""runtime/sharding rules: param specs, ZeRO stack specs, optimizer
+round-trip, and the tuner-vs-executor sharded-bytes property."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.tuner import zero_param_state_breakdown
+from repro.optim.adamw import adamw_init, int8_adamw_init
+from repro.runtime.sharding import build_param_specs, zero_stack_specs
+from repro.train.steps import opt_specs_like
+
+DATA = ("data",)
+
+
+def _leaf(*shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# build_param_specs: leaf-wise rules
+# ---------------------------------------------------------------------------
+
+def test_build_param_specs_rule_table():
+    d, f = 128, 512
+    params = {
+        "embed": _leaf(256, d),
+        "layers": {
+            "wq": _leaf(4, d, d),        # stacked: leading dim scanned
+            "wo": _leaf(d, d),
+            "w_down": _leaf(f, d),
+            "mystery": _leaf(d, d),      # no rule -> trailing-dim FSDP
+        },
+    }
+    specs = build_param_specs(params)
+    assert specs["embed"] == P(DATA, "model")
+    # right-aligned: the stacked leading dim stays unsharded
+    assert specs["layers"]["wq"] == P(None, DATA, "model")
+    assert specs["layers"]["wo"] == P("model", DATA)
+    assert specs["layers"]["w_down"] == P("model", DATA)
+    assert specs["layers"]["mystery"] == P(None, DATA)
+
+
+def test_build_param_specs_small_and_scalar_leaves_replicate():
+    params = {
+        "wq": _leaf(16, 16),             # 256 elems < min_fsdp_size
+        "scale": _leaf(),                # ndim-0
+        "big": _leaf(64, 128),           # 8192 elems >= 2**12
+    }
+    specs = build_param_specs(params)
+    assert specs["wq"] == P()
+    assert specs["scale"] == P()
+    assert specs["big"] == P(None, DATA)
+    # the exemption threshold is a knob, not a constant
+    assert build_param_specs(params, min_fsdp_size=1)["wq"] \
+        == P(DATA, "model")
+
+
+def test_build_param_specs_divisibility_fallback():
+    # axis_sizes that do not divide a dim drop that entry to replication
+    params = {"wq": _leaf(96, 96)}
+    specs = build_param_specs(
+        params, min_fsdp_size=1, axis_sizes={"data": 5, "model": 3})
+    assert specs["wq"] == P(None, "model")   # 96 % 5 != 0, 96 % 3 == 0
+
+
+# ---------------------------------------------------------------------------
+# optimizer state mirrors param specs leaf-wise (ZeRO-1 round trip)
+# ---------------------------------------------------------------------------
+
+def test_adamw_state_round_trips_param_specs():
+    params = {"wq": _leaf(64, 128), "wo": _leaf(128, 64), "b": _leaf(8)}
+    specs = build_param_specs(params, min_fsdp_size=1)
+    state = adamw_init(params)
+    o_specs = opt_specs_like(specs, False, DATA)
+    # m/v mirror the param tree, so the param specs apply unchanged
+    assert o_specs["m"] == specs and o_specs["v"] == specs
+    assert o_specs["step"] == P()
+    jax.tree.map(lambda leaf, sp: (leaf, sp), state["m"], o_specs["m"],
+                 is_leaf=lambda x: isinstance(x, P))  # structural match
+    for leaf, sp in zip(jax.tree.leaves(state["m"]),
+                        jax.tree.leaves(o_specs["m"],
+                                        is_leaf=lambda x: isinstance(x, P))):
+        assert len(sp) <= leaf.ndim
+
+
+def test_int8_adamw_state_stays_zero_shardable():
+    """int8 moments are flat (nblocks, 256) tensors; opt_specs_like
+    shards the block dim over the ZeRO axes, and adamw's _BLOCK_ALIGN
+    padding keeps nblocks divisible by up to 32-way data axes."""
+    params = {"wq": _leaf(64, 100)}      # deliberately non-round size
+    state = int8_adamw_init(params)
+    specs = build_param_specs(params, min_fsdp_size=1)
+    o_specs = opt_specs_like(specs, True, DATA)
+    q = state["m"]["wq"]["q"]
+    assert q.shape[0] % 32 == 0
+    assert o_specs["m"]["wq"] == {"q": P(DATA), "s": P(DATA)}
+    assert o_specs["step"] == P()
+
+
+# ---------------------------------------------------------------------------
+# zero_stack_specs: executor-facing [D, V, pad, ...] stage stacks
+# ---------------------------------------------------------------------------
+
+def test_zero_stack_specs_rule_placement_and_gather_dims():
+    D, V, pad, d, f, dp = 2, 1, 3, 64, 256, 4
+    stacks = {
+        "w_up": _leaf(D, V, pad, d, f),     # rule (fsdp, tp) -> dim 0
+        "w_down": _leaf(D, V, pad, f, d),   # rule (tp, fsdp) -> dim 1
+        "bias": _leaf(D, V, pad, 2 * f),    # default (fsdp,) -> dim 0
+    }
+    specs, dims = zero_stack_specs(stacks, dp=dp)
+    assert specs["w_up"] == P("model", None, None, DATA, None)
+    assert specs["w_down"] == P("model", None, None, None, DATA)
+    assert specs["bias"] == P("model", None, None, DATA)
+    # gather dims index the per-slot [pad, ...] view: 1 + block dim
+    assert dims == {"w_up": 1, "w_down": 2, "bias": 1}
+
+
+def test_zero_stack_specs_small_leaves_and_indivisible_dims():
+    D, V, pad, dp = 2, 1, 2, 4
+    stacks = {
+        "tiny": _leaf(D, V, pad, 8, 8),      # 64 < min_shard_size
+        "w_up": _leaf(D, V, pad, 6, 512),    # fsdp dim 6 % 4 != 0 ->
+        "odd": _leaf(D, V, pad, 3, 5),       # fallback dim 512; none here
+    }
+    specs, dims = zero_stack_specs(stacks, dp=dp)
+    assert specs["tiny"] == P("model") and dims["tiny"] == -1
+    # fallback: the largest dp-divisible block dim is scattered instead
+    assert specs["w_up"] == P("model", None, None, None, DATA)
+    assert dims["w_up"] == 2
+    assert specs["odd"] == P("model") and dims["odd"] == -1
+    # dp=1 short-circuits to fully replicated stacks
+    specs1, dims1 = zero_stack_specs(stacks, dp=1)
+    assert all(s == P("model") for s in jax.tree.leaves(
+        specs1, is_leaf=lambda x: isinstance(x, P)))
+    assert all(g == -1 for g in jax.tree.leaves(dims1))
+
+
+def test_zero_stack_specs_mirror_optimizer_state():
+    """The docstring contract: optimizer m/v mirror the stack tree, so
+    the same specs shard ZeRO-1 state leaf-wise without modification."""
+    stacks = {"w_up": _leaf(2, 1, 2, 64, 256)}
+    specs, _ = zero_stack_specs(stacks, dp=4)
+    state = adamw_init(stacks)
+    mirrored = jax.tree.map(lambda _: specs["w_up"], state["m"],
+                            is_leaf=lambda x: hasattr(x, "ndim"))
+    assert mirrored == {"w_up": specs["w_up"]}
+
+
+# ---------------------------------------------------------------------------
+# acceptance property: the tuner's sharded charge is the executor's bytes
+# ---------------------------------------------------------------------------
+
+def test_peak_memory_sharded_charge_matches_executor_bytes():
+    """zero_param_state_breakdown's per-device params/grads/opt terms
+    equal the bytes the executor actually keeps resident: the stack
+    leaves sharded per zero_stack_specs plus the leaf-wise-mirrored
+    AdamW moments, divided over the data axis."""
+    D, V, pad, dp = 2, 1, 2, 4
+    stacks = {
+        "w_up": _leaf(D, V, pad, 64, 256),
+        "w_down": _leaf(D, V, pad, 256, 64),
+        "proj": _leaf(D, V, pad, 128, 128),
+    }
+    specs, dims = zero_stack_specs(stacks, dp=dp)
+    assert all(g >= 0 for g in jax.tree.leaves(dims)), \
+        "property requires every leaf sharded (pick divisible shapes)"
+
+    # per-stage param bytes (one [V, pad, ...] row of the stack)
+    m_theta = sum(leaf.nbytes for leaf in jax.tree.leaves(stacks)) / D
+    # executor-side at-rest bytes per device: sharded leaves keep 1/dp
+    def resident(tree, gdims):
+        return sum(leaf.nbytes / D / (dp if g >= 0 else 1)
+                   for leaf, g in zip(jax.tree.leaves(tree),
+                                      jax.tree.leaves(gdims)))
+
+    actual_params = resident(stacks, dims)
+    state = adamw_init(stacks)
+    actual_opt = resident(state["m"], dims) + resident(state["v"], dims)
+
+    # params are fp32 here, so m/v fp32 moments are exactly 2x params;
+    # feed that measured ratio in as the factor (2 = params + grads)
+    pf = 2.0 + actual_opt * dp / m_theta
+    assert pf == 4.0
+    bd = zero_param_state_breakdown(m_theta, dp=dp, zero_stage=2,
+                                    param_state_factor=pf,
+                                    m_gather=m_theta)
+    assert bd["params"] == actual_params
+    assert bd["grads"] == actual_params          # grads mirror params
+    assert bd["opt"] == actual_opt
+    assert bd["gathered"] == m_theta             # one transient slot copy
+    # ZeRO-1 keeps params/grads dense but shards the same opt bytes
+    bd1 = zero_param_state_breakdown(m_theta, dp=dp, zero_stage=1,
+                                     param_state_factor=pf)
+    assert bd1["params"] == m_theta and bd1["opt"] == actual_opt
+    np.testing.assert_allclose(
+        sum(bd.values()),
+        actual_params * 2 + actual_opt + m_theta, rtol=0)

@@ -104,6 +104,9 @@ def test_lint_compat_only_experimental(tmp_path):
     assert bad == ["compat-only-experimental"]
     assert _lint_snippet(tmp_path, "runtime/compat.py",
                          "from jax.experimental import shard_map\n") == []
+    # sharding rules build PartitionSpecs and sit under the same policy
+    assert _lint_snippet(tmp_path, "runtime/sharding.py",
+                         "from jax.experimental import shard_map\n") == []
     assert _lint_snippet(tmp_path, "kernels/fa/kernel.py",
                          "from jax.experimental import pallas as pl\n") == []
 

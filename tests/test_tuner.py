@@ -3,8 +3,10 @@ import dataclasses
 
 from repro.core.graph import make_unet_like
 from repro.core.hw import V100_CLUSTER, Hardware
-from repro.core.tuner import (tune, peak_memory, t_allreduce, t_sched_paper,
-                              t_sched_simulated, profile_partition)
+from repro.core.tuner import (tune, peak_memory, t_allreduce, t_grad_sync,
+                              t_sched_paper, t_sched_simulated,
+                              profile_partition, zero_param_state_breakdown,
+                              zero_param_state_bytes)
 from repro.core.partition import partition
 
 
@@ -126,3 +128,127 @@ def test_simulation_mode_agrees_on_ranking():
     a = tune(g, 16, hw=V100_CLUSTER)[0]
     b = tune(g, 16, hw=V100_CLUSTER, use_simulation=True)[0]
     assert abs(a.t_sample / max(b.t_sample, 1e-12)) < 50   # same ballpark
+
+
+# ---------------------------------------------------------------------------
+# ZeRO x pipeline hybrid axes
+# ---------------------------------------------------------------------------
+
+def test_zero_param_state_bytes_legacy_identity():
+    """dp <= 1 or zero_stage == 0 must reproduce the historical
+    ``param_state_factor * m_theta`` lump bit-for-bit — the tuner's
+    pinned-arithmetic tests ride on it."""
+    m = 256 * (1 << 20) * 1.0
+    assert zero_param_state_bytes(m) == 7.0 * m
+    assert zero_param_state_bytes(m, dp=8, zero_stage=0) == 7.0 * m
+    assert zero_param_state_bytes(m, dp=1, zero_stage=2) == 7.0 * m
+
+
+def test_zero_param_state_breakdown_shards():
+    """ZeRO-1 divides only the optimizer term by dp; ZeRO-2 also divides
+    params-at-rest and grads, and adds one transient gathered copy."""
+    m, dp = 1024.0, 4
+    z0 = zero_param_state_breakdown(m, dp=dp, zero_stage=0)
+    z1 = zero_param_state_breakdown(m, dp=dp, zero_stage=1)
+    z2 = zero_param_state_breakdown(m, dp=dp, zero_stage=2)
+    assert z0 == {"params": m, "grads": m, "opt": 5.0 * m, "gathered": 0.0}
+    assert z1["params"] == m and z1["opt"] == 5.0 * m / dp
+    assert z2["params"] == m / dp and z2["grads"] == m / dp
+    assert z2["opt"] == 5.0 * m / dp and z2["gathered"] == m
+    assert sum(z2.values()) < sum(z1.values()) < sum(z0.values())
+
+
+def test_peak_memory_zero_charges_sharded_bytes():
+    """peak_memory(dp, zero_stage) lowers exactly by the sharded
+    param-state delta and never touches the activation terms."""
+    g = _graph()
+    part = partition(g, 4)
+    prof = profile_partition(g, part)
+    base = peak_memory(prof, 4, 2, wave=True)
+    assert peak_memory(prof, 4, 2, wave=True, dp=4, zero_stage=0) == base
+    i, j = 3, 4
+    m_theta = prof.param_bytes[i] + prof.param_bytes[j]
+    for z in (1, 2):
+        got = peak_memory(prof, 4, 2, wave=True, dp=4, zero_stage=z)
+        delta = (zero_param_state_bytes(m_theta)
+                 - zero_param_state_bytes(m_theta, dp=4, zero_stage=z,
+                                          m_gather=m_theta))
+        assert abs((base - got) - delta) < 1e-6
+        assert got < base
+
+
+def test_t_grad_sync_prices_zero_volume():
+    """Stage 0/1 gradient sync is the ring all-reduce; stage 2's
+    all-gather + reduce-scatter moves the same 2(G-1)/G bytes (ZeRO's
+    core claim), so the times coincide — memory, not wire time, drives
+    stage selection."""
+    hw = V100_CLUSTER
+    pb, G = float(1 << 30), 8
+    assert t_grad_sync(pb, 1, hw, 2) == 0.0
+    assert t_grad_sync(pb, G, hw, 0) == t_allreduce(pb, G, hw)
+    assert t_grad_sync(pb, G, hw, 1) == t_allreduce(pb, G, hw)
+    assert abs(t_grad_sync(pb, G, hw, 2) - t_allreduce(pb, G, hw)) < 1e-12
+
+
+def test_tuner_zero_ties_break_toward_less_sharding():
+    """With identical modelled times across zero stages, the sort prefers
+    the least sharding machinery: the top choice at any (P, G, b) is the
+    zero_stage=0 variant when memory is not binding."""
+    g = _graph()
+    choices = tune(g, 16, hw=V100_CLUSTER)
+    assert any(c.zero_stage > 0 for c in choices if c.G > 1)
+    groups = {}
+    for c in choices:             # choices are already rank-sorted
+        groups.setdefault((c.P, c.G, c.b, c.V), []).append(c)
+    for group in groups.values():
+        if any(c.zero_stage == 0 for c in group):
+            assert group[0].zero_stage == 0, group
+    # sharding relaxes the memory constraint, never tightens it: some
+    # microbatch sizes are reachable only with zero_stage > 0
+    assert any(all(c.zero_stage > 0 for c in g2) for g2 in groups.values())
+    assert all(c.dp == c.G for c in choices)
+
+
+def test_tuner_zero_unlocks_memory_constrained_granite():
+    """The acceptance flip on granite-34b: pipeline depth alone always
+    minimises peak memory (sharding params over P stages avoids ZeRO-2's
+    transient gathered copy), so a budget that kills *every* replicated
+    candidate kills the hybrids too.  The win is per candidate: pick a
+    budget between the (P=4, G=2) b=1 peaks at zero_stage 0 and 1 — now
+    the replicated search can only fall back to the slow full-depth P=8
+    pipeline, while the hybrid search returns a previously-infeasible
+    shallower (P, dp, zero_stage > 0) plan that is strictly faster, and
+    the drop reasons name the memory constraint that killed the
+    replicated shallow candidates."""
+    from repro.configs import granite_34b
+    from repro.models.lm import lm_pipeline_graph
+    g = lm_pipeline_graph(granite_34b.CFG)
+    N = 8
+    roomy = dataclasses.replace(V100_CLUSTER, mem_limit=1e18)
+    all_c = tune(g, N, hw=roomy)
+    p0 = next(c.peak_mem for c in all_c
+              if (c.P, c.G, c.b, c.zero_stage) == (4, 2, 1, 0))
+    pz = next(c.peak_mem for c in all_c
+              if (c.P, c.G, c.b, c.zero_stage) == (4, 2, 1, 1))
+    assert pz < p0
+    tight = dataclasses.replace(V100_CLUSTER, mem_limit=(p0 + pz) / 2)
+
+    drops0 = []
+    only0 = tune(g, N, hw=tight, zero_stages=(0,), drops=drops0)
+    assert only0 and {c.P for c in only0} == {N}, \
+        "replicated search must be pushed to the full-depth pipeline"
+    assert any("exceeds the memory budget" in d for d in drops0)
+
+    drops = []
+    feasible = tune(g, N, hw=tight, drops=drops)
+    assert feasible
+    best = feasible[0]
+    assert best.zero_stage > 0 and best.dp == best.G > 1 and best.P > 1
+    assert best.t_sample < only0[0].t_sample, \
+        "the unlocked hybrid must beat the replicated fallback"
+    assert all(c.peak_mem < tight.mem_limit for c in feasible)
+    # both demise stories are visible in the drop reasons: replicated
+    # shallow candidates die on the plain budget line, and the sharded
+    # variants that still don't fit say so in ZeRO terms
+    assert any("memory budget" in d and "zero" not in d for d in drops)
+    assert any("even with ZeRO-" in d for d in drops)
