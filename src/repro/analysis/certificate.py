@@ -123,6 +123,7 @@ class PlanCertificate:
 def _certificate_from_report(tabs, report: DataflowReport, *,
                              overlap: bool, wire_dtype: str,
                              dp: int = 1, zero_stage: int = 0,
+                             fingerprint: str | None = None,
                              name: str | None) -> PlanCertificate:
     violations = list(report.violations)
     if wire_dtype not in WIRE_DTYPES:
@@ -142,7 +143,10 @@ def _certificate_from_report(tabs, report: DataflowReport, *,
               "rings": int(tabs.rings),
               "num_steps": int(tabs.num_steps),
               "dp": int(dp), "zero_stage": int(zero_stage),
-              "overlap": bool(overlap), "wire_dtype": wire_dtype},
+              "overlap": bool(overlap), "wire_dtype": wire_dtype,
+              # the state-layout digest restore checks against (None for
+              # bare-table certifications with no CompiledPipeline)
+              "fingerprint": fingerprint},
         windows={"down": {"declared": int(tabs.W_down),
                           "peak": report.peak_down},
                  "up": {"declared": int(tabs.W_up),
@@ -163,6 +167,7 @@ def _certificate_from_report(tabs, report: DataflowReport, *,
 def certify_tables(tabs, *, skip_consumers=None, overlap: bool = True,
                    wire_dtype: str = "bfloat16",
                    dp: int = 1, zero_stage: int = 0,
+                   fingerprint: str | None = None,
                    name: str | None = None) -> PlanCertificate:
     """Certify lowered step tables directly (numpy-only, no jax).
 
@@ -178,7 +183,8 @@ def certify_tables(tabs, *, skip_consumers=None, overlap: bool = True,
                               skip_consumers=skip_consumers)
     return _certificate_from_report(tabs, report, overlap=overlap,
                                     wire_dtype=wire_dtype, dp=dp,
-                                    zero_stage=zero_stage, name=name)
+                                    zero_stage=zero_stage,
+                                    fingerprint=fingerprint, name=name)
 
 
 def certify_plan(plan, *, name: str | None = None) -> PlanCertificate:
@@ -192,11 +198,13 @@ def certify_plan(plan, *, name: str | None = None) -> PlanCertificate:
     """
     tabs = plan.step_tables()
     consumers = plan.layout.skip_consumers() if plan.folded else None
+    fp = plan.fingerprint() if hasattr(plan, "fingerprint") else None
     return certify_tables(
         tabs, skip_consumers=consumers, overlap=plan.pcfg.overlap,
         wire_dtype=plan.pcfg.wire_dtype,
         dp=getattr(plan.pcfg, "dp_size", 1),
-        zero_stage=getattr(plan.pcfg, "zero_stage", 0), name=name)
+        zero_stage=getattr(plan.pcfg, "zero_stage", 0),
+        fingerprint=fp, name=name)
 
 
 def certify_schedule(sched, *, folded: bool, devices=None,

@@ -1,2 +1,8 @@
-from repro.checkpoint.store import (save_checkpoint, restore_checkpoint,
-                                    latest_step, CheckpointManager)
+from repro.checkpoint.store import (CheckpointError, CheckpointManager,
+                                    complete_steps, latest_step,
+                                    read_manifest, restore_checkpoint,
+                                    save_checkpoint, verify_step)
+
+__all__ = ["CheckpointError", "CheckpointManager", "complete_steps",
+           "latest_step", "read_manifest", "restore_checkpoint",
+           "save_checkpoint", "verify_step"]

@@ -1,30 +1,48 @@
-"""Sharded checkpointing with manifest, async save, and elastic restore.
+"""Plan-aware sharded checkpointing with verified manifests.
 
-Layout:
-    <dir>/step_000123/
-        manifest.json       # tree structure, leaf shapes/dtypes, mesh info
-        shard_00000.npz     # this host's leaves (flat index -> array)
+Layout (schema ``repro.checkpoint/v2``):
 
-Every host writes only its addressable shards; restore re-assembles and
-re-shards onto the *current* mesh (which may differ from the saving mesh —
-elastic scaling / failed-node replacement).  On a single-process CPU run
-there is one shard file; the manifest format is nevertheless multi-host.
+    <dir>/step_000000123/
+        shard_00000.npz     # host 0's leaves (flat leaf index -> array)
+        shard_00000.json    # sidecar: SHA-256 of the .npz + its leaf list
+        shard_00001.npz     # host 1's leaves ...
+        shard_00001.json
+        manifest.json       # tree metadata, EXPECTED shard list, the
+                            # saving plan's state-spec (+ fingerprint)
+
+Every host writes only its leaves (leaf-wise round-robin) plus a sidecar
+recording the shard's SHA-256 — hosts never need each other's hashes.
+Host 0 writes ``manifest.json`` naming every *expected* shard, so the
+manifest alone is **not** the completeness marker: a step is complete
+only when the manifest exists AND every listed shard is present, its
+sidecar hash verifies, and the shards jointly cover every leaf
+(:func:`verify_step`).  This closes the multi-host race where host 0's
+manifest landed before the other hosts' shards.
+
+All writes are atomic (dot-prefixed tmp + ``os.replace``); readers never
+see a torn file, and GC sweeps stale tmps.
 
 Fault-tolerance contract used by ``launch/train.py``:
-- save every N steps (async via a background thread; the main loop never
-  blocks on serialization),
-- on SIGTERM/restart, ``restore_checkpoint(dir)`` returns the latest
-  *complete* step (a checkpoint is complete when ``manifest.json`` exists —
-  it is written last),
-- the data pipeline is stateless given (step, host_id), so resume is exact.
+
+- save every N steps (async via a background thread; transient IO errors
+  retry with exponential backoff and a final failure degrades to
+  keep-training-and-warn — the step loop never crashes on a bad disk),
+- on restart, :func:`restore_checkpoint` returns the newest *verified*
+  step; ``strict=False`` falls back past corrupt/partial steps,
+- the data pipeline is stateless given (step, host_id), so resume is
+  exact; when the plan changed, ``runtime.resilience`` de-stacks the
+  saved state through the manifest's recorded plan spec.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
 import shutil
 import threading
+import time
+import warnings
 from typing import Any
 
 import jax
@@ -32,130 +50,371 @@ import numpy as np
 
 Pytree = Any
 
+MANIFEST_SCHEMA = "repro.checkpoint/v2"
 
-def _flatten_with_paths(tree: Pytree):
-    flat, treedef = jax.tree_util.tree_flatten(tree)
-    return flat, treedef
+
+class CheckpointError(ValueError):
+    """Structured checkpoint failure (mirrors ``schedule_exec.PlanError``).
+
+    ``step``/``shard``/``reason`` survive as fields so drivers can log or
+    branch on them; the message carries the same context for humans.
+    Subclasses ``ValueError`` so legacy ``except ValueError`` callers
+    keep working.
+    """
+
+    def __init__(self, message: str, *, step: int | None = None,
+                 shard: str | None = None, reason: str | None = None):
+        self.step = step
+        self.shard = shard
+        self.reason = reason
+        ctx = ", ".join(f"{k}={v}" for k, v in
+                        (("step", step), ("shard", shard),
+                         ("reason", reason)) if v is not None)
+        super().__init__(f"[checkpoint{'; ' + ctx if ctx else ''}] "
+                         f"{message}")
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:09d}")
+
+
+def _shard_name(host_id: int) -> str:
+    return f"shard_{host_id:05d}"
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _atomic_write(path: str, write_fn) -> None:
+    tmp = os.path.join(os.path.dirname(path),
+                       f".{os.path.basename(path)}.tmp{os.getpid()}")
+    write_fn(tmp)
+    os.replace(tmp, path)
+
+
+def _atomic_write_json(path: str, doc: dict) -> None:
+    def w(tmp):
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+    _atomic_write(path, w)
 
 
 def save_checkpoint(directory: str, step: int, tree: Pytree, *,
                     host_id: int = 0, num_hosts: int = 1,
-                    extra: dict | None = None) -> str:
-    """Blocking save.  Returns the checkpoint path."""
-    path = os.path.join(directory, f"step_{step:09d}")
-    tmp = path + f".tmp{host_id}"
-    os.makedirs(tmp, exist_ok=True)
-    flat, treedef = _flatten_with_paths(tree)
-    arrays = {}
-    for i, leaf in enumerate(flat):
-        if i % num_hosts == host_id:          # leaf-wise host sharding
-            arrays[f"a{i}"] = np.asarray(jax.device_get(leaf))
-    np.savez(os.path.join(tmp, f"shard_{host_id:05d}.npz"), **arrays)
+                    extra: dict | None = None, plan: dict | None = None,
+                    io_fault=None) -> str:
+    """Blocking save of this host's shard.  Returns the checkpoint path.
+
+    ``plan``: the saving plan's state-spec
+    (``CompiledPipeline.state_spec()``) recorded in the manifest — what
+    elastic restore de-stacks through.  ``io_fault``: optional hook
+    called before any byte is written; raising ``OSError`` simulates a
+    transient storage failure (the whole save is retryable).
+    """
+    path = _step_dir(directory, step)
+    if io_fault is not None:
+        io_fault(step)
     os.makedirs(path, exist_ok=True)
-    for f in os.listdir(tmp):
-        os.replace(os.path.join(tmp, f), os.path.join(path, f))
-    shutil.rmtree(tmp, ignore_errors=True)
+    flat, _ = jax.tree_util.tree_flatten(tree)
+    mine = [i for i in range(len(flat)) if i % num_hosts == host_id]
+    arrays = {f"a{i}": np.asarray(jax.device_get(flat[i])) for i in mine}
+    shard = _shard_name(host_id)
+    npz = os.path.join(path, shard + ".npz")
+
+    def write_npz(tmp):
+        # write through a file object: np.savez(str_path) appends ".npz"
+        # to extension-less names, which would break the atomic rename
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+
+    _atomic_write(npz, write_npz)
+    _atomic_write_json(os.path.join(path, shard + ".json"),
+                       {"file": shard + ".npz", "sha256": _sha256(npz),
+                        "leaves": mine})
     if host_id == 0:
         manifest = {
+            "schema": MANIFEST_SCHEMA,
             "step": step,
             "num_hosts": num_hosts,
             "num_leaves": len(flat),
             "leaves": [{"shape": list(np.shape(x)),
                         "dtype": str(np.asarray(x).dtype)} for x in flat],
+            "shards": [_shard_name(h) + ".npz" for h in range(num_hosts)],
+            "plan": plan,
             "extra": extra or {},
         }
-        mtmp = os.path.join(path, "manifest.json.tmp")
-        with open(mtmp, "w") as f:
-            json.dump(manifest, f)
-        os.replace(mtmp, os.path.join(path, "manifest.json"))
+        _atomic_write_json(os.path.join(path, "manifest.json"), manifest)
     return path
 
 
-def latest_step(directory: str) -> int | None:
+# ---------------------------------------------------------------------------
+# Verification
+# ---------------------------------------------------------------------------
+
+def read_manifest(directory: str, step: int) -> dict:
+    path = os.path.join(_step_dir(directory, step), "manifest.json")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        raise CheckpointError("manifest.json missing (incomplete save)",
+                              step=step, reason="no-manifest") from None
+    except json.JSONDecodeError as e:
+        raise CheckpointError(f"manifest.json unreadable: {e}",
+                              step=step, reason="manifest-corrupt") from None
+
+
+def verify_step(directory: str, step: int) -> dict:
+    """Full completeness + integrity check of one step; returns its
+    manifest.  A step passes only when the manifest exists, every listed
+    shard is present with a sidecar whose SHA-256 matches the bytes on
+    disk, and the shards jointly cover every leaf."""
+    man = read_manifest(directory, step)
+    if man.get("schema") != MANIFEST_SCHEMA:
+        raise CheckpointError(
+            f"unknown manifest schema {man.get('schema')!r} "
+            f"(expected {MANIFEST_SCHEMA})", step=step, reason="schema")
+    path = _step_dir(directory, step)
+    covered: set[int] = set()
+    for shard in man["shards"]:
+        npz = os.path.join(path, shard)
+        if not os.path.exists(npz):
+            raise CheckpointError("listed shard missing (incomplete "
+                                  "multi-host save)", step=step,
+                                  shard=shard, reason="missing-shard")
+        side_path = os.path.join(path, shard[:-len(".npz")] + ".json")
+        try:
+            with open(side_path) as f:
+                side = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            raise CheckpointError("shard sidecar missing/unreadable",
+                                  step=step, shard=shard,
+                                  reason="no-sidecar") from None
+        digest = _sha256(npz)
+        if digest != side["sha256"]:
+            raise CheckpointError(
+                f"shard bytes do not match recorded SHA-256 "
+                f"({digest[:12]} != {side['sha256'][:12]})",
+                step=step, shard=shard, reason="checksum-mismatch")
+        covered.update(side["leaves"])
+    if covered != set(range(man["num_leaves"])):
+        missing = sorted(set(range(man["num_leaves"])) - covered)
+        raise CheckpointError(
+            f"shards cover {len(covered)}/{man['num_leaves']} leaves "
+            f"(missing {missing[:8]}...)", step=step,
+            reason="incomplete-leaves")
+    return man
+
+
+def _all_step_dirs(directory: str) -> list[int]:
     if not os.path.isdir(directory):
-        return None
-    best = None
-    for name in os.listdir(directory):
-        m = re.fullmatch(r"step_(\d+)", name)
-        if m and os.path.exists(os.path.join(directory, name, "manifest.json")):
-            s = int(m.group(1))
-            best = s if best is None or s > best else best
-    return best
+        return []
+    return sorted(int(m.group(1)) for m in
+                  (re.fullmatch(r"step_(\d+)", n)
+                   for n in os.listdir(directory)) if m)
 
 
-def restore_checkpoint(directory: str, like: Pytree, *, step: int | None = None,
-                       shardings: Pytree | None = None) -> tuple[Pytree, int]:
-    """Restore the latest (or given) step into the structure of ``like``.
-
-    ``shardings``: optional pytree of NamedShardings for the *current* mesh;
-    arrays are placed with jax.device_put accordingly (elastic re-shard)."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no complete checkpoint under {directory}")
-    path = os.path.join(directory, f"step_{step:09d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data: dict[int, np.ndarray] = {}
-    for name in os.listdir(path):
-        if name.startswith("shard_") and name.endswith(".npz"):
-            with np.load(os.path.join(path, name)) as z:
-                for k in z.files:
-                    data[int(k[1:])] = z[k]
-    flat, treedef = _flatten_with_paths(like)
-    if len(flat) != manifest["num_leaves"]:
-        raise ValueError(
-            f"checkpoint has {manifest['num_leaves']} leaves, "
-            f"model expects {len(flat)} — architecture mismatch")
+def complete_steps(directory: str) -> list[int]:
+    """Ascending list of steps that pass full verification."""
     out = []
+    for s in _all_step_dirs(directory):
+        try:
+            verify_step(directory, s)
+        except CheckpointError:
+            continue
+        out.append(s)
+    return out
+
+
+def latest_step(directory: str) -> int | None:
+    """Newest step that passes full verification (hash-checked), or None."""
+    steps = complete_steps(directory)
+    return steps[-1] if steps else None
+
+
+# ---------------------------------------------------------------------------
+# Restore
+# ---------------------------------------------------------------------------
+
+def _load_step(directory: str, step: int, man: dict, like: Pytree,
+               shardings: Pytree | None, expect_shapes: bool) -> Pytree:
+    path = _step_dir(directory, step)
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    if len(flat) != man["num_leaves"]:
+        raise CheckpointError(
+            f"checkpoint has {man['num_leaves']} leaves, model expects "
+            f"{len(flat)} — architecture mismatch", step=step,
+            reason="structure")
+    data: dict[int, np.ndarray] = {}
+    for shard in man["shards"]:
+        with np.load(os.path.join(path, shard)) as z:
+            for k in z.files:
+                data[int(k[1:])] = z[k]
     shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
                   if shardings is not None else [None] * len(flat))
+    out = []
     for i, (proto, shd) in enumerate(zip(flat, shard_flat)):
         if i not in data:
-            raise ValueError(f"leaf {i} missing from checkpoint shards")
+            raise CheckpointError(f"leaf {i} missing from shards",
+                                  step=step, reason="missing-leaf")
         arr = data[i]
-        if list(arr.shape) != list(np.shape(proto)):
-            raise ValueError(f"leaf {i} shape {arr.shape} != {np.shape(proto)}")
+        if expect_shapes and list(arr.shape) != list(np.shape(proto)):
+            raise CheckpointError(
+                f"leaf {i} shape {list(arr.shape)} != "
+                f"{list(np.shape(proto))} (pass expect_shapes=False for "
+                "the elastic path)", step=step, reason="shape")
         out.append(jax.device_put(arr, shd) if shd is not None
                    else jax.numpy.asarray(arr))
-    return jax.tree_util.tree_unflatten(treedef, out), step
+    return jax.tree_util.tree_unflatten(treedef, out)
 
+
+def restore_checkpoint(directory: str, like: Pytree, *,
+                       step: int | None = None,
+                       shardings: Pytree | None = None,
+                       strict: bool = True,
+                       expect_shapes: bool = True) -> tuple[Pytree, int]:
+    """Restore the newest verified (or given) step into ``like``'s
+    structure.
+
+    Every candidate step is hash-verified before a byte is deserialized.
+    ``strict=True`` raises :class:`CheckpointError` on the first
+    corrupt/partial candidate; ``strict=False`` walks backwards to the
+    newest step that fully verifies (logging what it skipped) and only
+    raises when no step survives.
+
+    ``shardings``: optional pytree of NamedShardings for the *current*
+    mesh; arrays are placed with ``jax.device_put`` accordingly.
+    ``expect_shapes=False`` skips leaf-shape checks — the elastic path,
+    where the caller re-stacks through ``runtime.resilience``.
+    """
+    candidates = ([step] if step is not None
+                  else sorted(_all_step_dirs(directory), reverse=True))
+    if not candidates:
+        raise CheckpointError(f"no checkpoints under {directory}",
+                              reason="empty")
+    skipped: list[int] = []
+    last_err: CheckpointError | None = None
+    for s in candidates:
+        try:
+            man = verify_step(directory, s)
+            tree = _load_step(directory, s, man, like, shardings,
+                              expect_shapes)
+        except CheckpointError as e:
+            if strict:
+                raise
+            skipped.append(s)
+            last_err = e
+            continue
+        if skipped:
+            print(f"[checkpoint] step(s) {skipped} failed verification "
+                  f"(last: {last_err}); fell back to step {s}")
+        return tree, s
+    assert last_err is not None
+    raise last_err
+
+
+# ---------------------------------------------------------------------------
+# Manager
+# ---------------------------------------------------------------------------
 
 class CheckpointManager:
-    """Async, bounded-retention checkpoint manager."""
+    """Async, bounded-retention manager with retry/backoff saves.
+
+    ``plan``: state-spec dict stamped into every manifest.  ``io_fault``:
+    fault-injection hook forwarded to :func:`save_checkpoint`.  Saves
+    retry transient ``OSError`` up to ``retries`` times with exponential
+    backoff (``backoff * 2**attempt`` seconds); a final failure warns
+    and returns ``None`` — checkpointing degrades, training never
+    crashes on storage trouble.
+    """
 
     def __init__(self, directory: str, *, keep: int = 3, host_id: int = 0,
-                 num_hosts: int = 1):
+                 num_hosts: int = 1, retries: int = 3,
+                 backoff: float = 0.05, plan: dict | None = None,
+                 io_fault=None):
         self.directory = directory
         self.keep = keep
         self.host_id = host_id
         self.num_hosts = num_hosts
+        self.retries = retries
+        self.backoff = backoff
+        self.plan = plan
+        self.io_fault = io_fault
         self._thread: threading.Thread | None = None
 
-    def save_async(self, step: int, tree: Pytree, extra: dict | None = None):
+    def save(self, step: int, tree: Pytree,
+             extra: dict | None = None) -> str | None:
+        """Blocking save with retry/backoff; returns the path or None."""
+        last: OSError | None = None
+        for attempt in range(self.retries + 1):
+            try:
+                path = save_checkpoint(
+                    self.directory, step, tree, host_id=self.host_id,
+                    num_hosts=self.num_hosts, extra=extra, plan=self.plan,
+                    io_fault=self.io_fault)
+                self._gc()
+                return path
+            except OSError as e:
+                last = e
+                if attempt < self.retries:
+                    delay = self.backoff * (2 ** attempt)
+                    print(f"[checkpoint] save at step {step} failed "
+                          f"({e}); retry {attempt + 1}/{self.retries} "
+                          f"in {delay:.2f}s")
+                    time.sleep(delay)
+        warnings.warn(
+            f"checkpoint save at step {step} failed after "
+            f"{self.retries + 1} attempts ({last}); training continues "
+            "WITHOUT this checkpoint", RuntimeWarning, stacklevel=2)
+        return None
+
+    def save_async(self, step: int, tree: Pytree,
+                   extra: dict | None = None) -> None:
         self.wait()                           # one in flight at a time
         tree = jax.device_get(tree)           # snapshot before async write
-
-        def work():
-            save_checkpoint(self.directory, step, tree,
-                            host_id=self.host_id, num_hosts=self.num_hosts,
-                            extra=extra)
-            self._gc()
-
-        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread = threading.Thread(
+            target=lambda: self.save(step, tree, extra), daemon=True)
         self._thread.start()
 
-    def wait(self):
+    def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def _gc(self):
-        steps = sorted(
-            int(m.group(1)) for m in
-            (re.fullmatch(r"step_(\d+)", n)
-             for n in os.listdir(self.directory))
-            if m)
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
-                          ignore_errors=True)
+    def _gc(self) -> None:
+        """Retention keyed on VERIFIED-complete steps only.
+
+        Incomplete step dirs never count toward ``keep`` (so garbage can
+        no longer crowd out every good checkpoint); incomplete dirs
+        *older* than the newest complete step are swept (newer ones may
+        still be mid-write on another host), as are stale tmp files/dirs
+        from crashed saves.  Host 0 owns GC.
+        """
+        if self.host_id != 0:
+            return
+        complete = complete_steps(self.directory)
+        for s in (complete[:-self.keep] if self.keep else []):
+            shutil.rmtree(_step_dir(self.directory, s), ignore_errors=True)
+        newest = complete[-1] if complete else None
+        for name in os.listdir(self.directory):
+            full = os.path.join(self.directory, name)
+            if name.startswith(".") or ".tmp" in name:
+                (shutil.rmtree(full, ignore_errors=True)
+                 if os.path.isdir(full) else _unlink_quiet(full))
+                continue
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and newest is not None and int(m.group(1)) < newest \
+                    and int(m.group(1)) not in complete:
+                shutil.rmtree(full, ignore_errors=True)
+
+
+def _unlink_quiet(path: str) -> None:
+    try:
+        os.remove(path)
+    except OSError:
+        pass

@@ -1,15 +1,31 @@
-"""End-to-end training driver.
+"""End-to-end training driver: a thin loop over ``auto_pipeline`` +
+``CheckpointManager`` + a fault plan.
 
-Runs a real training loop on the host (CPU here; the same code path drives
-TPU pods — the mesh/shardings come from launch.mesh): synthetic-but-
-learnable data, AdamW, periodic async checkpointing, exact resume, optional
-pipeline-parallel execution over simulated devices.
+Runs a real training loop on the host (CPU here; the same code path
+drives TPU pods — the mesh/shardings come from launch.mesh):
+synthetic-but-learnable data, AdamW, periodic async checkpointing with
+verified manifests, exact resume, optional pipeline-parallel execution
+over simulated devices with a (dp, pp) mesh and ZeRO sharding.
 
-Fault tolerance contract (exercised by examples/fault_tolerance.py):
-- ``--simulate-failure K`` hard-kills the process at step K;
-- rerunning with ``--resume`` restores the latest complete checkpoint and
-  the stateless data pipeline regenerates the exact step stream, so the
-  loss trajectory continues as if uninterrupted.
+Fault-tolerance contract (exercised by examples/fault_tolerance.py and
+tests/helpers/resilience_drill.py):
+
+- ``--faults kill@K`` (or legacy ``--simulate-failure K``) hard-kills
+  the process after step K; ``stop@K`` stops abruptly in-process;
+  ``nan@K`` poisons a batch (the GradGuard skips the update);
+  ``corrupt@K[:shard]`` / ``truncate@K[:shard]`` mutate the newest
+  checkpoint shard; ``iofail@K:N`` makes the next N save attempts fail
+  transiently (retry/backoff).  The same script parses from
+  ``$REPRO_FAULTS``.
+- Rerunning with ``--resume`` restores the newest *verified* checkpoint
+  (corrupt/partial steps are skipped with a warning) and the stateless
+  data pipeline regenerates the exact step stream, so the loss
+  trajectory continues as if uninterrupted.
+- Resume may use a DIFFERENT plan (``--pp``/``--dp``/``--zero-stage``/
+  ``--interleave``): restore de-stacks the saved stage stacks through
+  the manifest's recorded plan spec and re-stacks onto the new plan
+  (runtime.resilience) — a P=4 run killed mid-epoch resumes as
+  P=2 x dp=2 ZeRO-2 with an identical loss trajectory.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.train --arch uvit --steps 200
@@ -17,93 +33,175 @@ Usage:
         --devices 8 --steps 50          # wave PP over 8 simulated devices
 """
 import argparse
+import dataclasses
+import json
 import os
-import sys
+from typing import Any
 
 
 def _parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="uvit",
                     help="smoke arch key (see repro.configs.smoke) or "
-                         "'uvit'/'hunyuan' for the pipeline path")
+                         "'uvit'/'skipvit' for the pipeline path")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--global-batch", type=int, default=16)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--keep", type=int, default=3,
+                    help="checkpoint retention (verified-complete steps)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--pipeline", action="store_true",
                     help="wave pipeline over simulated devices")
     ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--dp", type=int, default=2,
+                    help="data-parallel degree of the (data, model) mesh")
+    ap.add_argument("--pp", type=int, default=None,
+                    help="pipeline degree (default: devices // dp)")
+    ap.add_argument("--zero-stage", type=int, default=0, choices=(0, 1, 2))
+    ap.add_argument("--interleave", type=int, default=None,
+                    help="virtual stage slots per device (V)")
+    ap.add_argument("--wire-dtype", default="bfloat16",
+                    help="boundary-hop dtype; float32 = exact wire")
     ap.add_argument("--microbatches", type=int, default=4)
-    ap.add_argument("--simulate-failure", type=int, default=0)
+    ap.add_argument("--faults", default=None,
+                    help="fault plan, e.g. 'kill@60,corrupt@80:shard_00000,"
+                         "nan@10,iofail@20:2' (default: $REPRO_FAULTS)")
+    ap.add_argument("--nan-skip-budget", type=int, default=3,
+                    help="max consecutive non-finite steps before abort")
+    ap.add_argument("--simulate-failure", type=int, default=0,
+                    help="legacy alias for --faults kill@K")
+    ap.add_argument("--out-json", default=None,
+                    help="write the step->loss trajectory + resume "
+                         "metadata here on exit")
     ap.add_argument("--log-every", type=int, default=10)
     return ap.parse_args(argv)
 
 
+@dataclasses.dataclass
+class TrainResult:
+    """What one driver invocation did (consumed by drills and examples)."""
+    final_loss: float | None
+    losses: dict                    # step -> float (host)
+    start: int                      # first step this invocation ran
+    resumed: Any = None             # RestoreInfo | None
+    logical_params: Any = None      # model-space params (plan-independent)
+    skipped_steps: int = 0          # non-finite updates the guard skipped
+
+
 def main(argv=None):
-    args = _parse_args(argv)
+    res = run(_parse_args(argv))
+    return res.final_loss
+
+
+def run(args) -> TrainResult:
+    from repro.runtime.resilience import FaultPlan, GradGuard, \
+        restore_training_state
+
+    faults = FaultPlan.parse(args.faults)
+    if args.simulate_failure:
+        faults = faults.with_kill(args.simulate_failure)
     if args.pipeline and "XLA_FLAGS" not in os.environ:
+        need = max(args.devices,
+                   args.dp * (args.pp or max(args.devices // args.dp, 1)))
         os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.devices}")
+            f"--xla_force_host_platform_device_count={need}")
 
     import jax
-    import jax.numpy as jnp
 
-    from repro.checkpoint import CheckpointManager, restore_checkpoint, \
-        latest_step
-    from repro.data import SyntheticLatentDataset, SyntheticTokenDataset, \
-        ShardedLoader
-    from repro.optim import AdamWConfig, adamw_init, adamw_update, \
-        cosine_schedule
+    from repro.checkpoint import CheckpointManager, latest_step, \
+        restore_checkpoint
+    from repro.optim import AdamWConfig, cosine_schedule
 
     opt_cfg = AdamWConfig(lr=args.lr)
     key = jax.random.PRNGKey(0)
 
     if args.pipeline:
-        params, opt_state, step_fn, loader, pack = _build_pipeline_trainer(
-            args, key, opt_cfg)
+        params, opt_state, step_fn, loader, pack, compiled = \
+            _build_pipeline_trainer(args, key, opt_cfg)
     else:
         params, opt_state, step_fn, loader, pack = _build_smoke_trainer(
             args, key, opt_cfg)
+        compiled = None
 
-    start = 0
-    mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
-    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        (params, opt_state), start = restore_checkpoint(
-            args.ckpt_dir, (params, opt_state))
-        print(f"[train] resumed from step {start}")
+    mgr = CheckpointManager(
+        args.ckpt_dir, keep=args.keep,
+        plan=compiled.state_spec() if compiled is not None else None,
+        io_fault=faults.io_fault) if args.ckpt_dir else None
+
+    start, resumed = 0, None
+    if args.resume and args.ckpt_dir \
+            and latest_step(args.ckpt_dir) is not None:
+        state = {"params": params, "opt": opt_state}
+        if compiled is not None:
+            state, info = restore_training_state(
+                args.ckpt_dir, compiled, state, strict=False)
+            start, resumed = info.step, info
+            print(f"[train] resumed from step {info.step}"
+                  + (" (elastic restore: plan changed)" if info.elastic
+                     else ""))
+        else:
+            state, start = restore_checkpoint(args.ckpt_dir, state,
+                                              strict=False)
+            print(f"[train] resumed from step {start}")
+        params, opt_state = state["params"], state["opt"]
+
+    guard = GradGuard(budget=args.nan_skip_budget)
+    losses: dict[int, float] = {}
+
+    def finish(loss) -> TrainResult:
+        logical = None
+        if compiled is not None:
+            logical = jax.device_get(compiled.merge_params(*params))
+        res = TrainResult(
+            final_loss=None if loss is None else float(loss),
+            losses=losses, start=start, resumed=resumed,
+            logical_params=logical, skipped_steps=guard.skipped_total)
+        if args.out_json:
+            doc = {"final_loss": res.final_loss,
+                   "losses": {str(k): v for k, v in losses.items()},
+                   "start": start,
+                   "resumed_step": resumed.step if resumed else None,
+                   "elastic": bool(resumed.elastic) if resumed else False,
+                   "skipped_steps": res.skipped_steps}
+            with open(args.out_json, "w") as f:
+                json.dump(doc, f)
+        return res
 
     if start >= args.steps:
         print(f"[train] nothing to do: resumed step {start} >= "
               f"--steps {args.steps}")
-        return None
+        return finish(None)
 
     import time
     t0 = time.time()
+    loss = None
     for step in range(start, args.steps):
-        batch = pack(loader.get(step))
+        batch = faults.poison_batch(pack(loader.get(step)), step)
         rng = jax.random.fold_in(key, step)
         lr = cosine_schedule(step, base_lr=args.lr, warmup=20,
                              total=args.steps)
-        params, opt_state, loss = step_fn(params, opt_state, batch, rng, lr)
+        params, opt_state, loss, finite = step_fn(params, opt_state, batch,
+                                                  rng, lr)
+        guard.observe(bool(finite), step)
+        losses[step] = float(loss)
         if step % args.log_every == 0 or step == args.steps - 1:
             sps = (step - start + 1) * args.global_batch / (time.time() - t0)
             print(f"[train] step {step:5d} loss {float(loss):.4f} "
                   f"lr {float(lr):.2e} ({sps:.1f} samples/s)")
         if mgr and (step + 1) % args.ckpt_every == 0:
-            mgr.save_async(step + 1, (params, opt_state))
-        if args.simulate_failure and step + 1 == args.simulate_failure:
-            print("[train] simulating hard node failure (os._exit)")
-            sys.stdout.flush()
-            if mgr:
-                mgr.wait()
-            os._exit(42)
+            mgr.save_async(step + 1, {"params": params, "opt": opt_state})
+        if faults.post_step(step + 1, ckpt_dir=args.ckpt_dir,
+                            flush=mgr.wait if mgr else None) == "stop":
+            print(f"[train] fault plan: abrupt stop after step {step} "
+                  "(no final save)")
+            return finish(loss)
     if mgr:
-        mgr.save_async(args.steps, (params, opt_state))
+        mgr.save_async(args.steps, {"params": params, "opt": opt_state})
         mgr.wait()
     print(f"[train] done: final loss {float(loss):.4f}")
-    return float(loss)
+    return finish(loss)
 
 
 def _build_smoke_trainer(args, key, opt_cfg):
@@ -112,6 +210,7 @@ def _build_smoke_trainer(args, key, opt_cfg):
     from repro.optim import adamw_init, adamw_update
     from repro.data import SyntheticLatentDataset, SyntheticTokenDataset, \
         ShardedLoader
+    from repro.runtime.resilience import all_finite
 
     name = args.arch if args.arch in SMOKE_FACTORIES else {
         "uvit": "uvit-h", "hunyuan": "hunyuan-dit"}.get(args.arch, args.arch)
@@ -145,34 +244,75 @@ def _build_smoke_trainer(args, key, opt_cfg):
     @jax.jit
     def step_fn(params, opt_state, batch, rng, lr):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
-        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg,
-                                         lr=lr)
-        return params, opt_state, loss
+        finite = all_finite(loss, grads)
+        new_p, new_o = adamw_update(params, grads, opt_state, opt_cfg,
+                                    lr=lr)
+        params, opt_state = jax.lax.cond(
+            finite, lambda: (new_p, new_o), lambda: (params, opt_state))
+        return params, opt_state, loss, finite
 
     return params, opt_state, step_fn, loader, pack
 
 
+def _pipeline_mesh(dp: int, pp: int):
+    """(data, model) mesh; prefix-slice when the host exposes more
+    devices than the plan needs (the shrink-restore drill resumes a
+    P=1 x dp=2 plan inside a process forced to 8 host devices)."""
+    import jax
+    try:
+        return jax.make_mesh((dp, pp), ("data", "model"))
+    except ValueError:
+        import numpy as np
+        from jax.sharding import Mesh
+        devs = jax.devices()
+        if len(devs) < dp * pp:
+            raise
+        return Mesh(np.asarray(devs[:dp * pp]).reshape(dp, pp),
+                    ("data", "model"))
+
+
 def _build_pipeline_trainer(args, key, opt_cfg):
-    """Wave-PP trainer on simulated host devices via the PULSE compile path:
-    graph -> partition -> schedule -> executor (runtime.compile)."""
+    """Wave-PP trainer on simulated host devices via the PULSE compile
+    path: graph -> partition -> schedule -> executor (runtime.compile).
+
+    The model architecture is FIXED (independent of the mesh shape) so a
+    checkpoint from one (pp, dp, zero, V) plan restores elastically onto
+    any other.
+    """
     import jax
     import jax.numpy as jnp
-    from repro.models.diffusion import UViTConfig, uvit_pipeline_graph
+    from repro.models.diffusion import (SkipViTConfig, UViTConfig,
+                                        skipvit_pipeline_graph,
+                                        uvit_pipeline_graph)
     from repro.runtime.compile import auto_pipeline
     from repro.runtime.adapters import (diffusion_model_fns,
-                                        make_diffusion_microbatches)
+                                        make_diffusion_microbatches,
+                                        skipvit_model_fns)
+    from repro.runtime.resilience import all_finite
     from repro.optim import adamw_init, adamw_update
     from repro.data import SyntheticLatentDataset, ShardedLoader
 
-    D = args.devices // 2
-    mesh = jax.make_mesh((2, D), ("data", "model"))
-    cfg = UViTConfig("uvit-pp", img_size=8, in_ch=4, patch=2, d_model=64,
-                     n_layers=2 * D, n_heads=4, d_ff=128, n_classes=10)
+    dp = args.dp
+    P = args.pp or max(args.devices // dp, 1)
+    mesh = _pipeline_mesh(dp, P)
     M = args.microbatches
-    graph = uvit_pipeline_graph(cfg, batch=args.global_batch // M)
-    compiled = auto_pipeline(graph, diffusion_model_fns(cfg, "uvit"),
-                             args.devices, pipeline_devices=D,
-                             microbatches=M, dp_size=2)
+    if args.arch == "skipvit":
+        cfg = SkipViTConfig("skipvit-pp", img_size=8, in_ch=4, patch=2,
+                            d_model=64, n_heads=4, d_ff=128, n_classes=10,
+                            n_enc=4, n_mid=2, n_dec=4)
+        graph = skipvit_pipeline_graph(cfg, batch=args.global_batch // M)
+        fns = skipvit_model_fns(cfg)
+    else:
+        cfg = UViTConfig("uvit-pp", img_size=8, in_ch=4, patch=2,
+                         d_model=64, n_layers=8, n_heads=4, d_ff=128,
+                         n_classes=10)
+        graph = uvit_pipeline_graph(cfg, batch=args.global_batch // M)
+        fns = diffusion_model_fns(cfg, "uvit")
+    compiled = auto_pipeline(graph, fns, dp * P, pipeline_devices=P,
+                             microbatches=M, dp_size=dp,
+                             zero_stage=args.zero_stage,
+                             interleave=args.interleave,
+                             wire_dtype=args.wire_dtype)
     print("[train] " + compiled.describe().replace("\n", "\n[train] "))
     params = compiled.init_pipeline_params(key)
     opt_state = adamw_init(params)
@@ -191,11 +331,14 @@ def _build_pipeline_trainer(args, key, opt_cfg):
     @jax.jit
     def step_fn(params, opt_state, batch, rng, lr):
         loss, grads = jax.value_and_grad(loss_of)(params, batch, rng)
-        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg,
-                                         lr=lr)
-        return params, opt_state, loss
+        finite = all_finite(loss, grads)
+        new_p, new_o = adamw_update(params, grads, opt_state, opt_cfg,
+                                    lr=lr)
+        params, opt_state = jax.lax.cond(
+            finite, lambda: (new_p, new_o), lambda: (params, opt_state))
+        return params, opt_state, loss, finite
 
-    return params, opt_state, step_fn, loader, pack
+    return params, opt_state, step_fn, loader, pack, compiled
 
 
 if __name__ == "__main__":

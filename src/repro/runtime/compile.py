@@ -383,6 +383,24 @@ class CompiledPipeline:
             self.schedule, folded=True, devices=self.partition.devices,
             skip_consumers=self.layout.skip_consumers())
 
+    def state_spec(self) -> dict:
+        """JSON-serializable spec of how this plan lays out training
+        state at rest: partition cuts, stage->device map, the layout's
+        slot/count/pad tables, (dp, zero_stage, V, M, wire_dtype) — what
+        ``checkpoint.store`` records in every manifest and
+        ``runtime.resilience`` de-stacks saved state through when the
+        restore-time plan differs."""
+        from repro.runtime.resilience import compiled_state_spec
+        return compiled_state_spec(self)
+
+    def fingerprint(self) -> str:
+        """Digest of the state-layout-relevant subset of
+        :meth:`state_spec` — equal fingerprints mean a checkpoint loads
+        directly; different ones route through the elastic
+        de-stack/re-stack path."""
+        from repro.runtime.resilience import plan_fingerprint
+        return plan_fingerprint(self.state_spec())
+
     def certify(self, *, name: str | None = None):
         """Statically verify the lowered plan and return the
         :class:`~repro.analysis.certificate.PlanCertificate`.

@@ -1,0 +1,442 @@
+"""Elastic fault tolerance for the compiled pipeline.
+
+Three pieces make crash/kill/shrink recovery a first-class property of
+the ``auto_pipeline`` path:
+
+1. **Plan state-specs + fingerprints.**  :func:`compiled_state_spec`
+   serializes everything that determines how a
+   :class:`~repro.runtime.compile.CompiledPipeline`'s training state is
+   laid out at rest — partition cuts, stage->device map, the
+   :class:`~repro.runtime.compile.StageLayout` slot/count/pad tables —
+   and :func:`plan_fingerprint` hashes the layout-relevant subset.  The
+   spec rides in every checkpoint manifest (``checkpoint.store``), so a
+   restore knows exactly which plan wrote the bytes it is reading.
+   ``M``/``wire_dtype``/``dp``/``zero_stage`` are recorded for
+   observability but excluded from the fingerprint: ``jax.device_get``
+   reassembles ZeRO-sharded stacks into full logical arrays before the
+   write, so the at-rest format only depends on the stacking layout.
+
+2. **Elastic restore.**  When the restore-time plan differs (fewer
+   devices after a node loss, a different P/V from a re-run of the
+   tuner), :func:`state_to_logical` de-stacks the saved ``[D, V, pad,
+   ...]`` stage stacks through the *saved* layout spec back to the
+   model's flat block stacks (pure numpy — no jax mesh needed for the
+   old plan), and :func:`logical_to_state` re-stacks them onto the new
+   plan via its own ``StageLayout.split``.  AdamW state mirrors params
+   leaf-wise, so the same mapping applies to ``m``/``v``.
+   :func:`restore_training_state` orchestrates: fast path when
+   fingerprints match, destack/restack when they don't.
+
+3. **Fault injection + a NaN guard.**  :class:`FaultPlan` parses an
+   env/flag-driven fault script (``kill@K``, ``stop@K``, ``nan@K``,
+   ``corrupt@K[:shard]``, ``truncate@K[:shard]``, ``iofail@K:N``) that
+   the training driver (``launch/train.py``) consults each step, and
+   :class:`GradGuard` is the skip-and-log guard for non-finite
+   grads with a bounded consecutive-skip budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import re
+import sys
+from typing import Any
+
+import numpy as np
+
+Pytree = Any
+
+STATE_SPEC_SCHEMA = "repro.state-spec/v1"
+
+#: spec keys that determine the at-rest array layout (and hence whether a
+#: saved checkpoint can be loaded directly or must be de-/re-stacked).
+_FINGERPRINT_FIELDS = ("P", "V", "folded", "cuts", "devices",
+                       "num_param_stacks", "enc_slots", "dec_slots",
+                       "enc_counts", "dec_counts", "enc_pad", "dec_pad")
+
+
+def plan_fingerprint(spec: dict) -> str:
+    """Stable 16-hex-digit digest of a state spec's layout fields.
+
+    Computed over the canonical JSON of :data:`_FINGERPRINT_FIELDS` only,
+    so it is identical whether the spec came fresh off a plan (tuples)
+    or round-tripped through a manifest (lists).
+    """
+    doc = {k: spec[k] for k in _FINGERPRINT_FIELDS}
+    blob = json.dumps(doc, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def compiled_state_spec(plan) -> dict:
+    """JSON-serializable layout spec for a CompiledPipeline's state."""
+    part, lay, pcfg = plan.partition, plan.layout, plan.pcfg
+    spec = {
+        "schema": STATE_SPEC_SCHEMA,
+        "P": int(part.num_devices),
+        "S": int(part.num_stages),
+        "V": int(lay.V),
+        "folded": bool(part.folded),
+        "cuts": [int(c) for c in part.cuts],
+        "devices": [int(d) for d in part.devices],
+        "dp": int(pcfg.dp_size),
+        "zero_stage": int(pcfg.zero_stage),
+        "M": int(pcfg.num_microbatches),
+        "wire_dtype": str(pcfg.wire_dtype),
+        "num_param_stacks": int(plan.model_fns.num_param_stacks),
+        "enc_slots": [[int(s) for s in ss] for ss in lay.enc_slots],
+        "dec_slots": [[int(s) for s in ss] for ss in lay.dec_slots],
+        "enc_counts": [[int(c) for c in cc] for cc in lay.enc_counts],
+        "dec_counts": [[int(c) for c in cc] for cc in lay.dec_counts],
+        "enc_pad": int(lay.enc_pad),
+        "dec_pad": int(lay.dec_pad),
+    }
+    spec["fingerprint"] = plan_fingerprint(spec)
+    return spec
+
+
+# ===========================================================================
+# Elastic de-stack / re-stack
+# ===========================================================================
+
+def _spec_enc_ranges(spec: dict) -> list:
+    cuts = spec["cuts"]
+    return [[(cuts[s], cuts[s + 1]) for s in ss]
+            for ss in spec["enc_slots"]]
+
+
+def _spec_dec_ranges(spec: dict) -> list:
+    cuts = spec["cuts"]
+    mid = cuts[(len(cuts) - 1) // 2]
+    return [[(cuts[s] - mid, cuts[s + 1] - mid) for s in ss]
+            for ss in spec["dec_slots"]]
+
+
+def _destack(stacked: Pytree, ranges: list) -> Pytree:
+    """Numpy port of ``StageLayout._unstack`` driven by a serialized spec:
+    ``[D, V, pad, ...]`` stage stacks -> flat block stack in graph order."""
+    import jax
+
+    order = sorted(((d, v) for d in range(len(ranges))
+                    for v in range(len(ranges[d]))),
+                   key=lambda dv: ranges[dv[0]][dv[1]][0])
+
+    def f(x):
+        x = np.asarray(x)
+        parts = [x[d, v, : ranges[d][v][1] - ranges[d][v][0]]
+                 for d, v in order]
+        return np.concatenate(parts, 0)
+
+    return jax.tree.map(f, stacked)
+
+
+def destack_stage_stacks(stage_stacks: tuple, spec: dict) -> tuple:
+    """Saved per-(device, slot) stage stacks -> the model's logical block
+    stacks, through the *saved* plan's layout spec."""
+    import jax
+
+    if not spec["folded"]:
+        return (_destack(stage_stacks[0], _spec_enc_ranges(spec)),)
+    enc_b = _destack(stage_stacks[0], _spec_enc_ranges(spec))
+    dec_b = _destack(stage_stacks[1], _spec_dec_ranges(spec))
+    if spec["num_param_stacks"] == 1:
+        return (jax.tree.map(lambda a, b: np.concatenate([a, b], 0),
+                             enc_b, dec_b),)
+    return (enc_b, dec_b)
+
+
+def state_to_logical(state: dict, spec: dict) -> dict:
+    """Training state saved under ``spec`` -> plan-independent logical view.
+
+    ``state`` is the tree ``launch/train.py`` checkpoints: ``{"params":
+    (stage_stacks, edge), "opt": {"m": ..., "v": ..., "step": ...}}``
+    where AdamW's ``m``/``v`` mirror ``params`` leaf-wise.
+    """
+    def conv(pt):
+        stacks, edge = pt
+        return {"stacks": destack_stage_stacks(tuple(stacks), spec),
+                "edge": edge}
+
+    out = {"params": conv(state["params"])}
+    if state.get("opt") is not None:
+        o = state["opt"]
+        out["opt"] = {"m": conv(o["m"]), "v": conv(o["v"]), "step": o["step"]}
+    return out
+
+
+def logical_to_state(logical: dict, plan) -> dict:
+    """Inverse of :func:`state_to_logical`, onto the *new* plan."""
+    def conv(d):
+        return (plan.layout.split(tuple(d["stacks"])), d["edge"])
+
+    state = {"params": conv(logical["params"])}
+    if logical.get("opt") is not None:
+        o = logical["opt"]
+        state["opt"] = {"m": conv(o["m"]), "v": conv(o["v"]),
+                        "step": o["step"]}
+    return state
+
+
+@dataclasses.dataclass(frozen=True)
+class RestoreInfo:
+    """What :func:`restore_training_state` did."""
+    step: int                       # checkpoint step restored
+    elastic: bool                   # True when saved plan != current plan
+    saved_fingerprint: str | None
+    fingerprint: str
+
+
+def restore_training_state(directory: str, plan, like_state: dict, *,
+                           step: int | None = None,
+                           strict: bool = True) -> tuple[dict, RestoreInfo]:
+    """Restore training state for ``plan``, elastically if needed.
+
+    Loads the newest fully-verified checkpoint (``strict=False`` falls
+    back past corrupt/partial steps), then compares the manifest's saved
+    state spec against ``plan``'s: identical fingerprints load directly
+    (the pytree topology is plan-invariant — only leaf shapes differ);
+    different fingerprints route through the logical view
+    (:func:`state_to_logical` with the *saved* spec, then
+    :func:`logical_to_state` onto ``plan``).
+    """
+    from repro.checkpoint.store import (CheckpointError, read_manifest,
+                                        restore_checkpoint)
+
+    state, got = restore_checkpoint(directory, like_state, step=step,
+                                    strict=strict, expect_shapes=False)
+    man = read_manifest(directory, got)
+    saved = man.get("plan")
+    if saved is None:
+        raise CheckpointError(
+            "checkpoint carries no plan state-spec; cannot verify it "
+            "matches the compiled pipeline (save through "
+            "CheckpointManager(..., plan=compiled.state_spec()))",
+            step=got, reason="no-plan-spec")
+    cur = compiled_state_spec(plan)
+    if saved["fingerprint"] == cur["fingerprint"]:
+        return state, RestoreInfo(got, False, saved["fingerprint"],
+                                  cur["fingerprint"])
+    print(f"[resilience] plan changed since step {got} "
+          f"({saved['fingerprint']} -> {cur['fingerprint']}): de-stacking "
+          f"P={saved['P']} V={saved['V']} dp={saved['dp']} "
+          f"zero={saved['zero_stage']} state onto P={cur['P']} V={cur['V']} "
+          f"dp={cur['dp']} zero={cur['zero_stage']}")
+    logical = state_to_logical(state, saved)
+    return logical_to_state(logical, plan), RestoreInfo(
+        got, True, saved["fingerprint"], cur["fingerprint"])
+
+
+# ===========================================================================
+# Fault injection
+# ===========================================================================
+
+_FAULT_RE = re.compile(
+    r"(kill|stop|nan|corrupt|truncate|iofail)@(\d+)(?::([\w.\-]+))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultAction:
+    kind: str            # kill | stop | nan | corrupt | truncate | iofail
+    step: int
+    arg: str | None = None   # corrupt/truncate: shard name
+    count: int = 1           # iofail: number of injected IO failures
+
+
+class FaultPlan:
+    """Env/flag-driven fault script for the training driver.
+
+    Comma-separated tokens, each ``kind@step`` with an optional arg:
+
+    - ``kill@K``      — hard-kill the process (``os._exit``) after step K,
+      flushing any in-flight checkpoint first (a node dies between steps);
+    - ``stop@K``      — abrupt in-process stop after step K, *without* a
+      final save (same recovery surface as kill, usable by in-process
+      drills);
+    - ``nan@K``       — poison step K's batch with NaNs, so the step's
+      grads go non-finite and the :class:`GradGuard` path runs;
+    - ``corrupt@K[:shard]``  — after step K, flip one byte in the named
+      (default: first) shard of the newest complete checkpoint;
+    - ``truncate@K[:shard]`` — same, but truncate the shard to half;
+    - ``iofail@K:N``  — the next N checkpoint-save attempts at/after
+      step K raise a transient ``OSError`` (exercises the manager's
+      retry/backoff path).
+
+    Source: the ``--faults`` flag, else the ``REPRO_FAULTS`` env var.
+    """
+
+    def __init__(self, actions=(), exit_code: int = 42):
+        self.actions: tuple[FaultAction, ...] = tuple(actions)
+        self.exit_code = exit_code
+        self._io_left = {i: a.count for i, a in enumerate(self.actions)
+                         if a.kind == "iofail"}
+
+    @classmethod
+    def parse(cls, spec: str | None = None, *,
+              env: str = "REPRO_FAULTS") -> "FaultPlan":
+        if spec is None:
+            spec = os.environ.get(env, "")
+        actions = []
+        for tok in filter(None, (t.strip() for t in spec.split(","))):
+            m = _FAULT_RE.fullmatch(tok)
+            if not m:
+                raise ValueError(
+                    f"unparseable fault token {tok!r}; expected "
+                    "kind@step[:arg] with kind in kill|stop|nan|corrupt|"
+                    "truncate|iofail")
+            kind, step, arg = m.group(1), int(m.group(2)), m.group(3)
+            count = 1
+            if kind == "iofail":
+                count, arg = (int(arg) if arg else 1), None
+            actions.append(FaultAction(kind, step, arg, count))
+        return cls(actions)
+
+    def with_kill(self, step: int) -> "FaultPlan":
+        """Legacy ``--simulate-failure K`` alias."""
+        return FaultPlan(self.actions + (FaultAction("kill", step),),
+                         self.exit_code)
+
+    # ---- hooks the driver calls --------------------------------------
+    def wants_nan(self, step: int) -> bool:
+        return any(a.kind == "nan" and a.step == step for a in self.actions)
+
+    def poison_batch(self, batch: Pytree, step: int) -> Pytree:
+        """NaN every float leaf of ``batch`` when a ``nan@step`` fires."""
+        if not self.wants_nan(step):
+            return batch
+        import jax
+        import jax.numpy as jnp
+
+        print(f"[resilience] fault plan: poisoning step {step}'s batch "
+              "with NaNs")
+        return jax.tree.map(
+            lambda x: jnp.full_like(x, jnp.nan)
+            if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact) else x,
+            batch)
+
+    def io_fault(self, step: int) -> None:
+        """Checkpoint-save hook (``CheckpointManager(io_fault=...)``):
+        raises a transient OSError while an ``iofail`` budget remains."""
+        for i, a in enumerate(self.actions):
+            if a.kind == "iofail" and step >= a.step \
+                    and self._io_left.get(i, 0) > 0:
+                self._io_left[i] -= 1
+                raise OSError(
+                    f"[faultplan] injected transient IO failure at step "
+                    f"{step} ({self._io_left[i]} more to come)")
+
+    def post_step(self, step: int, *, ckpt_dir: str | None = None,
+                  flush=None) -> str | None:
+        """Fire end-of-step actions; returns ``"stop"`` on a stop fault."""
+        stop = False
+        for a in self.actions:
+            if a.step != step:
+                continue
+            if a.kind in ("corrupt", "truncate"):
+                if flush is not None:
+                    flush()
+                if ckpt_dir:
+                    what = corrupt_checkpoint(
+                        ckpt_dir, shard=a.arg,
+                        truncate=(a.kind == "truncate"))
+                    print(f"[resilience] fault plan: {a.kind}d {what}")
+            elif a.kind == "kill":
+                if flush is not None:
+                    flush()
+                print(f"[resilience] fault plan: hard node failure after "
+                      f"step {step} (os._exit({self.exit_code}))")
+                sys.stdout.flush()
+                os._exit(self.exit_code)
+            elif a.kind == "stop":
+                # like kill, a stop "dies" only between checkpoint writes:
+                # flush the in-flight save so the drill's recovery point
+                # is deterministic
+                if flush is not None:
+                    flush()
+                stop = True
+        return "stop" if stop else None
+
+
+def corrupt_checkpoint(directory: str, *, step: int | None = None,
+                       shard: str | None = None,
+                       truncate: bool = False) -> str:
+    """Flip one byte in (or truncate) a shard of the newest complete
+    checkpoint — the mutation the SHA-256 verification must catch."""
+    from repro.checkpoint.store import complete_steps, read_manifest
+
+    if step is None:
+        steps = complete_steps(directory)
+        if not steps:
+            raise FileNotFoundError(
+                f"no complete checkpoint under {directory} to corrupt")
+        step = steps[-1]
+    man = read_manifest(directory, step)
+    names = man["shards"]
+    name = shard if shard is not None else names[0]
+    if not name.endswith(".npz"):
+        name += ".npz"
+    if name not in names:
+        raise ValueError(f"shard {name!r} not in step {step}'s manifest "
+                         f"({names})")
+    path = os.path.join(directory, f"step_{step:09d}", name)
+    if truncate:
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size // 2)
+        return f"{path} (truncated {size} -> {size // 2} bytes)"
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.seek(size // 2)
+        b = f.read(1)
+        f.seek(size // 2)
+        f.write(bytes([b[0] ^ 0xFF]))
+    return f"{path} (flipped byte {size // 2})"
+
+
+# ===========================================================================
+# Non-finite gradient guard
+# ===========================================================================
+
+def all_finite(*trees) -> Any:
+    """Scalar bool: every inexact leaf of every tree is finite (traceable)."""
+    import jax
+    import jax.numpy as jnp
+
+    ok = jnp.bool_(True)
+    for leaf in jax.tree.leaves(trees):
+        leaf = jnp.asarray(leaf)
+        if jnp.issubdtype(leaf.dtype, jnp.inexact):
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(leaf)))
+    return ok
+
+
+class GradGuard:
+    """Skip-and-log guard for non-finite updates.
+
+    The step function skips the optimizer update when loss/grads contain
+    non-finite values (``lax.cond`` on :func:`all_finite`); the host-side
+    guard counts *consecutive* skipped steps and aborts once they exceed
+    ``budget`` — a single poisoned batch is survivable, a divergence or
+    persistently bad data pipeline is not.
+    """
+
+    def __init__(self, budget: int = 3):
+        self.budget = budget
+        self.consecutive = 0
+        self.skipped_total = 0
+
+    def observe(self, finite: bool, step: int) -> bool:
+        """Record one step's finite flag; returns whether it applied."""
+        if finite:
+            self.consecutive = 0
+            return True
+        self.consecutive += 1
+        self.skipped_total += 1
+        print(f"[resilience] non-finite loss/grads at step {step}: update "
+              f"skipped ({self.consecutive}/{self.budget} consecutive)")
+        if self.consecutive > self.budget:
+            raise RuntimeError(
+                f"{self.consecutive} consecutive non-finite steps exceed "
+                f"the skip budget ({self.budget}): aborting — bad data "
+                "stream or diverged optimizer state")
+        return False
