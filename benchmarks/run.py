@@ -45,6 +45,11 @@ REGRESSION_RULES: tuple[tuple[str, frozenset, float], ...] = (
                         "b2_comm_share_pct", "b4_comm_share_pct",
                         "peak_gb_zero0", "peak_gb_zero1",
                         "peak_gb_zero2"}), 0.05),
+    # supervisor recovery MTTR (detect -> relaunched generation live):
+    # dominated by worker relaunch + jit compile wall-clock, so the band
+    # is deliberately very loose — it only catches order-of-magnitude
+    # recovery-path breakage, not runner jitter.
+    ("recovery", frozenset({"mttr_s"}), 2.00),
 )
 REGRESSION_TOL = 0.05   # the tight band (kept for --help/callers)
 
@@ -115,10 +120,13 @@ def main() -> None:
 
     from benchmarks import (partition_balance, comm_volume, hybrid_ablation,
                             throughput_model, zero_breakdown, moe_dispatch,
-                            auto_pipeline)
+                            auto_pipeline, recovery)
+    # recovery spawns worker subprocesses but stays in the --fast set:
+    # the nightly gate runs --fast --compare, and a gated metric that
+    # vanished from the new run counts as a regression.
     modules = [partition_balance, comm_volume, hybrid_ablation,
                throughput_model, zero_breakdown, moe_dispatch,
-               auto_pipeline]
+               auto_pipeline, recovery]
     if not args.fast:
         from benchmarks import schedule_synthesis, pipeline_cpu
         modules += [schedule_synthesis, pipeline_cpu]
@@ -133,7 +141,7 @@ def main() -> None:
     auto_pipeline_json: dict = {}
     for mod in modules:
         try:
-            if mod in (auto_pipeline, zero_breakdown):
+            if mod in (auto_pipeline, zero_breakdown, recovery):
                 rows = mod.run(json_sink=auto_pipeline_json)
             else:
                 rows = mod.run()

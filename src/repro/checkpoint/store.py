@@ -31,7 +31,17 @@ Fault-tolerance contract used by ``launch/train.py``:
   step; ``strict=False`` falls back past corrupt/partial steps,
 - the data pipeline is stateless given (step, host_id), so resume is
   exact; when the plan changed, ``runtime.resilience`` de-stacks the
-  saved state through the manifest's recorded plan spec.
+  saved state through the manifest's recorded plan spec,
+- with ``num_hosts > 1`` each worker process saves its own shard and then
+  rendezvouses on :func:`wait_step_complete` — the shard files themselves
+  are the barrier markers, so no host advances past a step commit until
+  every host's shard verifies (and host 0's GC can never observe a step
+  the cluster still considers in flight as the newest complete one).
+
+jax is imported lazily, inside the (de)serialization paths that need a
+pytree — verification, completeness scans, GC and ``wait_step_complete``
+are pure hashing/JSON, so the training supervisor can read checkpoint
+state without touching an accelerator runtime.
 """
 from __future__ import annotations
 
@@ -45,7 +55,6 @@ import time
 import warnings
 from typing import Any
 
-import jax
 import numpy as np
 
 Pytree = Any
@@ -116,6 +125,8 @@ def save_checkpoint(directory: str, step: int, tree: Pytree, *,
     called before any byte is written; raising ``OSError`` simulates a
     transient storage failure (the whole save is retryable).
     """
+    import jax
+
     path = _step_dir(directory, step)
     if io_fault is not None:
         io_fault(step)
@@ -237,12 +248,43 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def wait_step_complete(directory: str, step: int, *,
+                       timeout: float = 120.0, poll: float = 0.05) -> dict:
+    """Block until ``step`` passes full verification; the multi-host
+    barrier on step commit.
+
+    Each worker calls this right after writing its own shard: the shard
+    files (+ sidecars + manifest) double as the barrier markers, so no
+    host advances past a checkpoint step until every host's bytes are on
+    disk and hash-verified — the completeness protocol is exercised by
+    the actual separate writer processes, not simulated.  Returns the
+    verified manifest; raises :class:`CheckpointError` with
+    ``reason="commit-timeout"`` (carrying the last verification failure)
+    when some host never lands its shard — a dead host turns the barrier
+    into a detected failure instead of a silent wedge.
+    """
+    deadline = time.time() + timeout
+    while True:
+        try:
+            return verify_step(directory, step)
+        except CheckpointError as e:
+            if time.time() > deadline:
+                raise CheckpointError(
+                    f"step did not become complete within {timeout:.1f}s "
+                    f"(last failure: {e}) — a peer host likely died "
+                    "mid-commit", step=step,
+                    reason="commit-timeout") from e
+            time.sleep(poll)
+
+
 # ---------------------------------------------------------------------------
 # Restore
 # ---------------------------------------------------------------------------
 
 def _load_step(directory: str, step: int, man: dict, like: Pytree,
                shardings: Pytree | None, expect_shapes: bool) -> Pytree:
+    import jax
+
     path = _step_dir(directory, step)
     flat, treedef = jax.tree_util.tree_flatten(like)
     if len(flat) != man["num_leaves"]:
@@ -375,6 +417,8 @@ class CheckpointManager:
 
     def save_async(self, step: int, tree: Pytree,
                    extra: dict | None = None) -> None:
+        import jax
+
         self.wait()                           # one in flight at a time
         tree = jax.device_get(tree)           # snapshot before async write
         self._thread = threading.Thread(

@@ -534,3 +534,46 @@ def tune(
     # ties on modelled time break toward the least sharding machinery
     choices.sort(key=lambda c: (c.t_sample, c.zero_stage))
     return choices
+
+
+def shrink_plan(surviving_devices: int, *, dp: int, pp: int,
+                zero_stage: int = 0,
+                graph: BlockGraph | None = None,
+                hw: Hardware = TPU_V5E) -> tuple[int, int, int]:
+    """Re-plan ``(dp, pp, zero_stage)`` for a shrunken device pool — the
+    supervisor's re-tune entry point after a host loss.
+
+    With ``graph`` the full tuner re-runs on the surviving count
+    (``tune(graph, surviving_devices, ...)``) and the best feasible
+    choice wins — the paper's Eq. 14-17 machinery pricing the smaller
+    cluster.  Without it (the supervisor is a jax-free process manager
+    that does not hold the model graph) a deterministic structural
+    policy applies:
+
+    - keep the pipeline depth while it still fits (per-device weight
+      shard size is set by ``pp``, so preserving it preserves memory
+      feasibility) and shed data-parallel replicas first;
+    - once even ``dp = 1`` cannot fund the old depth, halve ``pp`` until
+      ``dp * pp <= surviving_devices`` (power-of-two descent mirrors the
+      tuner's factorization lattice);
+    - cap ``zero_stage`` by the new dp (sharding over one replica is a
+      no-op: stage drops to 0 when ``dp`` reaches 1).
+
+    Raises ``ValueError`` when no device survives.
+    """
+    if surviving_devices < 1:
+        raise ValueError(
+            f"cannot re-plan for {surviving_devices} surviving devices — "
+            "the cluster is gone")
+    if graph is not None:
+        choices = tune(graph, surviving_devices, hw=hw,
+                       zero_stages=tuple(sorted({0, zero_stage})))
+        if choices:
+            best = choices[0]
+            return best.G, best.P, best.zero_stage
+    new_pp = max(min(pp, surviving_devices), 1)
+    while surviving_devices // new_pp < 1:
+        new_pp = max(new_pp // 2, 1)
+    new_dp = max(min(dp, surviving_devices // new_pp), 1)
+    new_zero = zero_stage if new_dp > 1 else 0
+    return new_dp, new_pp, new_zero

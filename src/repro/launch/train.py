@@ -27,6 +27,26 @@ tests/helpers/resilience_drill.py):
   (runtime.resilience) — a P=4 run killed mid-epoch resumes as
   P=2 x dp=2 ZeRO-2 with an identical loss trajectory.
 
+Multi-host worker mode (how ``launch/supervisor.py`` runs this driver —
+one subprocess per host):
+
+- ``--host-id h --num-hosts H`` makes this process host ``h`` of ``H``:
+  it writes ONLY its own checkpoint shard (``shard_{h:05d}.npz``; host 0
+  owns the manifest and GC) and blocks on ``wait_step_complete`` at each
+  checkpoint step — the commit barrier that keeps any host from racing
+  past a step its peers have not durably finished.  Startup rendezvous
+  goes through a ``FileBarrier`` under the heartbeat dir.
+- ``--heartbeat-dir D`` emits an atomic per-step heartbeat (host, step,
+  phase, loss, grad-norm, wall-clock, generation) the supervisor's
+  watchdog/straggler detectors consume.
+- ``--escalation rollback`` turns an exhausted GradGuard skip budget
+  into exit code ``EXIT_ESCALATE`` (43) instead of an abort, asking the
+  supervisor to roll the cluster back to the last verified checkpoint.
+- the multi-host fault verbs (``hostdown@K:h``, ``hang@K[:h]``,
+  ``slow@K:factor[:h]``) are filtered per host via
+  ``FaultPlan.for_host`` — malformed specs (unknown host, duplicate
+  verb, negative step) fail at startup, not mid-training.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.train --arch uvit --steps 200
     PYTHONPATH=src python -m repro.launch.train --arch uvit --pipeline \
@@ -67,9 +87,31 @@ def _parse_args(argv=None):
     ap.add_argument("--microbatches", type=int, default=4)
     ap.add_argument("--faults", default=None,
                     help="fault plan, e.g. 'kill@60,corrupt@80:shard_00000,"
-                         "nan@10,iofail@20:2' (default: $REPRO_FAULTS)")
+                         "nan@10,iofail@20:2,hostdown@30:1,hang@40,"
+                         "slow@50:2.5:1' (default: $REPRO_FAULTS)")
     ap.add_argument("--nan-skip-budget", type=int, default=3,
-                    help="max consecutive non-finite steps before abort")
+                    help="max consecutive non-finite steps before the "
+                         "escalation policy fires")
+    ap.add_argument("--escalation", default="abort",
+                    choices=("abort", "rollback"),
+                    help="exhausted GradGuard budget: 'abort' raises "
+                         "(standalone default); 'rollback' exits "
+                         "EXIT_ESCALATE=43 so a supervisor rolls back to "
+                         "the last verified checkpoint")
+    ap.add_argument("--host-id", type=int, default=0,
+                    help="this process's host rank (multi-host worker "
+                         "mode; writes shard_<host-id>.npz only)")
+    ap.add_argument("--num-hosts", type=int, default=1,
+                    help="total host processes cooperating on the run")
+    ap.add_argument("--heartbeat-dir", default=None,
+                    help="emit per-step heartbeats (+ host the startup "
+                         "barrier) here for the training supervisor")
+    ap.add_argument("--gen", type=int, default=0,
+                    help="supervisor generation tag stamped into "
+                         "heartbeats (stale-file filtering)")
+    ap.add_argument("--commit-timeout", type=float, default=60.0,
+                    help="multi-host barrier timeout (s) on checkpoint "
+                         "step commit")
     ap.add_argument("--simulate-failure", type=int, default=0,
                     help="legacy alias for --faults kill@K")
     ap.add_argument("--out-json", default=None,
@@ -77,6 +119,15 @@ def _parse_args(argv=None):
                          "metadata here on exit")
     ap.add_argument("--log-every", type=int, default=10)
     return ap.parse_args(argv)
+
+
+def _dump_losses(path: str, losses: dict, start: int) -> None:
+    doc = {"losses": {str(k): v for k, v in losses.items()},
+           "start": start, "partial": True}
+    tmp = path + f".tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f)
+    os.replace(tmp, path)
 
 
 @dataclasses.dataclass
@@ -96,12 +147,25 @@ def main(argv=None):
 
 
 def run(args) -> TrainResult:
-    from repro.runtime.resilience import FaultPlan, GradGuard, \
-        restore_training_state
+    from repro.runtime.resilience import (EXIT_ESCALATE, FaultPlan,
+                                          GradGuard, GradGuardEscalation,
+                                          Heartbeat, restore_training_state,
+                                          write_heartbeat)
 
     faults = FaultPlan.parse(args.faults)
     if args.simulate_failure:
         faults = faults.with_kill(args.simulate_failure)
+    # validates host-scoped tokens against the real host count and keeps
+    # this host's share — malformed specs die HERE, not mid-training
+    faults = faults.for_host(args.host_id, args.num_hosts)
+
+    def beat(step, phase, loss=None, gnorm=None, step_s=None):
+        if args.heartbeat_dir:
+            write_heartbeat(args.heartbeat_dir, Heartbeat(
+                args.host_id, step, phase, loss=loss, grad_norm=gnorm,
+                step_s=step_s, gen=args.gen))
+
+    beat(-1, "init")
     if args.pipeline and "XLA_FLAGS" not in os.environ:
         need = max(args.devices,
                    args.dp * (args.pp or max(args.devices // args.dp, 1)))
@@ -126,9 +190,22 @@ def run(args) -> TrainResult:
         compiled = None
 
     mgr = CheckpointManager(
-        args.ckpt_dir, keep=args.keep,
+        args.ckpt_dir, keep=args.keep, host_id=args.host_id,
+        num_hosts=args.num_hosts,
         plan=compiled.state_spec() if compiled is not None else None,
         io_fault=faults.io_fault) if args.ckpt_dir else None
+
+    multi_host = args.num_hosts > 1
+    if multi_host:
+        from repro.launch.mesh import FileBarrier, HostTopology
+        topo = HostTopology(args.num_hosts,
+                            max(args.devices // args.num_hosts, 1))
+        print("[train] " + topo.describe().replace("\n", "\n[train] "))
+        if args.heartbeat_dir:
+            barrier = FileBarrier(
+                os.path.join(args.heartbeat_dir, "barrier"),
+                host_id=args.host_id, num_hosts=args.num_hosts)
+            barrier.wait(f"start.g{args.gen}", timeout=args.commit_timeout)
 
     start, resumed = 0, None
     if args.resume and args.ckpt_dir \
@@ -151,6 +228,7 @@ def run(args) -> TrainResult:
     losses: dict[int, float] = {}
 
     def finish(loss) -> TrainResult:
+        beat(args.steps, "done")
         logical = None
         if compiled is not None:
             logical = jax.device_get(compiled.merge_params(*params))
@@ -175,33 +253,101 @@ def run(args) -> TrainResult:
         return finish(None)
 
     import time
+
+    from repro.checkpoint import CheckpointError, wait_step_complete
+
+    def save_at(step_next):
+        """Single-host: async save.  Multi-host: blocking shard write +
+        rendezvous on step completeness (the commit barrier)."""
+        state = {"params": params, "opt": opt_state}
+        # a checkpoint save IS progress — tell the watchdog so a slow
+        # commit (device_get + hashing on a busy box) is not mistaken
+        # for a stalled step loop
+        beat(step_next, "ckpt")
+        if not multi_host:
+            mgr.save_async(step_next, state)
+            return
+        if mgr.save(step_next, state) is None:
+            return                  # degraded save: no barrier to meet
+        try:
+            wait_step_complete(args.ckpt_dir, step_next,
+                               timeout=args.commit_timeout)
+        except CheckpointError as e:
+            # degrade-and-warn, same contract as single-host iofail: the
+            # supervisor's watchdog owns declaring a peer dead
+            print(f"[train] WARNING: commit barrier at step {step_next} "
+                  f"did not close: {e}")
+
     t0 = time.time()
     loss = None
+    # iteration boundary, reset at the END of each loop body: the step
+    # period it measures spans compute + host-side bookkeeping, which is
+    # what a straggler's peers actually experience (the device-blocking
+    # slice alone can be a small fraction of the wall period)
+    t_step = time.time()
     for step in range(start, args.steps):
+        if faults.hang_before(step):
+            # unreachable in practice (hang sleeps ~forever and the
+            # supervisor kills us) — guard for mocked sleeps in tests
+            print(f"[train] fault plan: woke from hang at step {step}")
+            t_step = time.time()
         batch = faults.poison_batch(pack(loader.get(step)), step)
         rng = jax.random.fold_in(key, step)
         lr = cosine_schedule(step, base_lr=args.lr, warmup=20,
                              total=args.steps)
-        params, opt_state, loss, finite = step_fn(params, opt_state, batch,
-                                                  rng, lr)
-        guard.observe(bool(finite), step)
+        params, opt_state, loss, finite, gnorm = step_fn(
+            params, opt_state, batch, rng, lr)
+        try:
+            guard.observe(bool(finite), step)
+        except GradGuardEscalation as e:
+            if args.escalation == "rollback":
+                print(f"[train] {e}; requesting supervisor rollback")
+                if mgr:
+                    mgr.wait()
+                beat(step, "done")
+                raise SystemExit(EXIT_ESCALATE) from None
+            raise
         losses[step] = float(loss)
+        if args.out_json:
+            # incremental (atomic) trajectory dump: a worker killed or
+            # torn down mid-run still leaves its losses for the
+            # supervisor to merge
+            _dump_losses(args.out_json, losses, start)
+        slow = faults.slow_factor(step)
+        if slow > 1.0:     # straggle: stretch this step by the factor
+            time.sleep(min((time.time() - t_step) * (slow - 1.0), 5.0))
+        # the measured duration rides the heartbeat: a supervisor starved
+        # of poll slots still gets exact per-step samples for straggler
+        # detection (time-derived deltas would average over jit warmup)
+        beat(step, "train", loss=float(loss), gnorm=float(gnorm),
+             step_s=time.time() - t_step)
         if step % args.log_every == 0 or step == args.steps - 1:
             sps = (step - start + 1) * args.global_batch / (time.time() - t0)
             print(f"[train] step {step:5d} loss {float(loss):.4f} "
                   f"lr {float(lr):.2e} ({sps:.1f} samples/s)")
         if mgr and (step + 1) % args.ckpt_every == 0:
-            mgr.save_async(step + 1, {"params": params, "opt": opt_state})
+            save_at(step + 1)
         if faults.post_step(step + 1, ckpt_dir=args.ckpt_dir,
                             flush=mgr.wait if mgr else None) == "stop":
             print(f"[train] fault plan: abrupt stop after step {step} "
                   "(no final save)")
             return finish(loss)
+        t_step = time.time()   # boundary: commit barrier waits excluded
     if mgr:
-        mgr.save_async(args.steps, {"params": params, "opt": opt_state})
+        save_at(args.steps)
         mgr.wait()
     print(f"[train] done: final loss {float(loss):.4f}")
     return finish(loss)
+
+
+def _grad_norm(grads):
+    """Global L2 norm of a gradient pytree (reported in heartbeats so the
+    supervisor can flag divergence before the GradGuard trips)."""
+    import jax
+    import jax.numpy as jnp
+    leaves = jax.tree_util.tree_leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
 
 
 def _build_smoke_trainer(args, key, opt_cfg):
@@ -245,11 +391,12 @@ def _build_smoke_trainer(args, key, opt_cfg):
     def step_fn(params, opt_state, batch, rng, lr):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
         finite = all_finite(loss, grads)
+        gnorm = _grad_norm(grads)
         new_p, new_o = adamw_update(params, grads, opt_state, opt_cfg,
                                     lr=lr)
         params, opt_state = jax.lax.cond(
             finite, lambda: (new_p, new_o), lambda: (params, opt_state))
-        return params, opt_state, loss, finite
+        return params, opt_state, loss, finite, gnorm
 
     return params, opt_state, step_fn, loader, pack
 
@@ -302,6 +449,14 @@ def _build_pipeline_trainer(args, key, opt_cfg):
                             n_enc=4, n_mid=2, n_dec=4)
         graph = skipvit_pipeline_graph(cfg, batch=args.global_batch // M)
         fns = skipvit_model_fns(cfg)
+    elif args.arch == "uvit-nano":
+        # smallest arch that still pipelines: keeps the multi-process
+        # supervisor drill inside a CI time budget on a 1-core box
+        cfg = UViTConfig("uvit-nano", img_size=8, in_ch=4, patch=4,
+                         d_model=32, n_layers=8, n_heads=2, d_ff=64,
+                         n_classes=10)
+        graph = uvit_pipeline_graph(cfg, batch=args.global_batch // M)
+        fns = diffusion_model_fns(cfg, "uvit")
     else:
         cfg = UViTConfig("uvit-pp", img_size=8, in_ch=4, patch=2,
                          d_model=64, n_layers=8, n_heads=4, d_ff=128,
@@ -332,11 +487,12 @@ def _build_pipeline_trainer(args, key, opt_cfg):
     def step_fn(params, opt_state, batch, rng, lr):
         loss, grads = jax.value_and_grad(loss_of)(params, batch, rng)
         finite = all_finite(loss, grads)
+        gnorm = _grad_norm(grads)
         new_p, new_o = adamw_update(params, grads, opt_state, opt_cfg,
                                     lr=lr)
         params, opt_state = jax.lax.cond(
             finite, lambda: (new_p, new_o), lambda: (params, opt_state))
-        return params, opt_state, loss, finite
+        return params, opt_state, loss, finite, gnorm
 
     return params, opt_state, step_fn, loader, pack, compiled
 

@@ -29,10 +29,20 @@ the ``auto_pipeline`` path:
 
 3. **Fault injection + a NaN guard.**  :class:`FaultPlan` parses an
    env/flag-driven fault script (``kill@K``, ``stop@K``, ``nan@K``,
-   ``corrupt@K[:shard]``, ``truncate@K[:shard]``, ``iofail@K:N``) that
-   the training driver (``launch/train.py``) consults each step, and
-   :class:`GradGuard` is the skip-and-log guard for non-finite
-   grads with a bounded consecutive-skip budget.
+   ``corrupt@K[:shard]``, ``truncate@K[:shard]``, ``iofail@K:N``, plus
+   the multi-host verbs ``hostdown@K:h``, ``hang@K[:h]`` and
+   ``slow@K:factor[:h]``) that the training driver (``launch/train.py``)
+   consults each step, and :class:`GradGuard` is the skip-and-log guard
+   for non-finite grads with a bounded consecutive-skip budget and a
+   configurable escalation (abort, or roll back to last-good).
+
+4. **Supervisor detection primitives.**  Workers emit file-based
+   :class:`Heartbeat` records (:func:`write_heartbeat` /
+   :func:`read_heartbeats`); the training supervisor
+   (``launch/supervisor.py``) monitors them with a :class:`Watchdog`
+   (stalled progress -> suspect -> hung) and a :class:`StragglerDetector`
+   (per-step timing percentiles flag hosts persistently slower than the
+   cluster median).  These are pure host-side primitives — no jax.
 """
 from __future__ import annotations
 
@@ -42,6 +52,7 @@ import json
 import os
 import re
 import sys
+import time
 from typing import Any
 
 import numpy as np
@@ -231,16 +242,48 @@ def restore_training_state(directory: str, plan, like_state: dict, *,
 # Fault injection
 # ===========================================================================
 
-_FAULT_RE = re.compile(
-    r"(kill|stop|nan|corrupt|truncate|iofail)@(\d+)(?::([\w.\-]+))?")
+#: seconds a ``hang@K`` fault sleeps — long enough that any reasonable
+#: watchdog declares the host hung first (SIGTERM interrupts the sleep).
+HANG_SECONDS = 3600.0
+
+#: process exit codes the supervisor branches on.
+EXIT_KILLED = 42      # kill@K / hostdown@K:h — a node died
+EXIT_ESCALATE = 43    # GradGuard skip budget exhausted, rollback requested
+
+_FAULT_KINDS = ("kill", "stop", "nan", "corrupt", "truncate", "iofail",
+                "hostdown", "hang", "slow")
+_FAULT_RE = re.compile(r"([a-z]+)@(-?\d+)(?::([\w.\-:]+))?")
+
+
+class FaultPlanError(ValueError):
+    """Structured fault-spec failure naming the offending token.
+
+    Raised by :meth:`FaultPlan.parse` / :meth:`FaultPlan.for_host` so a
+    malformed ``--faults`` spec fails at startup with the bad token in
+    hand, instead of deep inside the training loop.  ``token``/``reason``
+    survive as fields; subclasses ``ValueError`` for legacy callers.
+    """
+
+    def __init__(self, message: str, *, token: str | None = None,
+                 reason: str | None = None):
+        self.token = token
+        self.reason = reason
+        ctx = ", ".join(f"{k}={v!r}" for k, v in
+                        (("token", token), ("reason", reason))
+                        if v is not None)
+        super().__init__(f"[faultplan{'; ' + ctx if ctx else ''}] {message}")
 
 
 @dataclasses.dataclass(frozen=True)
 class FaultAction:
     kind: str            # kill | stop | nan | corrupt | truncate | iofail
+    #                      | hostdown | hang | slow
     step: int
     arg: str | None = None   # corrupt/truncate: shard name
     count: int = 1           # iofail: number of injected IO failures
+    host: int | None = None  # hostdown/hang/slow: target host rank
+    factor: float = 1.0      # slow: per-step slowdown factor
+    token: str = ""          # the spec token this action parsed from
 
 
 class FaultPlan:
@@ -260,12 +303,26 @@ class FaultPlan:
     - ``truncate@K[:shard]`` — same, but truncate the shard to half;
     - ``iofail@K:N``  — the next N checkpoint-save attempts at/after
       step K raise a transient ``OSError`` (exercises the manager's
-      retry/backoff path).
+      retry/backoff path);
+    - ``hostdown@K:h`` — host ``h`` hard-exits after step K (the
+      multi-host ``kill``; other hosts keep running so the supervisor's
+      watchdog/exit monitoring must notice);
+    - ``hang@K[:h]``   — host ``h`` (default 0) stalls before step K for
+      :data:`HANG_SECONDS` — a hung collective: the process stays alive
+      but its heartbeat step stops advancing;
+    - ``slow@K:factor[:h]`` — from step K on, host ``h`` (default 0)
+      runs each step ``factor``x slower (a straggler, for the
+      :class:`StragglerDetector`).
+
+    Malformed specs raise :class:`FaultPlanError` naming the offending
+    token: unknown kinds, negative steps, duplicate ``kind@step`` pairs,
+    and (once the host count is known — :meth:`for_host`) host indices
+    outside ``[0, num_hosts)``.
 
     Source: the ``--faults`` flag, else the ``REPRO_FAULTS`` env var.
     """
 
-    def __init__(self, actions=(), exit_code: int = 42):
+    def __init__(self, actions=(), exit_code: int = EXIT_KILLED):
         self.actions: tuple[FaultAction, ...] = tuple(actions)
         self.exit_code = exit_code
         self._io_left = {i: a.count for i, a in enumerate(self.actions)
@@ -276,20 +333,105 @@ class FaultPlan:
               env: str = "REPRO_FAULTS") -> "FaultPlan":
         if spec is None:
             spec = os.environ.get(env, "")
-        actions = []
+        actions: list[FaultAction] = []
+        seen: set[tuple[str, int]] = set()
         for tok in filter(None, (t.strip() for t in spec.split(","))):
             m = _FAULT_RE.fullmatch(tok)
             if not m:
-                raise ValueError(
+                raise FaultPlanError(
                     f"unparseable fault token {tok!r}; expected "
-                    "kind@step[:arg] with kind in kill|stop|nan|corrupt|"
-                    "truncate|iofail")
+                    f"kind@step[:arg] with kind in {'|'.join(_FAULT_KINDS)}",
+                    token=tok, reason="syntax")
             kind, step, arg = m.group(1), int(m.group(2)), m.group(3)
-            count = 1
-            if kind == "iofail":
-                count, arg = (int(arg) if arg else 1), None
-            actions.append(FaultAction(kind, step, arg, count))
+            if kind not in _FAULT_KINDS:
+                raise FaultPlanError(
+                    f"unparseable fault token {tok!r}: unknown kind "
+                    f"{kind!r} (known: {'|'.join(_FAULT_KINDS)})",
+                    token=tok, reason="unknown-kind")
+            if step < 0:
+                raise FaultPlanError(
+                    f"negative step in token {tok!r}: faults fire at "
+                    "step indices >= 0", token=tok, reason="negative-step")
+            if (kind, step) in seen:
+                raise FaultPlanError(
+                    f"duplicate {kind}@{step} (token {tok!r}): each verb "
+                    "may fire at most once per step",
+                    token=tok, reason="duplicate")
+            seen.add((kind, step))
+            actions.append(cls._parse_action(kind, step, arg, tok))
         return cls(actions)
+
+    @staticmethod
+    def _parse_action(kind: str, step: int, arg: str | None,
+                      tok: str) -> FaultAction:
+        def bad(msg, reason="bad-arg"):
+            return FaultPlanError(f"{msg} (token {tok!r})", token=tok,
+                                  reason=reason)
+
+        count, host, factor = 1, None, 1.0
+        if kind in ("kill", "stop", "nan"):
+            if arg is not None:
+                raise bad(f"{kind}@K takes no argument")
+        elif kind == "iofail":
+            try:
+                count = int(arg) if arg else 1
+            except ValueError:
+                raise bad("iofail@K:N needs an integer failure count, "
+                          f"got {arg!r}") from None
+            if count < 1:
+                raise bad(f"iofail@K:N needs N >= 1, got {count}")
+            arg = None
+        elif kind == "hostdown":
+            if arg is None:
+                raise bad("hostdown@K:h needs a host index",
+                          reason="missing-host")
+            try:
+                host = int(arg)
+            except ValueError:
+                raise bad("hostdown@K:h needs an integer host index, "
+                          f"got {arg!r}") from None
+            arg = None
+        elif kind == "hang":
+            try:
+                host = int(arg) if arg is not None else 0
+            except ValueError:
+                raise bad("hang@K[:h] needs an integer host index, "
+                          f"got {arg!r}") from None
+            arg = None
+        elif kind == "slow":
+            if arg is None:
+                raise bad("slow@K:factor[:h] needs a slowdown factor",
+                          reason="missing-factor")
+            head, _, tail = arg.partition(":")
+            try:
+                factor = float(head)
+                host = int(tail) if tail else 0
+            except ValueError:
+                raise bad("slow@K:factor[:h] needs a float factor and an "
+                          f"optional integer host, got {arg!r}") from None
+            if factor < 1.0:
+                raise bad(f"slow factor must be >= 1.0, got {factor}")
+            arg = None
+        return FaultAction(kind, step, arg, count, host, factor, tok)
+
+    def for_host(self, host_id: int, num_hosts: int) -> "FaultPlan":
+        """The sub-plan host ``host_id`` of ``num_hosts`` executes.
+
+        Validates every host-scoped token against the real host count
+        (:class:`FaultPlanError` on out-of-range indices — the "unknown
+        host" class of malformed spec that previously surfaced as a
+        silent no-op) and keeps host-less actions (they apply to every
+        host) plus the host-scoped ones targeting ``host_id``.
+        """
+        for a in self.actions:
+            if a.host is not None and not (0 <= a.host < num_hosts):
+                raise FaultPlanError(
+                    f"host index {a.host} out of range for num_hosts="
+                    f"{num_hosts} (token {a.token!r})", token=a.token,
+                    reason="unknown-host")
+        keep = tuple(a for a in self.actions
+                     if a.host is None or a.host == host_id)
+        return FaultPlan(keep, self.exit_code)
 
     def with_kill(self, step: int) -> "FaultPlan":
         """Legacy ``--simulate-failure K`` alias."""
@@ -299,6 +441,28 @@ class FaultPlan:
     # ---- hooks the driver calls --------------------------------------
     def wants_nan(self, step: int) -> bool:
         return any(a.kind == "nan" and a.step == step for a in self.actions)
+
+    def hang_before(self, step: int, *, sleep=time.sleep,
+                    seconds: float = HANG_SECONDS) -> bool:
+        """``hang@K`` hook, called at the TOP of step K (before compute):
+        sleeps ``seconds`` so the process stays alive while its heartbeat
+        step stops advancing — the hung-collective signature the
+        supervisor's watchdog must detect.  Returns whether it fired."""
+        if not any(a.kind == "hang" and a.step == step
+                   for a in self.actions):
+            return False
+        print(f"[resilience] fault plan: hanging before step {step} "
+              f"(sleep {seconds:.0f}s — simulated stuck collective)")
+        sys.stdout.flush()
+        sleep(seconds)
+        return True
+
+    def slow_factor(self, step: int) -> float:
+        """Largest active ``slow@K:factor`` slowdown at ``step`` (1.0 =
+        none).  The driver sleeps ``(factor - 1) * step_time`` after each
+        step so the host becomes a measurable straggler."""
+        return max((a.factor for a in self.actions
+                    if a.kind == "slow" and step >= a.step), default=1.0)
 
     def poison_batch(self, batch: Pytree, step: int) -> Pytree:
         """NaN every float leaf of ``batch`` when a ``nan@step`` fires."""
@@ -340,10 +504,12 @@ class FaultPlan:
                         ckpt_dir, shard=a.arg,
                         truncate=(a.kind == "truncate"))
                     print(f"[resilience] fault plan: {a.kind}d {what}")
-            elif a.kind == "kill":
+            elif a.kind in ("kill", "hostdown"):
                 if flush is not None:
                     flush()
-                print(f"[resilience] fault plan: hard node failure after "
+                who = (f"host {a.host} down" if a.kind == "hostdown"
+                       else "hard node failure")
+                print(f"[resilience] fault plan: {who} after "
                       f"step {step} (os._exit({self.exit_code}))")
                 sys.stdout.flush()
                 os._exit(self.exit_code)
@@ -410,14 +576,34 @@ def all_finite(*trees) -> Any:
     return ok
 
 
+class GradGuardEscalation(RuntimeError):
+    """Raised when :class:`GradGuard`'s consecutive-skip budget is
+    exhausted.  Subclasses ``RuntimeError`` so legacy callers that
+    treated the exhausted budget as an abort keep working; drivers that
+    opt into escalation (``launch/train.py --escalation rollback``)
+    catch it and exit :data:`EXIT_ESCALATE`, which the supervisor turns
+    into a rollback to the last verified-complete checkpoint."""
+
+    def __init__(self, message: str, *, step: int, consecutive: int,
+                 budget: int):
+        self.step = step
+        self.consecutive = consecutive
+        self.budget = budget
+        super().__init__(message)
+
+
 class GradGuard:
     """Skip-and-log guard for non-finite updates.
 
     The step function skips the optimizer update when loss/grads contain
     non-finite values (``lax.cond`` on :func:`all_finite`); the host-side
-    guard counts *consecutive* skipped steps and aborts once they exceed
-    ``budget`` — a single poisoned batch is survivable, a divergence or
-    persistently bad data pipeline is not.
+    guard counts *consecutive* skipped steps and raises
+    :class:`GradGuardEscalation` once they exceed ``budget`` — a single
+    poisoned batch is survivable, a divergence or persistently bad data
+    pipeline is not.  What happens next is the driver's escalation
+    policy: abort (the default, and all the standalone driver can do) or
+    roll back to the last-good checkpoint under a supervisor (the state
+    that produced the NaN streak is *discarded*, not just frozen).
     """
 
     def __init__(self, budget: int = 3):
@@ -435,8 +621,225 @@ class GradGuard:
         print(f"[resilience] non-finite loss/grads at step {step}: update "
               f"skipped ({self.consecutive}/{self.budget} consecutive)")
         if self.consecutive > self.budget:
-            raise RuntimeError(
+            raise GradGuardEscalation(
                 f"{self.consecutive} consecutive non-finite steps exceed "
                 f"the skip budget ({self.budget}): aborting — bad data "
-                "stream or diverged optimizer state")
+                "stream or diverged optimizer state",
+                step=step, consecutive=self.consecutive,
+                budget=self.budget)
         return False
+
+
+# ===========================================================================
+# Supervisor detection primitives: heartbeats, watchdog, stragglers
+# ===========================================================================
+
+@dataclasses.dataclass
+class Heartbeat:
+    """One worker's liveness/progress record, written atomically per step.
+
+    ``step`` is the last COMPLETED step (-1 before the first), ``phase``
+    one of ``init`` (process up, building/compiling), ``train`` (step
+    loop running), ``ckpt`` (blocking checkpoint commit in progress),
+    ``done`` (clean exit).  ``gen`` is the supervisor
+    generation that launched the worker, so a monitor never confuses a
+    stale file from a torn-down generation with a live worker.
+    """
+    host_id: int
+    step: int
+    phase: str = "init"             # init | train | ckpt | done
+    t: float = 0.0                  # wall-clock at write (time.time())
+    loss: float | None = None
+    grad_norm: float | None = None
+    step_s: float | None = None     # worker-measured duration of `step`
+    pid: int | None = None
+    gen: int = 0
+
+
+def _heartbeat_path(directory: str, host_id: int) -> str:
+    return os.path.join(directory, f"hb_h{host_id:05d}.json")
+
+
+def write_heartbeat(directory: str, hb: Heartbeat) -> None:
+    """Atomic (tmp + ``os.replace``) write — monitors never read a torn
+    record.  Fills ``t``/``pid`` when unset."""
+    os.makedirs(directory, exist_ok=True)
+    if not hb.t:
+        hb.t = time.time()
+    if hb.pid is None:
+        hb.pid = os.getpid()
+    path = _heartbeat_path(directory, hb.host_id)
+    tmp = os.path.join(directory, f".hb_h{hb.host_id:05d}.tmp{os.getpid()}")
+    with open(tmp, "w") as f:
+        json.dump(dataclasses.asdict(hb), f)
+    os.replace(tmp, path)
+
+
+def read_heartbeats(directory: str, *, gen: int | None = None
+                    ) -> dict[int, Heartbeat]:
+    """All readable heartbeats under ``directory`` keyed by host id.
+
+    Unreadable/torn files are skipped (the next poll sees the replaced
+    record); ``gen`` filters out stale records from earlier supervisor
+    generations."""
+    out: dict[int, Heartbeat] = {}
+    if not os.path.isdir(directory):
+        return out
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"hb_h(\d+)\.json", name)
+        if not m:
+            continue
+        try:
+            with open(os.path.join(directory, name)) as f:
+                doc = json.load(f)
+            hb = Heartbeat(**doc)
+        except (OSError, json.JSONDecodeError, TypeError):
+            continue
+        if gen is not None and hb.gen != gen:
+            continue
+        out[hb.host_id] = hb
+    return out
+
+
+class Watchdog:
+    """Progress watchdog over per-host heartbeats.
+
+    A host is judged on the age of its last *progress* (a heartbeat whose
+    ``(phase, step)`` advanced), not of its last write — a hung collective
+    leaves the process alive (and able to write) but its step frozen:
+
+    - age > deadline                 -> ``suspect`` (a missed heartbeat);
+    - age > deadline * miss_budget   -> ``hung`` (persistent stall).
+
+    The deadline is ``startup_timeout`` until the host advances *past*
+    its first ``train`` heartbeat and the tight ``stall_timeout``
+    afterwards: jit compiles arbitrarily long before step 0, and the
+    step in flight right after the first beat still carries residual
+    warmup (lazy secondary compiles, persistent-cache serialisation), so
+    both are judged leniently.  Hosts expected but never seen at all are
+    judged from the watchdog's construction time against
+    ``startup_timeout``.  Poll-rate independent: thresholds are wall
+    -clock ages, not poll counts.
+    """
+
+    def __init__(self, hosts, *, stall_timeout: float = 10.0,
+                 startup_timeout: float = 300.0, miss_budget: int = 3,
+                 now: float | None = None):
+        self.hosts = tuple(hosts)
+        self.stall_timeout = float(stall_timeout)
+        self.startup_timeout = float(startup_timeout)
+        self.miss_budget = int(miss_budget)
+        t0 = time.time() if now is None else now
+        self._last: dict[int, tuple[str, int, float]] = {
+            h: ("unseen", -2, t0) for h in self.hosts}
+        self._first_train: dict[int, int] = {}
+
+    def observe(self, heartbeats: dict[int, "Heartbeat"],
+                now: float | None = None) -> None:
+        now = time.time() if now is None else now
+        for h, hb in heartbeats.items():
+            if h not in self._last:
+                continue
+            if hb.phase == "train":
+                self._first_train.setdefault(h, hb.step)
+            phase, step, _ = self._last[h]
+            if (hb.phase, hb.step) != (phase, step):
+                self._last[h] = (hb.phase, hb.step, now)
+
+    def _deadline(self, host: int) -> float:
+        phase, step, _ = self._last[host]
+        if phase in ("ckpt", "done"):
+            return self.stall_timeout
+        if phase == "train" and step != self._first_train.get(host):
+            return self.stall_timeout
+        # init / unseen, or sitting on the first train step (the next
+        # step still pays jit warmup): lenient
+        return self.startup_timeout
+
+    def age(self, host: int, now: float | None = None) -> float:
+        now = time.time() if now is None else now
+        return now - self._last[host][2]
+
+    def progress(self, host: int) -> tuple[str, int]:
+        """Last observed (phase, step) progress point for ``host`` —
+        what a supervisor uses to tell a ROOT hung host (least progress:
+        it wedged the ring) from victims blocked on it further along."""
+        phase, step, _ = self._last[host]
+        return phase, step
+
+    def check(self, now: float | None = None) -> dict[int, str]:
+        """Per-host verdict: ``ok`` | ``suspect`` | ``hung`` (``done``
+        once a clean final heartbeat landed)."""
+        now = time.time() if now is None else now
+        out: dict[int, str] = {}
+        for h in self.hosts:
+            phase, _, _ = self._last[h]
+            if phase == "done":
+                out[h] = "done"
+                continue
+            age, deadline = self.age(h, now), self._deadline(h)
+            if age > deadline * self.miss_budget:
+                out[h] = "hung"
+            elif age > deadline:
+                out[h] = "suspect"
+            else:
+                out[h] = "ok"
+        return out
+
+
+class StragglerDetector:
+    """Flag hosts persistently slower than the cluster median step time.
+
+    Duration samples prefer the worker-measured ``Heartbeat.step_s`` (a
+    monitor starved of poll slots on a contended box observes beats in
+    multi-step jumps — time-derived averages would wash a slowdown out
+    against jit warmup), falling back to successive ``(step, t)`` pair
+    deltas for writers that don't report it.  Each host keeps a rolling
+    window and its median (p50) duration is compared against the median
+    of the *other* hosts' medians: ratio >= ``factor`` sustained over
+    ``patience`` completed steps flags the host (streaks are counted in
+    steps advanced, not in observations, for the same sparse-poll
+    reason).  Needs >= 2 hosts (a cluster of one has no peers to
+    straggle behind).
+    """
+
+    def __init__(self, *, factor: float = 2.0, patience: int = 3,
+                 window: int = 16):
+        self.factor = float(factor)
+        self.patience = int(patience)
+        self.window = int(window)
+        self._prev: dict[int, tuple[int, float]] = {}   # host -> (step, t)
+        self._durs: dict[int, list[float]] = {}
+        self._streak: dict[int, int] = {}
+
+    def observe(self, heartbeats: dict[int, "Heartbeat"]) -> None:
+        for h, hb in heartbeats.items():
+            if hb.phase != "train" or hb.step < 0:
+                continue
+            prev = self._prev.get(h)
+            self._prev[h] = (hb.step, hb.t)
+            if prev is None or hb.step <= prev[0]:
+                continue
+            advanced = hb.step - prev[0]
+            dur = (hb.step_s if hb.step_s is not None
+                   else (hb.t - prev[1]) / advanced)
+            durs = self._durs.setdefault(h, [])
+            durs.append(dur)
+            del durs[:-self.window]
+            ratio = self._ratio(h)
+            self._streak[h] = (self._streak.get(h, 0) + advanced
+                               if ratio >= self.factor else 0)
+
+    def _ratio(self, host: int) -> float:
+        mine = self._durs.get(host)
+        peers = [float(np.median(d)) for h, d in self._durs.items()
+                 if h != host and d]
+        if not mine or not peers:
+            return 0.0
+        p50 = float(np.median(peers))
+        return float(np.median(mine)) / p50 if p50 > 0 else 0.0
+
+    def stragglers(self) -> dict[int, float]:
+        """Hosts flagged ``patience`` consecutive steps -> slowdown ratio."""
+        return {h: self._ratio(h) for h, n in self._streak.items()
+                if n >= self.patience}

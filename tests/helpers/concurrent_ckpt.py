@@ -1,0 +1,99 @@
+"""CheckpointManager retention under CONCURRENT multi-host writers.
+
+Two real OS processes commit shards for the same step (host 1
+deliberately lands late) while host 0's GC runs retention the whole
+time.  The invariants under test:
+
+- a half-complete step (host 0's shard + manifest down, host 1's shard
+  still in flight) is NEVER observed as complete (``latest_step`` keeps
+  reporting the previous step) and NEVER collected by GC (it is newer
+  than the newest complete step, so retention must leave it alone);
+- retention counts only verified-complete steps, so the in-flight step
+  cannot crowd a good checkpoint out of the keep window;
+- once the late shard lands, the step verifies and ordinary retention
+  applies.
+
+Usage:    python tests/helpers/concurrent_ckpt.py <dir>
+Internal: python tests/helpers/concurrent_ckpt.py --writer <dir> <host> <delay>
+Prints ``CONCURRENT CKPT: ALL OK`` on success.
+"""
+import os
+import subprocess
+import sys
+import time
+
+STEP = 4
+
+
+def _tree():
+    import numpy as np
+    return {"w": np.arange(12.0).reshape(3, 4), "b": np.ones((5,)),
+            "k": np.full((2, 2), 7.0)}
+
+
+def writer(directory: str, host: int, delay: float) -> None:
+    from repro.checkpoint.store import save_checkpoint
+    time.sleep(delay)
+    save_checkpoint(directory, STEP, _tree(), host_id=host, num_hosts=2)
+
+
+def main(directory: str) -> None:
+    from repro.checkpoint.store import (CheckpointManager, complete_steps,
+                                        latest_step, verify_step,
+                                        wait_step_complete)
+
+    t = _tree()
+    for s in (1, 2, 3):                  # history: complete 2-host steps
+        for h in (0, 1):
+            from repro.checkpoint.store import save_checkpoint
+            save_checkpoint(directory, s, t, host_id=h, num_hosts=2)
+    assert complete_steps(directory) == [1, 2, 3]
+
+    helper = os.path.abspath(__file__)
+    procs = [subprocess.Popen(
+        [sys.executable, helper, "--writer", directory, str(h), str(dl)],
+        env=os.environ) for h, dl in ((0, 0.0), (1, 3.0))]
+
+    mgr = CheckpointManager(directory, keep=2, host_id=0, num_hosts=2)
+    step_dir = os.path.join(directory, f"step_{STEP:09d}")
+    gc_runs = raced = 0
+    deadline = time.time() + 60.0
+    while True:                          # GC races the in-flight commit
+        mgr._gc()
+        gc_runs += 1
+        newest = latest_step(directory)
+        assert newest in (3, STEP), \
+            f"half-complete step surfaced as newest: {newest}"
+        if newest == 3 and os.path.isdir(step_dir):
+            # the race window: host 0's half of step 4 is on disk but
+            # the step is incomplete — GC must have left it alone
+            try:
+                verify_step(directory, STEP)
+                raise AssertionError("incomplete step verified")
+            except ValueError:
+                raced += 1
+        if newest == STEP:
+            break
+        assert time.time() < deadline, "step 4 never completed"
+        time.sleep(0.05)
+    for p in procs:
+        assert p.wait(timeout=60) == 0, f"writer failed: {p.args}"
+    assert raced > 0, "race window never observed (host 1 landed too fast)"
+
+    wait_step_complete(directory, STEP, timeout=5.0)
+    mgr._gc()                            # ordinary retention now applies
+    assert complete_steps(directory) == [3, STEP]
+    left = sorted(n for n in os.listdir(directory)
+                  if n.startswith("step_"))
+    assert left == ["step_000000003", f"step_{STEP:09d}"], left
+    print(f"[concurrent-ckpt] {gc_runs} GC sweeps raced the commit "
+          f"({raced} inside the incomplete window); step {STEP} survived "
+          "and retention converged")
+    print("CONCURRENT CKPT: ALL OK")
+
+
+if __name__ == "__main__":
+    if sys.argv[1] == "--writer":
+        writer(sys.argv[2], int(sys.argv[3]), float(sys.argv[4]))
+    else:
+        main(sys.argv[1])

@@ -19,7 +19,8 @@ from repro.checkpoint import (CheckpointError, CheckpointManager,
                               restore_checkpoint, save_checkpoint,
                               verify_step)
 from repro.optim import adamw_init
-from repro.runtime.resilience import (FaultPlan, GradGuard, all_finite,
+from repro.runtime.resilience import (FaultPlan, GradGuard,
+                                      GradGuardEscalation, all_finite,
                                       compiled_state_spec,
                                       corrupt_checkpoint, logical_to_state,
                                       plan_fingerprint,
@@ -321,6 +322,20 @@ def test_gradguard_budget_and_reset():
     g.observe(True, 1)                   # finite step resets the streak
     g.observe(False, 2)
     assert g.skipped_total == 2
+
+
+def test_gradguard_escalation_carries_context():
+    """The exhausted budget raises a STRUCTURED escalation (step, streak,
+    budget as fields) so a supervisor can decide rollback vs abort —
+    while staying a RuntimeError for legacy abort-only callers."""
+    g = GradGuard(budget=2)
+    g.observe(False, 10)
+    g.observe(False, 11)
+    with pytest.raises(GradGuardEscalation) as ei:
+        g.observe(False, 12)
+    e = ei.value
+    assert (e.step, e.consecutive, e.budget) == (12, 3, 2)
+    assert isinstance(e, RuntimeError)
 
 
 # ---------------------------------------------------------------------------
